@@ -1,0 +1,47 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Each module returns {"name", "ok", "rows"} and pretty-prints computed vs
+published values; the harness exits nonzero if any paper claim fails.
+The roofline table (§Roofline) is produced separately by
+`repro.launch.roofline` from the dry-run artifacts.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from benchmarks import (
+    table1_datapath,
+    table23_diebench,
+    table4_cost,
+    table57_projection,
+    resnet50_throughput,
+    ws_dataflow,
+)
+
+MODULES = [table1_datapath, table23_diebench, table4_cost,
+           table57_projection, resnet50_throughput, ws_dataflow]
+
+
+def main() -> int:
+    results = []
+    for mod in MODULES:
+        res = mod.run()
+        mod.pretty(res)
+        results.append(res)
+    print("== summary ==")
+    all_ok = True
+    for res in results:
+        print(f"  {res['name']:<24} {'PASS' if res['ok'] else 'FAIL'}")
+        all_ok &= res["ok"]
+    with open("bench_results.json", "w") as f:
+        json.dump(results, f, indent=1, default=str)
+    print(f"\n{'ALL PAPER CLAIMS REPRODUCED' if all_ok else 'FAILURES PRESENT'}"
+          " (details above; bench_results.json written)")
+    return 0 if all_ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

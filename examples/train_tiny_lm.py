@@ -1,0 +1,134 @@
+"""End-to-end LM pretraining driver (deliverable b).
+
+    PYTHONPATH=src python examples/train_tiny_lm.py \
+        --d-model 512 --layers 10 --vocab 16384 --steps 300
+
+Default config is a ~100M-parameter llama-style model; `--cpu-budget`
+shrinks it (~15M, 250 steps) so the full loop — sharded state, grad
+accumulation, async checkpointing, straggler monitor, resume — finishes
+on this 1-core container.  Loss curve lands in
+experiments/train_tiny_lm.json for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.data import DataConfig, make_source
+from repro.distribution.sharding import use_mesh
+from repro.launch.mesh import make_host_mesh
+from repro.train.optimizer import OptimizerConfig, make_optimizer
+from repro.train import train_step as TS
+from repro.train.checkpoint import CheckpointManager
+from repro.train.straggler import StragglerMonitor, StepTimer
+from repro.utils.tree import tree_num_params
+from repro.utils.logging import get_logger
+
+log = get_logger("train_tiny_lm")
+
+
+def build_cfg(args) -> ModelConfig:
+    return ModelConfig(
+        name="tiny-lm", family="dense",
+        num_layers=args.layers, d_model=args.d_model,
+        vocab_size=args.vocab, num_heads=args.d_model // 64,
+        num_kv_heads=max(1, args.d_model // 128), head_dim=64,
+        d_ff=args.d_model * 4, tie_embeddings=True,
+        attn_chunk=args.seq, max_seq=args.seq, remat="none")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--d-model", type=int, default=512)
+    ap.add_argument("--layers", type=int, default=10)
+    ap.add_argument("--vocab", type=int, default=16384)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--lr", type=float, default=6e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/tiny_lm_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--cpu-budget", action="store_true",
+                    help="shrink to ~15M params / 250 steps for 1-core CPU")
+    ap.add_argument("--data", default="markov",
+                    choices=["markov", "synthetic", "memmap"],
+                    help="markov = learnable chain (CE: ln V -> ln 4)")
+    ap.add_argument("--out", default="experiments/train_tiny_lm.json")
+    args = ap.parse_args(argv)
+    if args.cpu_budget:
+        args.d_model, args.layers, args.vocab = 384, 6, 4096
+        args.seq, args.steps = 128, 250
+
+    cfg = build_cfg(args)
+    cfg.validate()
+    mesh = make_host_mesh(1, 1)
+    opt = make_optimizer(OptimizerConfig(
+        name="adamw", peak_lr=args.lr, total_steps=args.steps,
+        warmup_steps=max(10, args.steps // 20)))
+    src = make_source(DataConfig(source=args.data, seq_len=args.seq,
+                                 global_batch=args.global_batch), cfg)
+    mgr = CheckpointManager(args.ckpt_dir, keep=2)
+    mon = StragglerMonitor(num_workers=1)
+
+    with use_mesh(mesh):
+        shardings = TS.state_shardings(cfg, opt, mesh)
+        if args.resume and mgr.latest_step() is not None:
+            state, manifest = mgr.restore(TS.state_shapes(cfg, opt),
+                                          shardings=jax.tree.leaves(shardings)
+                                          and shardings)
+            log.info("resumed from step %d", manifest["step"])
+        else:
+            state = jax.jit(lambda k: TS.init_train_state(k, cfg, opt),
+                            out_shardings=shardings)(jax.random.key(0))
+        n_params = tree_num_params(state.params)
+        log.info("params: %.1fM; %d steps x %d tokens", n_params / 1e6,
+                 args.steps, args.global_batch * args.seq)
+
+        step_fn = jax.jit(TS.make_train_step(cfg, opt,
+                                             grad_accum=args.grad_accum),
+                          donate_argnums=(0,))
+        curve, t0 = [], time.perf_counter()
+        start = int(state.step)
+        for i in range(start, args.steps):
+            batch = {k: jnp.asarray(v) for k, v in src.batch_at(i).items()}
+            with StepTimer(mon):
+                state, metrics = step_fn(state, batch)
+                loss = float(metrics["loss"])
+            curve.append(loss)
+            if (i + 1) % 25 == 0:
+                log.info("step %4d/%d loss %.4f (med %.2fs/step)", i + 1,
+                         args.steps, loss, mon.report().fleet_median_s)
+            if (i + 1) % args.ckpt_every == 0:
+                mgr.save(state, int(state.step),
+                         metadata={"mesh": dict(mesh.shape), "loss": loss})
+        mgr.save(state, int(state.step), metadata={"final_loss": curve[-1]})
+        mgr.wait()
+        dt = time.perf_counter() - t0
+        toks = (args.steps - start) * args.global_batch * args.seq
+        summary = {
+            "params_m": n_params / 1e6,
+            "steps": args.steps,
+            "tokens": toks,
+            "tok_per_s": toks / dt,
+            "wall_s": dt,
+            "loss_first": curve[0] if curve else None,
+            "loss_last": curve[-1] if curve else None,
+            "curve_every_5": curve[::5],
+        }
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(summary, f, indent=1)
+        log.info("done in %.0fs: loss %.3f -> %.3f (%.0f tok/s); wrote %s",
+                 dt, curve[0], curve[-1], toks / dt, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Regenerate the generated tables in EXPERIMENTS.md from
+experiments/dryrun/*.json.
+
+    PYTHONPATH=src python scripts/fill_experiments.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.roofline import load_rows, markdown_table, advice, fmt_s  # noqa: E402
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+DRYRUN = os.path.join(ROOT, "experiments", "dryrun")
+DRYRUN_OPT = os.path.join(ROOT, "experiments", "dryrun_opt")
+EXP = os.path.join(ROOT, "EXPERIMENTS.md")
+
+
+def dryrun_table(dirname=DRYRUN) -> str:
+    out = ["| arch | shape | mesh | args GB/dev | temp GB/dev | HLO flops/dev | collective B/dev | compile s |",
+           "|---|---|---|---|---|---|---|---|"]
+    for name in sorted(os.listdir(dirname)):
+        with open(os.path.join(dirname, name)) as f:
+            r = json.load(f)
+        if not r.get("ok"):
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"FAIL: {r.get('error', '')[:60]} | | | | |")
+            continue
+        ma = r["memory_analysis"]
+        h = r["hlo"]
+        coll = sum(h["collective_bytes_per_device"].values())
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{(ma.get('argument_size_in_bytes') or 0) / 1e9:.2f} | "
+            f"{(ma.get('temp_size_in_bytes') or 0) / 1e9:.2f} | "
+            f"{h['flops_per_device']:.2e} | {coll:.2e} | "
+            f"{r['timing_s']['compile']:.0f} |")
+    return "\n".join(out)
+
+
+def roofline_block(dirname=DRYRUN, notes=True) -> str:
+    rows = load_rows(dirname, "single")
+    lines = [markdown_table(rows)]
+    if notes:
+        lines += ["", "Per-cell bottleneck notes:", ""]
+        for r in rows:
+            if r.ok:
+                lines.append(f"- **{r.arch} × {r.shape}** ({r.dominant}-bound, "
+                             f"step≈{fmt_s(r.step_s)}): {advice(r)}")
+    return "\n".join(lines)
+
+
+def patch(text: str, marker: str, content: str) -> str:
+    tag = f"<!-- {marker} -->"
+    block = f"{tag}\n{content}\n<!-- /{marker} -->"
+    if f"<!-- /{marker} -->" in text:
+        return re.sub(
+            rf"<!-- {marker} -->.*?<!-- /{marker} -->", lambda m: block,
+            text, flags=re.S)
+    return text.replace(tag, block)
+
+
+def main():
+    with open(EXP) as f:
+        text = f.read()
+    text = patch(text, "DRYRUN_TABLE", dryrun_table())
+    text = patch(text, "ROOFLINE_TABLE", roofline_block())
+    if os.path.isdir(DRYRUN_OPT) and os.listdir(DRYRUN_OPT):
+        text = patch(text, "OPT_ROOFLINE_TABLE",
+                     roofline_block(DRYRUN_OPT, notes=False))
+    with open(EXP, "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md tables regenerated")
+
+
+if __name__ == "__main__":
+    main()

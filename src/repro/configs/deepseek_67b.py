@@ -1,0 +1,39 @@
+"""deepseek-67b — dense llama-arch GQA [arXiv:2401.02954; hf].
+
+95L, d_model=8192, 64 heads (GQA kv=8, head_dim=128), d_ff=22016,
+vocab=102400, SwiGLU.  ~67B params: the FSDP+TP weight-stationary
+flagship of the dense family.
+"""
+from repro.configs.base import ArchSpec
+from repro.models.config import ModelConfig
+
+ARCH = ArchSpec(
+    model=ModelConfig(
+        name="deepseek-67b",
+        family="dense",
+        num_layers=95,
+        d_model=8192,
+        vocab_size=102_400,
+        num_heads=64,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=22_016,
+        activation="silu_glu",
+        rope_theta=10_000.0,
+        dtype="bfloat16",
+        param_dtype="bfloat16",
+        remat="full",
+        logits_chunk=512,
+        attention_impl="flash_xla",
+        attn_chunk=1024,
+        max_seq=32_768,
+    ),
+    optimizer="adafactor",
+    train_grad_accum=2,     # ga tax (§Perf N5) applies here too: ga=8 cost
+                            # 252s collective vs 70.5s at ga=2 (temp 29.5GB)
+    rules="seq_parallel",   # §Perf D1: 2.7x collective, 24% memory cut on
+                            # prefill_32k (norm/residual regions sharded
+                            # along seq over "model")
+    source="arXiv:2401.02954; hf deepseek-ai/deepseek-llm-67b-base",
+    notes="long_500k skipped: full attention (DESIGN.md §4).",
+)

@@ -1,0 +1,37 @@
+"""internlm2-1.8b — dense GQA [arXiv:2403.17297; hf].
+
+24L, d_model=2048, 16 heads (GQA kv=8, head_dim=128), d_ff=8192,
+vocab=92544, SwiGLU.  The small dense config — also the reduced-scale
+stand-in used by the end-to-end training example.
+"""
+from repro.configs.base import ArchSpec
+from repro.models.config import ModelConfig
+
+ARCH = ArchSpec(
+    model=ModelConfig(
+        name="internlm2-1.8b",
+        family="dense",
+        num_layers=24,
+        d_model=2048,
+        vocab_size=92_544,
+        num_heads=16,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=8192,
+        activation="silu_glu",
+        rope_theta=1_000_000.0,
+        dtype="bfloat16",
+        param_dtype="bfloat16",
+        remat="dots",
+        logits_chunk=512,
+        attention_impl="flash_xla",
+        attn_chunk=1024,
+        max_seq=32_768,
+    ),
+    optimizer="adamw",
+    train_grad_accum=4,   # 16 rows/device unaccumulated -> 41.8GB temp
+                          # (remat=dots saves MLP dots); 4 rows -> ~10GB
+
+    source="arXiv:2403.17297; hf internlm/internlm2-1_8b",
+    notes="long_500k skipped: full attention (DESIGN.md §4).",
+)

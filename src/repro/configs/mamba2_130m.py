@@ -1,0 +1,35 @@
+"""mamba2-130m — SSM, attention-free (SSD) [arXiv:2405.21060].
+
+24L, d_model=768, vocab=50280, ssm_state=128, expand=2 (inner 1536,
+head_dim 64 -> 24 ssm heads).  Runs long_500k: the SSD state is O(1) in
+sequence length — the paper's 'localized intermediate' par excellence.
+"""
+from repro.configs.base import ArchSpec
+from repro.models.config import ModelConfig
+
+ARCH = ArchSpec(
+    model=ModelConfig(
+        name="mamba2-130m",
+        family="ssm",
+        num_layers=24,
+        d_model=768,
+        vocab_size=50_280,
+        ssm_state=128,
+        ssm_head_dim=64,
+        ssm_expand=2,
+        ssm_groups=1,
+        ssm_chunk=256,
+        conv_width=4,
+        dtype="bfloat16",
+        param_dtype="bfloat16",
+        remat="full",
+        logits_chunk=512,
+        tie_embeddings=True,
+        max_seq=524_288,
+    ),
+    optimizer="adamw",
+    train_grad_accum=2,  # memory-fit pass: 70.5 -> 12.4 GB/dev temp
+    source="arXiv:2405.21060 (unverified tier); state-spaces/mamba2-130m",
+    notes="attention-free: attention-sharding aspects of the technique N/A; "
+          "WS applies to in/out projections (DESIGN.md §4).",
+)

@@ -1,0 +1,9 @@
+# The paper's primary contribution, implemented as a system:
+#   datapath.py   — HITOC/TSV/Interposer physical-link model (Table I)
+#   hwmodel.py    — chip specs + die-normalized benchmarks (Tables II/III/IV)
+#   projection.py — process-node normalization (Tables V/VI/VII)
+#   simulator.py  — weight-stationary near-memory scheduler (ResNet-50 claim)
+#   unimem.py     — single-form pooled memory (page pool w/ prefix sharing)
+#   dataflow.py   — weight-stationary sharding invariant + HLO audit
+from repro.core.hwmodel import SUNRISE, CHIP_A, CHIP_B, CHIP_C, TPU_V5E
+from repro.core.unimem import UniMemPool, SequencePageTable, UniMemOOM

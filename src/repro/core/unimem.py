@@ -1,0 +1,127 @@
+"""UniMem — the paper's single-form pooled memory, as a page-pool arena.
+
+The paper deletes the cache hierarchy and pools many small DRAM arrays
+into one memory system that every unit allocates from.  The serving-side
+analogue is a SINGLE page pool backing every sequence's KV cache (and any
+other transient buffer): no per-request private buffers, no implicit
+duplication — pages are explicitly allocated, shared (copy-on-write
+prefix sharing), and freed back to the one pool.
+
+This module is the host-side control plane (page tables, free lists,
+refcounts); the device-side arena itself is a jnp array owned by
+`serve/kv_cache.py`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+class UniMemOOM(RuntimeError):
+    pass
+
+
+@dataclass
+class PoolStats:
+    num_pages: int
+    free_pages: int
+    allocated_pages: int
+    shared_pages: int
+    utilization: float
+
+
+@dataclass
+class UniMemPool:
+    """Fixed-size page pool with refcounted pages (prefix sharing)."""
+    num_pages: int
+    page_size: int                      # tokens (or generic slots) per page
+    _free: list[int] = field(default_factory=list)
+    _refcount: dict[int, int] = field(default_factory=dict)
+
+    def __post_init__(self):
+        self._free = list(range(self.num_pages - 1, -1, -1))
+        self._refcount = {}
+
+    # ------------------------------------------------------------- alloc
+
+    def alloc(self, n: int = 1) -> list[int]:
+        if len(self._free) < n:
+            raise UniMemOOM(
+                f"UniMem pool exhausted: want {n} pages, {len(self._free)} free "
+                f"of {self.num_pages}"
+            )
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self._refcount[p] = 1
+        return pages
+
+    def share(self, pages: list[int]) -> list[int]:
+        """Bump refcounts — a second sequence now references these pages
+        (shared prefix).  Returns the same page ids."""
+        for p in pages:
+            if p not in self._refcount:
+                raise KeyError(f"page {p} is not allocated")
+            self._refcount[p] += 1
+        return list(pages)
+
+    def free(self, pages: list[int]) -> None:
+        for p in pages:
+            rc = self._refcount.get(p)
+            if rc is None:
+                raise KeyError(f"double free of page {p}")
+            if rc == 1:
+                del self._refcount[p]
+                self._free.append(p)
+            else:
+                self._refcount[p] = rc - 1
+
+    def is_shared(self, page: int) -> bool:
+        return self._refcount.get(page, 0) > 1
+
+    # ------------------------------------------------------------- stats
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def pages_for(self, num_tokens: int) -> int:
+        return -(-num_tokens // self.page_size)
+
+    def can_admit(self, num_tokens: int) -> bool:
+        return self.pages_for(num_tokens) <= self.free_pages
+
+    def stats(self) -> PoolStats:
+        alloc = self.num_pages - len(self._free)
+        shared = sum(1 for rc in self._refcount.values() if rc > 1)
+        return PoolStats(
+            num_pages=self.num_pages,
+            free_pages=len(self._free),
+            allocated_pages=alloc,
+            shared_pages=shared,
+            utilization=alloc / self.num_pages if self.num_pages else 0.0,
+        )
+
+
+@dataclass
+class SequencePageTable:
+    """Per-sequence logical->physical page map, length in tokens."""
+    pool: UniMemPool
+    pages: list[int] = field(default_factory=list)
+    num_tokens: int = 0
+
+    def append_tokens(self, n: int) -> list[int]:
+        """Extend by n tokens, allocating pages as needed (copy-on-write is
+        the caller's job for shared last pages)."""
+        need = self.pool.pages_for(self.num_tokens + n) - len(self.pages)
+        new = self.pool.alloc(need) if need > 0 else []
+        self.pages.extend(new)
+        self.num_tokens += n
+        return new
+
+    def fork(self) -> "SequencePageTable":
+        """Share the full prefix with a new sequence (no copy)."""
+        self.pool.share(self.pages)
+        return SequencePageTable(self.pool, list(self.pages), self.num_tokens)
+
+    def release(self) -> None:
+        self.pool.free(self.pages)
+        self.pages, self.num_tokens = [], 0

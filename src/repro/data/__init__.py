@@ -1,0 +1,8 @@
+from repro.data.pipeline import (
+    DataConfig,
+    SyntheticLM,
+    MemmapTokens,
+    make_source,
+    host_slice,
+    synthetic_batch,
+)

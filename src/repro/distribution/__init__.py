@@ -1,0 +1,12 @@
+from repro.distribution.sharding import (
+    AxisRules,
+    DEFAULT_RULES,
+    use_mesh,
+    use_rules,
+    current_mesh,
+    current_rules,
+    logical_to_spec,
+    with_logical_constraint,
+    named_sharding,
+    param_shardings,
+)

@@ -1,0 +1,196 @@
+"""Logical-axis sharding rules — the weight-stationary policy engine.
+
+Every parameter and activation in the framework is annotated with LOGICAL
+axis names ("embed", "mlp", "heads", "act_batch", ...).  A rule table maps
+logical names to mesh axes; `logical_to_spec` resolves a full logical
+shape against the active mesh with automatic *divisibility fallback*
+(a dimension that does not divide over its mesh axes is replicated), so
+every assigned architecture shards cleanly on any mesh.
+
+The default table encodes the paper's dataflow (DESIGN.md section 2):
+  * weights live sharded over ("data", "model") and stay put — the VPU
+    pool's resident weights (FSDP all-gather is the one allowed move);
+  * activations move: batch over the DSU axes ("pod", "data"), heads/mlp
+    slices over "model" — the broadcast/return traffic;
+  * intermediates (attention scores, expert buffers) stay device-local.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# logical axis -> preferred mesh axes (None = replicate).
+DEFAULT_RULES: dict[str, tuple[str, ...] | None] = {
+    # -------- parameters (stationary)
+    "embed": ("data",),          # FSDP shard of the d_model dim
+    "mlp": ("model",),           # tensor-parallel ffn slice
+    "heads": ("model",),         # tensor-parallel attention heads
+    "kv_heads": ("model",),      # falls back to replicate when < axis size
+    "vocab": ("model",),         # vocab-parallel embedding / logits
+    "expert": ("model",),        # expert-parallel MoE
+    "expert_in": ("data",),      # FSDP dim inside each expert
+    "ssm_heads": ("model",),     # SSD head parallelism
+    "ssm_inner": ("model",),
+    "norm": None,                # norm scales replicated
+    "scalar": None,
+    "stage": None,               # pipeline stage dim of stacked layers
+    # -------- activations (moving)
+    "act_batch": ("pod", "data"),
+    "act_seq": None,             # switched to ("model",) under seq-parallel
+    "act_kv_seq": ("data", "model"),  # decode KV cache: near-memory resident
+    "act_cap": ("data",),        # MoE per-expert capacity rows
+    "act_embed": None,
+    "act_heads": ("model",),
+    "act_kv_heads": ("model",),
+    "act_mlp": ("model",),
+    "act_vocab": ("model",),
+    "act_expert": ("model",),
+    "act_ssm_heads": ("model",),
+    "act_state": None,
+    "act_patch": None,
+}
+
+# Sequence-parallel variant (hillclimb lever): norm/residual regions are
+# sharded along seq over the model axis; XLA turns the surrounding
+# all-reduces into reduce-scatter + all-gather pairs.
+SEQUENCE_PARALLEL_RULES = dict(DEFAULT_RULES, **{"act_seq": ("model",)})
+
+
+@dataclass(frozen=True)
+class AxisRules:
+    table: dict[str, tuple[str, ...] | None] = field(default_factory=lambda: dict(DEFAULT_RULES))
+
+    def lookup(self, name: str | None) -> tuple[str, ...] | None:
+        if name is None:
+            return None
+        if name not in self.table:
+            raise KeyError(f"unknown logical axis {name!r}; add it to the rule table")
+        return self.table[name]
+
+
+_MESH: contextvars.ContextVar[Mesh | None] = contextvars.ContextVar("repro_mesh", default=None)
+_RULES: contextvars.ContextVar[AxisRules] = contextvars.ContextVar("repro_rules", default=AxisRules())
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    token = _MESH.set(mesh)
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _MESH.reset(token)
+
+
+@contextlib.contextmanager
+def use_rules(rules: AxisRules | dict):
+    if isinstance(rules, dict):
+        rules = AxisRules(dict(rules))
+    token = _RULES.set(rules)
+    try:
+        yield rules
+    finally:
+        _RULES.reset(token)
+
+
+def current_mesh() -> Mesh | None:
+    return _MESH.get()
+
+
+def current_rules() -> AxisRules:
+    return _RULES.get()
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+def logical_to_spec(
+    axes: tuple[str | None, ...],
+    shape: tuple[int, ...] | None = None,
+    mesh: Mesh | None = None,
+    rules: AxisRules | None = None,
+) -> P:
+    """Resolve logical axis names to a PartitionSpec on `mesh`.
+
+    Fallback ladder per dimension: use the rule's mesh axes, dropping
+    trailing axes until the dimension size divides the product of the
+    remaining axis sizes; axes not present on the mesh are skipped; a mesh
+    axis may be used by at most one dimension (first wins).
+    """
+    mesh = mesh or current_mesh()
+    rules = rules or current_rules()
+    if mesh is None:
+        return P(*([None] * len(axes)))
+    used: set[str] = set()
+    entries = []
+    for i, name in enumerate(axes):
+        want = rules.lookup(name)
+        if not want:
+            entries.append(None)
+            continue
+        cand = [a for a in want if a in mesh.axis_names and a not in used]
+        dim = None if shape is None else shape[i]
+        while cand:
+            prod = math.prod(_axis_size(mesh, a) for a in cand)
+            if dim is None or (dim % prod == 0 and dim >= prod):
+                break
+            cand = cand[:-1]
+        if cand:
+            used.update(cand)
+            entries.append(tuple(cand) if len(cand) > 1 else cand[0])
+        else:
+            entries.append(None)
+    return P(*entries)
+
+
+def named_sharding(
+    axes: tuple[str | None, ...],
+    shape: tuple[int, ...] | None = None,
+    mesh: Mesh | None = None,
+    rules: AxisRules | None = None,
+) -> NamedSharding:
+    mesh = mesh or current_mesh()
+    assert mesh is not None, "named_sharding requires an active mesh (use_mesh)"
+    return NamedSharding(mesh, logical_to_spec(axes, shape, mesh, rules))
+
+
+def with_logical_constraint(x, *axes: str | None):
+    """Annotate an activation with logical axes (no-op without a mesh)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = logical_to_spec(tuple(axes), tuple(x.shape), mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def param_shardings(axes_tree, params_tree, mesh: Mesh | None = None,
+                    rules: AxisRules | None = None):
+    """Map a pytree of logical-axes tuples + a matching pytree of arrays /
+    ShapeDtypeStructs to a pytree of NamedShardings."""
+    mesh = mesh or current_mesh()
+    assert mesh is not None
+
+    def one(axes, leaf):
+        return named_sharding(tuple(axes), tuple(leaf.shape), mesh, rules)
+
+    return jax.tree.map(one, axes_tree, params_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def spec_tree(axes_tree, params_tree, mesh=None, rules=None):
+    """Like param_shardings but returns PartitionSpecs (for shard_map)."""
+    mesh = mesh or current_mesh()
+
+    def one(axes, leaf):
+        return logical_to_spec(tuple(axes), tuple(leaf.shape), mesh, rules)
+
+    return jax.tree.map(one, axes_tree, params_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))

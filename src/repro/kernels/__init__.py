@@ -1,0 +1,9 @@
+# Pallas TPU kernels for the compute hot spots the paper optimizes.
+# Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+# wrapper with XLA fallback), ref.py (pure-jnp oracle for tests).
+#
+#   ws_matmul/        weight-stationary blocked matmul (the paper's dataflow)
+#   flash_attention/  online-softmax attention (prefill hot spot)
+#   decode_attention/ split-KV flash-decoding (resident KV, broadcast query)
+#   ssd_scan/         Mamba-2 SSD intra-chunk dual form
+#   grouped_matmul/   per-expert MoE matmul (vector-unit sparsity)

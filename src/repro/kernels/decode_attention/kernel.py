@@ -1,0 +1,102 @@
+"""Split-KV decode attention (flash-decoding) as a Pallas TPU kernel.
+
+The paper's decode regime made explicit: the KV cache is RESIDENT in
+per-split HBM slices (the localized DRAM arrays), the single query is
+BROADCAST to every split, each split computes a partial online-softmax
+over its slice entirely in VMEM, and only the tiny per-split summaries
+(m, l, acc) travel back to be combined — "results are sent back to the
+central memory pool".
+
+Grid (batch * kv_heads, kv_splits): each cell reduces seq/kv_splits KV
+rows for all `group` query heads that share the KV head (GQA — the
+resident KV tile serves its whole query group).  The combine over splits
+is a cheap log-sum-exp merge done by the wrapper (ops.py).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _dec_kernel(q_ref, k_ref, v_ref, pos_ref,
+                m_ref, l_ref, acc_ref, *, block_kv: int, splits: int):
+    si = pl.program_id(1)
+    q = q_ref[0]                                   # (group, d)
+    k = k_ref[0]                                   # (block_kv, d)
+    v = v_ref[0]
+    pos = pos_ref[0]                               # scalar: last valid index
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)   # (group, bkv)
+    s = s / math.sqrt(q.shape[-1])
+    kv_pos = si * block_kv + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 1)
+    s = jnp.where(kv_pos <= pos, s, NEG_INF)
+
+    m = s.max(axis=-1)                             # (group,)
+    p = jnp.exp(s - m[:, None])
+    l = p.sum(axis=-1)
+    acc = jnp.dot(p.astype(v.dtype), v,
+                  preferred_element_type=jnp.float32)         # (group, d)
+    m_ref[0, 0] = m
+    l_ref[0, 0] = l
+    acc_ref[0, 0] = acc
+
+
+def decode_attention_pallas(q, k_cache, v_cache, positions, *,
+                            kv_splits: int = 8, interpret: bool = False):
+    """q: (b, hq, d); k_cache/v_cache: (b, S, hkv, d); positions: (b,)
+    index of the newest valid token (inclusive).  Returns (b, hq, d)
+    partials reduced over splits by the caller via `combine_splits`
+    (kept separate so the wrapper can also fuse multi-layer combines).
+    """
+    b, hq, d = q.shape
+    S, hkv = k_cache.shape[1], k_cache.shape[2]
+    group = hq // hkv
+    assert S % kv_splits == 0, f"S {S} % kv_splits {kv_splits}"
+    block_kv = S // kv_splits
+
+    # (b, hq, d) -> (b*hkv, group, d); caches -> (b*hkv, S, d)
+    qg = q.reshape(b, hkv, group, d).reshape(b * hkv, group, d)
+    kf = jnp.moveaxis(k_cache, 2, 1).reshape(b * hkv, S, d)
+    vf = jnp.moveaxis(v_cache, 2, 1).reshape(b * hkv, S, d)
+    posf = jnp.repeat(positions, hkv).astype(jnp.int32)        # (b*hkv,)
+
+    m, l, acc = pl.pallas_call(
+        functools.partial(_dec_kernel, block_kv=block_kv, splits=kv_splits),
+        grid=(b * hkv, kv_splits),
+        in_specs=[
+            pl.BlockSpec((1, group, d), lambda bh, si: (bh, 0, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda bh, si: (bh, si, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda bh, si: (bh, si, 0)),
+            pl.BlockSpec((1,), lambda bh, si: (bh,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, group), lambda bh, si: (bh, si, 0)),
+            pl.BlockSpec((1, 1, group), lambda bh, si: (bh, si, 0)),
+            pl.BlockSpec((1, 1, group, d), lambda bh, si: (bh, si, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * hkv, kv_splits, group), jnp.float32),
+            jax.ShapeDtypeStruct((b * hkv, kv_splits, group), jnp.float32),
+            jax.ShapeDtypeStruct((b * hkv, kv_splits, group, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kf, vf, posf)
+    return m, l, acc
+
+
+def combine_splits(m, l, acc, b: int, hq: int, d: int, out_dtype):
+    """Merge per-split partial softmax stats: the log-sum-exp reduction.
+    m, l: (b*hkv, splits, group); acc: (b*hkv, splits, group, d)."""
+    m_max = m.max(axis=1, keepdims=True)                       # (bh,1,g)
+    corr = jnp.exp(m - m_max)                                  # (bh,s,g)
+    l_tot = (l * corr).sum(axis=1)                             # (bh,g)
+    acc_tot = (acc * corr[..., None]).sum(axis=1)              # (bh,g,d)
+    o = acc_tot / jnp.maximum(l_tot, 1e-30)[..., None]
+    return o.reshape(b, hq, d).astype(out_dtype)

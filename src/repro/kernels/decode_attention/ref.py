@@ -1,0 +1,22 @@
+"""Pure-jnp oracle: masked single-token GQA attention over a KV cache."""
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k_cache, v_cache, positions):
+    """q: (b, hq, d); caches (b, S, hkv, d); positions (b,) inclusive."""
+    b, hq, d = q.shape
+    S, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache).astype(jnp.float32)
+    s = s / math.sqrt(d)
+    mask = jnp.arange(S)[None, :] <= positions[:, None]
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, v_cache)
+    return o.reshape(b, hq, d)

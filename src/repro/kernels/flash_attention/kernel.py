@@ -1,0 +1,106 @@
+"""Flash attention (causal, GQA) as a Pallas TPU kernel.
+
+Grid (batch*q_heads, q_blocks, kv_blocks); the online-softmax running
+max / normalizer / accumulator live in VMEM scratch and persist across
+the innermost kv sweep.  GQA is handled in the K/V index maps (query head
+h reads kv head h // group) — no KV repeat is materialized, matching the
+near-memory principle: the resident KV tile serves all query heads of its
+group as they are broadcast past it.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEF_BQ, DEF_BKV = 128, 128
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+               *, scale: float, causal: bool, kv_steps: int,
+               block_q: int, block_kv: int, seq_kv: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                                      # (bq, d)
+    k = k_ref[0]                                      # (bkv, d)
+    v = v_ref[0]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    kv_pos = kj * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = kv_pos < seq_kv
+    if causal:
+        valid = valid & (q_pos >= kv_pos)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]                               # (bq, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1, keepdims=True)
+    m_scr[...] = m_new
+    acc_scr[...] = (acc_scr[...] * corr
+                    + jnp.dot(p.astype(v.dtype), v,
+                              preferred_element_type=jnp.float32))
+
+    @pl.when(kj == kv_steps - 1)
+    def _done():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal=True, block_q=DEF_BQ,
+                           block_kv=DEF_BKV, interpret=False):
+    """q: (b, sq, hq, d); k, v: (b, skv, hkv, d) -> (b, sq, hq, d)."""
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    bq = min(block_q, sq)
+    bkv = min(block_kv, skv)
+    assert sq % bq == 0
+    pad_kv = (-skv) % bkv
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    kv_steps = (skv + pad_kv) // bkv
+
+    # (b, s, h, d) -> (b*h, s, d) flat head-major layout
+    qf = jnp.moveaxis(q, 2, 1).reshape(b * hq, sq, d)
+    kf = jnp.moveaxis(k, 2, 1).reshape(b * hkv, skv + pad_kv, d)
+    vf = jnp.moveaxis(v, 2, 1).reshape(b * hkv, skv + pad_kv, d)
+
+    def kv_index(bh, qi, kj):
+        return (bh // hq) * hkv + (bh % hq) // group, kj, 0
+
+    out = pl.pallas_call(
+        functools.partial(
+            _fa_kernel, scale=1.0 / math.sqrt(d), causal=causal,
+            kv_steps=kv_steps, block_q=bq, block_kv=bkv, seq_kv=skv,
+        ),
+        grid=(b * hq, sq // bq, kv_steps),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, qi, kj: (bh, qi, 0)),
+            pl.BlockSpec((1, bkv, d), kv_index),
+            pl.BlockSpec((1, bkv, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, qi, kj: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return jnp.moveaxis(out.reshape(b, hq, sq, d), 1, 2)

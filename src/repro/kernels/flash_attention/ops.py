@@ -1,0 +1,20 @@
+"""Jit'd wrapper for the flash-attention kernel (XLA fallback off-TPU)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.flash_attention import kernel as K
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_kv", "interpret"))
+def flash_attention(q, k, v, causal=True, block_q=K.DEF_BQ, block_kv=K.DEF_BKV,
+                    interpret=None):
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return K.flash_attention_pallas(q, k, v, causal=causal, block_q=block_q,
+                                    block_kv=block_kv, interpret=interpret)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle: exact softmax attention with GQA + causal mask."""
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True):
+    """q: (b, sq, hq, d); k, v: (b, skv, hkv, d)."""
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    if hkv != hq:
+        k = jnp.repeat(k, hq // hkv, axis=2)
+        v = jnp.repeat(v, hq // hkv, axis=2)
+    s = jnp.einsum("bqhd,bshd->bhqs", q, k).astype(jnp.float32) / math.sqrt(d)
+    if causal:
+        qpos = jnp.arange(sq)[:, None]
+        kpos = jnp.arange(k.shape[1])[None, :]
+        s = jnp.where(qpos >= kpos, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqs,bshd->bqhd", p.astype(v.dtype), v)

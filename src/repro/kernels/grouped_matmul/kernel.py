@@ -1,0 +1,56 @@
+"""Grouped (per-expert) matmul — MoE expert stacks as a Pallas TPU kernel.
+
+buf: (E, C, d) @ w: (E, d, f) -> (E, C, f).  Grid (E, C/bc, f/bf, d/bk)
+with the EXPERT dimension outermost: each expert's weight tiles are
+fetched once and every capacity-row tile is streamed past them before the
+grid moves to the next expert — weight-stationary at expert granularity,
+the paper's "vector unit" sparsity (section V) on the MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEF_BC, DEF_BF, DEF_BK = 128, 128, 128
+
+
+def _gm_kernel(x_ref, w_ref, o_ref, acc_ref, *, k_steps: int):
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[0], w_ref[0],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(ki == k_steps - 1)
+    def _done():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def grouped_matmul_pallas(x, w, *, block_c=DEF_BC, block_f=DEF_BF,
+                          block_k=DEF_BK, interpret=False):
+    """x: (E, C, K) @ w: (E, K, F) -> (E, C, F) with fp32 accumulation."""
+    e, c, k = x.shape
+    e2, k2, f = w.shape
+    assert e == e2 and k == k2
+    bc, bf, bk = min(block_c, c), min(block_f, f), min(block_k, k)
+    assert c % bc == 0 and f % bf == 0 and k % bk == 0
+    grid = (e, c // bc, f // bf, k // bk)
+    return pl.pallas_call(
+        functools.partial(_gm_kernel, k_steps=k // bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc, bk), lambda ei, ci, fi, ki: (ei, ci, ki)),
+            pl.BlockSpec((1, bk, bf), lambda ei, ci, fi, ki: (ei, ki, fi)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bf), lambda ei, ci, fi, ki: (ei, ci, fi)),
+        out_shape=jax.ShapeDtypeStruct((e, c, f), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

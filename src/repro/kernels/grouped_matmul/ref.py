@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the grouped (per-expert) matmul kernel."""
+import jax.numpy as jnp
+
+
+def grouped_matmul_ref(x, w):
+    """x: (E, C, K) @ w: (E, K, F) -> (E, C, F)."""
+    return jnp.einsum("eck,ekf->ecf", x, w,
+                      preferred_element_type=jnp.float32)

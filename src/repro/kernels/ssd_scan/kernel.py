@@ -1,0 +1,88 @@
+"""Mamba-2 SSD intra-chunk dual form as a Pallas TPU kernel.
+
+Per (batch*head, chunk) grid cell the kernel computes, entirely in VMEM:
+
+    y_intra[i] = sum_{j<=i} (C_i . B_j) exp(seg_i - seg_j) dt_j x_j
+    S_chunk    = sum_j exp(seg_last - seg_j) dt_j B_j (x)_j^T
+    cdecay     = exp(seg_last)
+
+i.e. the chunk-local "attention" plus the chunk summary used by the cheap
+host-level inter-chunk recurrence (models/mamba2.ssd_chunked does that
+part with a `lax.scan` over nc chunks — it is O(nc) and tiny).
+
+This is the layer the paper's near-memory design loves: the (l x l)
+decay-masked score matrix and the (n x p) state summary never leave VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
+                y_ref, s_ref, cd_ref, *, l: int):
+    x = x_ref[0, 0]                                 # (l, p)
+    dt = dt_ref[0, 0].astype(jnp.float32)           # (l, 1)
+    A = a_ref[0, 0].astype(jnp.float32)              # scalar (negative)
+    B = b_ref[0, 0]                                  # (l, n)
+    C = c_ref[0, 0]                                  # (l, n)
+
+    dA = dt * A                                      # (l, 1)
+    seg = jnp.cumsum(dA, axis=0)                     # (l, 1)
+
+    dlog = seg - seg.T                               # (l, l): seg_i - seg_j
+    ii = jax.lax.broadcasted_iota(jnp.int32, (l, l), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (l, l), 1)
+    dlog = jnp.where(ii >= jj, dlog, NEG_INF)
+    decay = jnp.exp(dlog)
+
+    cb = jnp.dot(C, B.T, preferred_element_type=jnp.float32)     # (l, l)
+    scores = cb * decay * dt.T                                    # * dt_j
+    y_ref[0, 0] = jnp.dot(scores.astype(x.dtype), x,
+                          preferred_element_type=jnp.float32).astype(y_ref.dtype)
+
+    w = jnp.exp(seg[l - 1:l] - seg) * dt                          # (l, 1)
+    s_ref[0, 0] = jnp.dot(B.T, (w.astype(x.dtype) * x),
+                          preferred_element_type=jnp.float32).astype(s_ref.dtype)
+    cd_ref[0, 0] = jnp.exp(seg[l - 1, 0]).astype(cd_ref.dtype)
+
+
+def ssd_intra_chunk_pallas(x, dt, A, B, C, *, interpret=False):
+    """x: (bh, nc, l, p); dt: (bh, nc, l); A: (bh,); B, C: (bh, nc, l, n).
+
+    Returns (y_intra (bh, nc, l, p), s_chunk (bh, nc, n, p),
+             chunk_decay (bh, nc))."""
+    bh, nc, l, p = x.shape
+    n = B.shape[-1]
+    dt2 = dt[..., None]                             # (bh, nc, l, 1)
+    A2 = A[:, None]                                 # (bh, 1)
+
+    grid = (bh, nc)
+    y, s, cd = pl.pallas_call(
+        functools.partial(_ssd_kernel, l=l),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, l, p), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, l, 1), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, c: (b, 0)),
+            pl.BlockSpec((1, 1, l, n), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, l, n), lambda b, c: (b, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, l, p), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, n, p), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, c: (b, c)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, nc, l, p), jnp.float32),
+            jax.ShapeDtypeStruct((bh, nc, n, p), jnp.float32),
+            jax.ShapeDtypeStruct((bh, nc), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt2, A2, B, C)
+    return y, s, cd

@@ -1,0 +1,18 @@
+"""Jit'd wrapper for the SSD intra-chunk kernel (XLA fallback off-TPU)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.ssd_scan import kernel as K
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra_chunk(x, dt, A, B, C, interpret=None):
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return K.ssd_intra_chunk_pallas(x, dt, A, B, C, interpret=interpret)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel."""
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ssd_intra_chunk_ref(x, dt, A, B, C):
+    """x: (bh, nc, l, p); dt: (bh, nc, l); A: (bh,); B, C: (bh, nc, l, n)."""
+    dtf = dt.astype(jnp.float32)
+    dA = dtf * A[:, None, None]
+    seg = jnp.cumsum(dA, axis=2)                                    # (bh,nc,l)
+    dlog = seg[..., :, None] - seg[..., None, :]                    # (bh,nc,l,l)
+    l = x.shape[2]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    dlog = jnp.where(mask, dlog, NEG_INF)
+    cb = jnp.einsum("bcln,bcmn->bclm", C, B).astype(jnp.float32)
+    scores = cb * jnp.exp(dlog) * dtf[..., None, :]
+    y = jnp.einsum("bclm,bcmp->bclp", scores.astype(x.dtype), x).astype(jnp.float32)
+    w = jnp.exp(seg[..., -1:] - seg) * dtf                          # (bh,nc,l)
+    s = jnp.einsum("bcln,bcl,bclp->bcnp", B, w.astype(x.dtype), x).astype(jnp.float32)
+    cd = jnp.exp(seg[..., -1])
+    return y, s, cd

@@ -1,0 +1,1 @@
+from repro.kernels.ws_matmul.ops import ws_matmul, os_matmul

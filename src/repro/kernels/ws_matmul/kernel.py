@@ -1,0 +1,127 @@
+"""Weight-stationary blocked matmul — the Sunrise dataflow as a TPU kernel.
+
+The paper's VPUs keep a weight tile RESIDENT while the feature stream is
+broadcast past it.  On TPU the analogue is grid ordering: with grid
+(N, K, M) the (bk x bn) weight tile's block index is constant while the
+innermost M dimension sweeps every activation tile past it — the weight
+tile is fetched from HBM ONCE per (n, k) and reused M/bm times, paying
+instead with output-tile revisits (the paper's "results are sent back to
+the central memory pool").
+
+HBM traffic per full matmul (bytes, elems):
+    weight-stationary: W once + X * (N/bn) + O * (K/bk) * 2
+    output-stationary: X * (N/bn) + W * (M/bm) + O once
+so WS wins exactly when weights dominate — the paper's regime (large
+models, small/medium batch).  `benchmarks/ws_dataflow.py` sweeps this.
+
+The output-stationary twin (grid (M, N, K), VMEM accumulator) is provided
+for the ablation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEF_BM, DEF_BN, DEF_BK = 128, 128, 128
+
+
+def _ws_kernel(x_ref, w_ref, o_ref, *, k_steps: int):
+    """Grid (N/bn, K/bk, M/bm): weight tile constant along the inner M sweep."""
+    ki = pl.program_id(1)
+
+    partial_ = jnp.dot(x_ref[...], w_ref[...],
+                       preferred_element_type=jnp.float32)
+
+    @pl.when(ki == 0)
+    def _init():
+        o_ref[...] = partial_.astype(o_ref.dtype)
+
+    @pl.when(ki > 0)
+    def _acc():
+        o_ref[...] = (o_ref[...].astype(jnp.float32) + partial_).astype(o_ref.dtype)
+
+
+def ws_matmul_pallas(x, w, *, block_m=DEF_BM, block_n=DEF_BN, block_k=DEF_BK,
+                     interpret=False):
+    """x: (M, K) @ w: (K, N) -> (M, N), fp32 accumulation in the output."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    grid = (n // bn, k // bk, m // bm)
+    return pl.pallas_call(
+        functools.partial(_ws_kernel, k_steps=k // bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda ni, ki, mi: (mi, ki)),
+            pl.BlockSpec((bk, bn), lambda ni, ki, mi: (ki, ni)),  # stationary in M
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda ni, ki, mi: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w)
+
+
+def _os_kernel(x_ref, w_ref, o_ref, acc_ref, *, k_steps: int):
+    """Grid (M/bm, N/bn, K/bk): classic output-stationary with VMEM acc."""
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(ki == k_steps - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def os_matmul_pallas(x, w, *, block_m=DEF_BM, block_n=DEF_BN, block_k=DEF_BK,
+                     interpret=False):
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_os_kernel, k_steps=k // bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda mi, ni, ki: (mi, ki)),
+            pl.BlockSpec((bk, bn), lambda mi, ni, ki: (ki, ni)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w)
+
+
+def hbm_traffic_model(m, n, k, bm=DEF_BM, bn=DEF_BN, bk=DEF_BK, bytes_per=2):
+    """Analytical HBM bytes for each dataflow (the napkin math).
+
+    Pallas keeps a block resident in VMEM while its index map is constant
+    between consecutive grid steps, so with a single M block the WS output
+    tile stays in VMEM across the whole K sweep (the VPU-local partial sum
+    of the paper) and is written once."""
+    m_blocks = max(1, m // bm)
+    if m_blocks == 1:
+        o_traffic_ws = m * n * 4                  # stays resident per (n,) tile
+    else:
+        o_traffic_ws = m * n * 4 * (2 * (k // bk) - 1)   # HBM read-mod-write
+    ws = (k * n * bytes_per                      # weights once (stationary)
+          + m * k * bytes_per * (n // bn)        # x re-streamed per n tile
+          + o_traffic_ws)
+    os_ = (m * k * bytes_per * (n // bn)
+           + k * n * bytes_per * m_blocks        # weights re-fetched per m tile
+           + m * n * 4)                          # output once
+    return {"weight_stationary": ws, "output_stationary": os_}

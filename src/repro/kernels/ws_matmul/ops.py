@@ -1,0 +1,36 @@
+"""Jit'd wrappers for the weight-stationary matmul kernels.
+
+On CPU (this container) the Pallas TPU pipeline is unavailable, so the
+wrappers run the kernel body under `interpret=True` (tests) or fall back
+to the XLA oracle (production paths pick the kernel only on TPU).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.ws_matmul import kernel as K
+from repro.kernels.ws_matmul.ref import matmul_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret"))
+def ws_matmul(x, w, block_m=K.DEF_BM, block_n=K.DEF_BN, block_k=K.DEF_BK,
+              interpret=None):
+    """Weight-stationary matmul; interpret defaults to True off-TPU."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return K.ws_matmul_pallas(x, w, block_m=block_m, block_n=block_n,
+                              block_k=block_k, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret"))
+def os_matmul(x, w, block_m=K.DEF_BM, block_n=K.DEF_BN, block_k=K.DEF_BK,
+              interpret=None):
+    """Output-stationary ablation twin."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return K.os_matmul_pallas(x, w, block_m=block_m, block_n=block_n,
+                              block_k=block_k, interpret=interpret)

@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for the weight-stationary matmul kernel."""
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)

@@ -1,0 +1,6 @@
+from repro.launch.mesh import (
+    make_production_mesh,
+    make_mesh,
+    make_host_mesh,
+    dp_width,
+)

@@ -1,0 +1,196 @@
+"""Cell builders: one (arch x shape) cell = a step function + its
+ShapeDtypeStruct inputs + in/out shardings on a given mesh.
+
+Kinds:
+  * train   — make_train_step over a TrainState (donated) + global batch;
+  * prefill — fam.prefill(params, batch, cache) (encoder: fam.forward);
+  * decode  — fam.decode_step(params, cache, tokens) — serve_step, one new
+              token against a seq_len KV cache.
+
+MODEL_FLOPS (the "useful flops" denominator of §Roofline) follows the
+standard accounting: train = 6*N*D (fwd 2ND + bwd 4ND), inference =
+2*N*D, with N = active params (MoE counts routed-in experts only) and
+attention terms added explicitly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import numpy as np
+import jax
+
+from repro.configs import get_arch, SHAPES, input_specs, param_specs
+from repro.configs.base import ArchSpec, ShapeSpec
+from repro.models import registry
+from repro.models.config import ModelConfig
+from repro.distribution.sharding import (
+    AxisRules, DEFAULT_RULES, SEQUENCE_PARALLEL_RULES,
+    use_mesh, use_rules, param_shardings, named_sharding)
+from repro.train.optimizer import OptimizerConfig, make_optimizer
+from repro.train import train_step as TS
+from repro.utils.tree import tree_num_params
+
+
+RULE_TABLES = {
+    "default": DEFAULT_RULES,
+    "seq_parallel": SEQUENCE_PARALLEL_RULES,
+}
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: ShapeSpec
+    spec: ArchSpec
+    fn: Callable                 # positional step function
+    args: tuple                  # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    donate_argnums: tuple
+    model_flops: float           # global MODEL_FLOPS per step
+    rules: AxisRules
+    meta: dict
+
+    @property
+    def name(self) -> str:
+        return f"{self.arch}__{self.shape.name}"
+
+
+# ------------------------------------------------------- batch shardings
+
+_BATCH_AXES = {
+    "tokens": ("act_batch", "act_seq"),
+    "labels": ("act_batch", "act_seq"),
+    "frames": ("act_batch", "act_seq", None),
+    "mask": ("act_batch", "act_seq"),
+    "patch_embeds": ("act_batch", "act_patch", None),
+}
+
+
+def batch_shardings(batch_specs: dict, mesh, rules):
+    return {
+        k: named_sharding(_BATCH_AXES[k], tuple(v.shape), mesh, rules)
+        for k, v in batch_specs.items()
+    }
+
+
+def cache_shardings(cfg: ModelConfig, cache_specs_tree, mesh, rules):
+    fam = registry.get_family(cfg)
+    return param_shardings(fam.cache_axes(), cache_specs_tree, mesh, rules)
+
+
+# ---------------------------------------------------------- MODEL_FLOPS
+
+def active_params(cfg: ModelConfig) -> float:
+    """N_active: embedding excluded, MoE counts top-k routed experts."""
+    total = tree_num_params(param_specs(cfg))
+    emb = cfg.vocab_size * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    n = total - emb
+    if cfg.family == "moe":
+        per_expert = 3 * cfg.d_model * cfg.moe_d_ff
+        n -= cfg.num_layers * cfg.num_experts * per_expert
+        n += cfg.num_layers * cfg.experts_per_token * per_expert
+    return float(max(n, 0))
+
+
+def attention_flops(cfg: ModelConfig, batch: int, sq: int, skv: int,
+                    train: bool) -> float:
+    """2 * 2 * b * sq * skv * heads * head_dim (QK^T and PV), causal ~ /2
+    when sq == skv; x3 for train (bwd)."""
+    if cfg.family == "ssm":
+        return 0.0
+    layers = cfg.num_layers
+    if cfg.family == "hybrid":
+        layers = cfg.num_layers // cfg.shared_attn_period
+    f = 4.0 * batch * sq * skv * cfg.num_heads * cfg.head_dim * layers
+    if cfg.causal and sq == skv:
+        f *= 0.5
+    return f * (3.0 if train else 1.0)
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    n = active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens + attention_flops(
+            cfg, shape.global_batch, shape.seq_len, shape.seq_len, True)
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens + attention_flops(
+            cfg, shape.global_batch, shape.seq_len, shape.seq_len, False)
+    # decode: one token per sequence against a seq_len cache
+    tokens = shape.global_batch
+    return 2.0 * n * tokens + attention_flops(
+        cfg, shape.global_batch, 1, shape.seq_len, False)
+
+
+# -------------------------------------------------------------- builders
+
+def build_cell(arch: str, shape_name: str, mesh, *,
+               spec: ArchSpec | None = None) -> Cell:
+    spec = spec or get_arch(arch)
+    cfg = spec.model
+    shape = SHAPES[shape_name]
+    rules = AxisRules(dict(RULE_TABLES[spec.rules]))
+    fam = registry.get_family(cfg)
+    specs = input_specs(cfg, shape)
+    meta = {"optimizer": spec.optimizer, "grad_accum": spec.train_grad_accum,
+            "rules": spec.rules, "family": cfg.family,
+            "params_total": tree_num_params(param_specs(cfg)),
+            "params_active": active_params(cfg)}
+
+    with use_mesh(mesh), use_rules(rules):
+        if shape.kind == "train":
+            opt = make_optimizer(OptimizerConfig(name=spec.optimizer))
+            ga = spec.train_grad_accum
+            step = TS.make_train_step(cfg, opt, grad_accum=ga)
+            shapes = TS.state_shapes(cfg, opt)
+            st_sh = TS.state_shardings(cfg, opt, mesh, rules, shapes=shapes)
+            b_sh = batch_shardings(specs["batch"], mesh, rules)
+            return Cell(arch, shape, spec, step,
+                        (shapes, specs["batch"]), (st_sh, b_sh), (0,),
+                        model_flops(cfg, shape), rules, meta)
+
+        p_specs = param_specs(cfg)
+        p_sh = param_shardings(fam.param_axes(cfg), p_specs, mesh, rules)
+
+        if shape.kind == "prefill":
+            b_sh = batch_shardings(specs["batch"], mesh, rules)
+            if "cache" in specs:
+                c_sh = cache_shardings(cfg, specs["cache"], mesh, rules)
+
+                def fn(params, batch, cache):
+                    return fam.prefill(params, cfg, batch, cache)
+
+                return Cell(arch, shape, spec, fn,
+                            (p_specs, specs["batch"], specs["cache"]),
+                            (p_sh, b_sh, c_sh), (2,),
+                            model_flops(cfg, shape), rules, meta)
+
+            def fn(params, batch):          # encoder: plain inference fwd
+                return fam.forward(params, cfg, batch)
+
+            return Cell(arch, shape, spec, fn,
+                        (p_specs, specs["batch"]), (p_sh, b_sh), (),
+                        model_flops(cfg, shape), rules, meta)
+
+        # decode
+        c_sh = cache_shardings(cfg, specs["cache"], mesh, rules)
+        t_sh = named_sharding(("act_batch",), tuple(specs["tokens"].shape),
+                              mesh, rules)
+
+        def fn(params, cache, tokens):
+            return fam.decode_step(params, cfg, cache, tokens)
+
+        return Cell(arch, shape, spec, fn,
+                    (p_specs, specs["cache"], specs["tokens"]),
+                    (p_sh, c_sh, t_sh), (1,),
+                    model_flops(cfg, shape), rules, meta)
+
+
+def lower_cell(cell: Cell, mesh):
+    """jit + lower (no compile).  Must run under the cell's mesh/rules."""
+    with use_mesh(mesh), use_rules(cell.rules):
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                         donate_argnums=cell.donate_argnums)
+        return jitted.lower(*cell.args)

@@ -1,0 +1,177 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede any other import (jax locks the device
+count on first init): the dry-run — and only the dry-run — sees 512
+placeholder host devices so `jax.make_mesh` can build the production
+meshes (16,16) and (2,16,16).
+
+Per cell this script:
+    lowered  = jit(step, in_shardings=..., donate_argnums=...).lower(specs)
+    compiled = lowered.compile()
+    print(compiled.memory_analysis())     # proves it fits per device
+    print(compiled.cost_analysis())       # flops/bytes for §Roofline
+plus the structural HLO walk (launch/hlo_analysis.py) that scales
+while-body costs by their known trip counts, and writes one JSON per cell
+under experiments/dryrun/.
+
+Usage:
+    python -m repro.launch.dryrun --all                   # every cell
+    python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+    python -m repro.launch.dryrun --all --mesh single     # 16x16 only
+    python -m repro.launch.dryrun --cells a__s b__s2      # explicit list
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import all_archs, applicable_cells, get_arch
+from repro.launch.mesh import make_production_mesh
+from repro.launch.cells import build_cell, lower_cell
+from repro.launch import hlo_analysis as H
+from repro.utils.logging import get_logger
+
+log = get_logger("dryrun")
+
+MESHES = {
+    "single": dict(multi_pod=False),
+    "multi": dict(multi_pod=True),
+}
+
+
+def _mem_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:                                # pragma: no cover
+        return {"error": repr(e)}
+    fields = ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes")
+    return {f: getattr(ma, f, None) for f in fields}
+
+
+def _cost_dict(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:                                # pragma: no cover
+        return {"error": repr(e)}
+    return {k: v for k, v in ca.items()
+            if isinstance(v, (int, float)) and "{" not in k}
+
+
+def run_cell(arch: str, shape: str, mesh_name: str, outdir: str,
+             overrides: dict | None = None) -> dict:
+    mesh = make_production_mesh(**MESHES[mesh_name])
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+           "mesh_shape": dict(mesh.shape), "ok": False}
+    try:
+        spec = get_arch(arch)
+        if overrides:
+            model_kw = {k: v for k, v in overrides.items()
+                        if hasattr(spec.model, k)}
+            spec_kw = {k: v for k, v in overrides.items()
+                       if k in ("optimizer", "train_grad_accum", "rules")}
+            if model_kw:
+                spec = __import__("dataclasses").replace(
+                    spec, model=spec.model.replace(**model_kw))
+            if spec_kw:
+                spec = __import__("dataclasses").replace(spec, **spec_kw)
+            rec["overrides"] = overrides
+        cell = build_cell(arch, shape, mesh, spec=spec)
+        rec["meta"] = cell.meta
+        rec["model_flops"] = cell.model_flops
+        lowered = lower_cell(cell, mesh)
+        t_lower = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time()
+        rec["memory_analysis"] = _mem_dict(compiled)
+        rec["cost_analysis"] = _cost_dict(compiled)
+        s = H.summarize(compiled.as_text())
+        rec["hlo"] = {
+            "flops_per_device": s.flops,
+            "flops_raw_unscaled": s.raw_flops,
+            "bytes_read_per_device": s.bytes_read,
+            "bytes_written_per_device": s.bytes_written,
+            "collective_bytes_per_device": s.collective_bytes,
+            "collective_count": s.collective_count,
+        }
+        rec["timing_s"] = {"lower": t_lower - t0, "compile": t_compile - t_lower}
+        rec["ok"] = True
+        print(f"[dryrun] {arch} x {shape} x {mesh_name}: OK "
+              f"(lower {rec['timing_s']['lower']:.1f}s, "
+              f"compile {rec['timing_s']['compile']:.1f}s)")
+        print("  memory_analysis:", rec["memory_analysis"])
+        print("  cost_analysis: flops=%s bytes=%s" % (
+            rec["cost_analysis"].get("flops"),
+            rec["cost_analysis"].get("bytes accessed")))
+        print("  hlo: flops/dev=%.3e coll=%s" % (
+            s.flops, {k: f"{v:.2e}" for k, v in s.collective_bytes.items()}))
+    except Exception as e:
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[dryrun] {arch} x {shape} x {mesh_name}: FAIL {rec['error']}")
+    if outdir:
+        os.makedirs(outdir, exist_ok=True)
+        path = os.path.join(outdir, f"{arch}__{shape}__{mesh_name}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1, default=float)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--cells", nargs="*", default=None,
+                    help="explicit arch__shape cell names")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--override", nargs="*", default=[],
+                    help="key=value model/spec overrides (hillclimb)")
+    args = ap.parse_args(argv)
+
+    overrides = {}
+    for kv in args.override:
+        k, v = kv.split("=", 1)
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        overrides[k] = v
+
+    if args.cells:
+        todo = [tuple(c.split("__", 1)) for c in args.cells]
+    elif args.all:
+        todo, _ = applicable_cells(all_archs())
+    else:
+        assert args.arch and args.shape, "--arch/--shape, --cells or --all"
+        todo = [(args.arch, args.shape)]
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    n_ok = n_fail = n_skip = 0
+    for arch, shape in todo:
+        for mesh_name in meshes:
+            path = os.path.join(args.out, f"{arch}__{shape}__{mesh_name}.json")
+            if args.skip_existing and os.path.exists(path):
+                with open(path) as f:
+                    if json.load(f).get("ok"):
+                        n_skip += 1
+                        continue
+            rec = run_cell(arch, shape, mesh_name, args.out,
+                           overrides or None)
+            n_ok += rec["ok"]
+            n_fail += not rec["ok"]
+    print(f"[dryrun] done: {n_ok} ok, {n_fail} failed, {n_skip} skipped")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,116 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Hillclimb profiler: compile one cell and print the top traffic
+contributors with trip-count multipliers applied — the 'profile' of the
+dry-run methodology (lowered IR, not wall clock).
+
+    PYTHONPATH=src python -m repro.launch.inspect --arch X --shape Y \
+        [--mesh single] [--override k=v ...] [--top 15]
+"""
+import argparse
+import json
+from collections import defaultdict
+
+from repro.launch.mesh import make_production_mesh
+from repro.launch.cells import build_cell, lower_cell
+from repro.launch import hlo_analysis as H
+from repro.launch.dryrun import MESHES, run_cell
+
+
+def profile(arch: str, shape: str, mesh_name: str = "single",
+            overrides: dict | None = None, top: int = 15):
+    import dataclasses
+    from repro.configs import get_arch
+    mesh = make_production_mesh(**MESHES[mesh_name])
+    spec = get_arch(arch)
+    if overrides:
+        model_kw = {k: v for k, v in overrides.items() if hasattr(spec.model, k)}
+        spec_kw = {k: v for k, v in overrides.items()
+                   if k in ("optimizer", "train_grad_accum", "rules")}
+        if model_kw:
+            spec = dataclasses.replace(spec, model=spec.model.replace(**model_kw))
+        if spec_kw:
+            spec = dataclasses.replace(spec, **spec_kw)
+    cell = build_cell(arch, shape, mesh, spec=spec)
+    compiled = lower_cell(cell, mesh).compile()
+    text = compiled.as_text()
+    prog = H.parse_hlo(text)
+    s = H.summarize(text)
+
+    print(f"=== {arch} x {shape} x {mesh_name} "
+          f"{'(overrides: %s)' % overrides if overrides else ''} ===")
+    ma = compiled.memory_analysis()
+    print(f"memory/dev: args {ma.argument_size_in_bytes/1e9:.2f} GB, "
+          f"temp {ma.temp_size_in_bytes/1e9:.2f} GB")
+    print(f"terms: compute {s.flops/197e12:.3f}s | "
+          f"memory {(s.bytes_read+s.bytes_written)/819e9:.3f}s | "
+          f"collective {s.total_collective_bytes/50e9:.3f}s")
+
+    # ---- top collectives by (kind, shape) with multipliers
+    coll = defaultdict(lambda: [0.0, 0])
+    for name, op in prog.ops.items():
+        if op.opcode not in H.COLLECTIVE_KINDS:
+            continue
+        m = prog.multipliers.get(op.computation, 0.0)
+        key = (op.opcode, op.result_type.split("{")[0], op.computation[:28])
+        coll[key][0] += op.wire_bytes * m
+        coll[key][1] += 1
+    print(f"\n-- top collectives (bytes x trip multiplier) --")
+    for (kind, rtype, comp), (b, n) in sorted(
+            coll.items(), key=lambda kv: -kv[1][0])[:top]:
+        print(f"  {b:12.3e} B  {kind:<20} {rtype:<36} x{n} in {comp}")
+
+    # ---- top HBM traffic by (opcode, shape)
+    traf = defaultdict(float)
+    for name, op in prog.ops.items():
+        m = prog.multipliers.get(op.computation, 0.0)
+        if (m == 0 or op.opcode in H._FREE_OPS or op.opcode == "while"
+                or op.opcode in H._FUSABLE_ELEMENTWISE):
+            continue
+        key = (op.opcode, op.result_type.split("{")[0])
+        traf[key] += op.result_bytes * m
+        for a in op.args:
+            src = prog.ops.get(a)
+            if src is not None and src.opcode != "tuple":
+                traf[key] += src.result_bytes * m
+    print(f"\n-- top HBM traffic (result+operand bytes x multiplier) --")
+    for (opc, rtype), b in sorted(traf.items(), key=lambda kv: -kv[1])[:top]:
+        print(f"  {b:12.3e} B  {opc:<22} {rtype}")
+
+    # ---- top dots by flops
+    dots = defaultdict(float)
+    for name, op in prog.ops.items():
+        if op.opcode not in ("dot", "convolution"):
+            continue
+        m = prog.multipliers.get(op.computation, 0.0)
+        f = (H._dot_flops(prog, op) if op.opcode == "dot"
+             else H._conv_flops(prog, op)) * m
+        dots[op.result_type.split("{")[0]] += f
+    print(f"\n-- top matmuls by flops --")
+    for rtype, f in sorted(dots.items(), key=lambda kv: -kv[1])[:top]:
+        print(f"  {f:12.3e} F  {rtype}")
+    return s
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--override", nargs="*", default=[])
+    args = ap.parse_args(argv)
+    overrides = {}
+    for kv in args.override:
+        k, v = kv.split("=", 1)
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        overrides[k] = v
+    profile(args.arch, args.shape, args.mesh, overrides or None, args.top)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,186 @@
+"""Roofline analysis from the dry-run's compiled artifacts (§Roofline).
+
+Per (arch x shape) cell on the single-pod mesh (the graded table; CPU
+container => no wall-clock, terms are derived from compiled HLO):
+
+    compute_s    = flops_per_device    / 197e12      (bf16 peak / chip)
+    memory_s     = hbm_bytes_per_device / 819e9      (HBM BW / chip)
+    collective_s = collective_bytes_per_device / 50e9 (ICI link BW)
+
+All per-device quantities come from launch/hlo_analysis.py, which scales
+while-body costs by their known trip counts (cost_analysis counts loop
+bodies once — raw values are recorded alongside).  MODEL_FLOPS follows
+launch/cells.model_flops; the ratio MODEL_FLOPS / (HLO_flops x chips)
+exposes remat/redundancy waste.
+
+Usage:
+    python -m repro.launch.roofline                      # full table (md)
+    python -m repro.launch.roofline --json               # machine-readable
+    python -m repro.launch.roofline --cell yi-9b__train_4k
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+from dataclasses import dataclass
+
+from repro.core.hwmodel import TPU_V5E
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops_global: float
+    mem_gb_per_dev: float
+    ok: bool
+    error: str = ""
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Roofline step time = max of the three overlappable terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops_global if self.hlo_flops_global else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved at the bottleneck:
+        (useful flops / step_s) / (chips * peak)."""
+        if self.step_s <= 0:
+            return 0.0
+        peak = self.chips * TPU_V5E.peak_flops_bf16
+        return (self.model_flops / self.step_s) / peak
+
+    @property
+    def bw_fraction(self) -> float:
+        """Fraction of the HBM-bandwidth roofline: memory_s / step_s.
+        1.0 = the step runs exactly at the memory wall — the right
+        roofline for intrinsically BW-bound cells (decode reads the
+        whole model + KV per token; its compute fraction is ~0 by
+        construction)."""
+        return self.memory_s / self.step_s if self.step_s > 0 else 0.0
+
+
+def row_from_record(rec: dict) -> RooflineRow:
+    chips = 1
+    for v in rec.get("mesh_shape", {}).values():
+        chips *= v
+    if not rec.get("ok"):
+        return RooflineRow(rec["arch"], rec["shape"], rec["mesh"], chips,
+                           0, 0, 0, 0, 0, 0, False, rec.get("error", ""))
+    h = rec["hlo"]
+    mem = rec.get("memory_analysis", {})
+    mem_b = (mem.get("argument_size_in_bytes") or 0) + \
+            (mem.get("temp_size_in_bytes") or 0)
+    flops_dev = h["flops_per_device"]
+    hbm_dev = h["bytes_read_per_device"] + h["bytes_written_per_device"]
+    coll_dev = sum(h["collective_bytes_per_device"].values())
+    return RooflineRow(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"], chips=chips,
+        compute_s=flops_dev / TPU_V5E.peak_flops_bf16,
+        memory_s=hbm_dev / TPU_V5E.hbm_bw_Bps,
+        collective_s=coll_dev / TPU_V5E.ici_link_Bps,
+        model_flops=rec["model_flops"],
+        hlo_flops_global=flops_dev * chips,
+        mem_gb_per_dev=mem_b / 1e9,
+        ok=True,
+    )
+
+
+def load_rows(dryrun_dir: str, mesh: str = "single") -> list[RooflineRow]:
+    rows = []
+    for name in sorted(os.listdir(dryrun_dir)):
+        if not name.endswith(f"__{mesh}.json"):
+            continue
+        with open(os.path.join(dryrun_dir, name)) as f:
+            rows.append(row_from_record(json.load(f)))
+    return rows
+
+
+def advice(row: RooflineRow) -> str:
+    """One sentence: what would move the dominant term down."""
+    if row.dominant == "compute":
+        if row.useful_ratio < 0.5:
+            return ("compute-bound with low useful ratio: cut remat "
+                    "recompute (policy/grad-accum) or logits waste")
+        return "compute-bound near peak: raise arithmetic efficiency (fusion, MXU-aligned tiles)"
+    if row.dominant == "memory":
+        return ("memory-bound: increase reuse per HBM byte — bigger batch "
+                "tile per weight read (weight-stationary blocking), bf16 "
+                "everywhere, fuse elementwise chains")
+    return ("collective-bound: reshard to cut gathered bytes (smaller TP "
+            "group / more DP), overlap collectives with compute, compress "
+            "or reduce-scatter instead of all-reduce+slice")
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x * 1e6:.0f}us"
+    if x < 1:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def markdown_table(rows: list[RooflineRow]) -> str:
+    out = ["| arch | shape | compute | memory | collective | bound | "
+           "MODEL/HLO | compute-roofline | BW-roofline | mem GB/dev |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if not r.ok:
+            out.append(f"| {r.arch} | {r.shape} | FAIL: {r.error[:40]} | | | | | | | |")
+            continue
+        out.append(
+            f"| {r.arch} | {r.shape} | {fmt_s(r.compute_s)} | {fmt_s(r.memory_s)} "
+            f"| {fmt_s(r.collective_s)} | **{r.dominant}** | "
+            f"{r.useful_ratio:.2f} | {r.roofline_fraction:.2%} | "
+            f"{r.bw_fraction:.0%} | {r.mem_gb_per_dev:.1f} |")
+    return "\n".join(out)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun-dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--cell", help="arch__shape filter")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args(argv)
+
+    rows = load_rows(args.dryrun_dir, args.mesh)
+    if args.cell:
+        rows = [r for r in rows if f"{r.arch}__{r.shape}" == args.cell]
+    if args.json:
+        print(json.dumps([{**r.__dict__, "dominant": r.dominant,
+                           "step_s": r.step_s,
+                           "useful_ratio": r.useful_ratio,
+                           "roofline_fraction": r.roofline_fraction}
+                          for r in rows], indent=1))
+        return 0
+    print(markdown_table(rows))
+    print()
+    for r in rows:
+        if r.ok:
+            print(f"{r.arch} x {r.shape}: {advice(r)}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,2 @@
+from repro.models.config import ModelConfig, reduced_for_smoke
+from repro.models.registry import FAMILIES, get_family, has_decode, supports_long_context

@@ -1,0 +1,76 @@
+"""Encoder-only audio transformer (hubert-xlarge family).
+
+The modality frontend is a STUB per the brief: `batch["frames"]` carries
+precomputed frame embeddings (b, s, frontend_dim).  Training is HuBERT
+masked prediction: frames at masked positions are replaced with a learned
+mask embedding and the model predicts codebook targets (vocab=504) there;
+`labels` is (b, s) int32 with -1 at unmasked positions.
+
+No autoregressive decode — decode/long shapes are skipped (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.distribution.sharding import with_logical_constraint
+
+
+def init(key, cfg: ModelConfig):
+    ki, kl, km, kh = jax.random.split(key, 4)
+    layer_keys = jax.random.split(kl, cfg.num_layers)
+    stacked = jax.vmap(lambda k: T.layer_init(k, cfg))(layer_keys)
+    return {
+        "in_proj": L._normal(ki, (cfg.frontend_dim, cfg.d_model), 0.02,
+                             cfg.params_dtype),
+        "mask_emb": L._normal(km, (cfg.d_model,), 0.02, cfg.params_dtype),
+        "layers": stacked,
+        "ln_f": L.rmsnorm_init(cfg),
+        "head": L._normal(kh, (cfg.d_model, cfg.vocab_size), 0.02,
+                          cfg.params_dtype),
+    }
+
+
+def param_axes(cfg: ModelConfig):
+    stacked = jax.tree.map(lambda ax: ("stage",) + ax, T.layer_axes(cfg),
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return {
+        "in_proj": ("embed", "norm"),   # frontend_dim == d_model here; replicate out
+        "mask_emb": ("norm",),
+        "layers": stacked,
+        "ln_f": L.rmsnorm_axes(),
+        "head": ("embed", "vocab"),
+    }
+
+
+def _encode(params, cfg: ModelConfig, frames, mask=None):
+    x = frames.astype(cfg.compute_dtype) @ params["in_proj"]
+    if mask is not None:
+        x = jnp.where(mask[..., None], params["mask_emb"].astype(x.dtype), x)
+    x = with_logical_constraint(x, "act_batch", "act_seq", "act_embed")
+    positions = jnp.arange(x.shape[1])[None, :]
+    return T.forward_hidden(params, cfg, x, positions)
+
+
+def forward(params, cfg: ModelConfig, batch):
+    h = _encode(params, cfg, batch["frames"], batch.get("mask"))
+    return L.logits_from_hidden(params["head"], cfg, h)
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    """Masked-prediction CE at labeled (masked) positions."""
+    mask = batch.get("mask")
+    if mask is None:
+        mask = batch["labels"] >= 0
+    h = _encode(params, cfg, batch["frames"], mask)
+    return L.lm_loss(h, params["head"], cfg, batch["labels"])
+
+
+# Encoder-only: no cache / prefill / decode.
+init_cache = None
+cache_axes = None
+prefill = None
+decode_step = None

@@ -1,0 +1,254 @@
+"""Hybrid SSM + shared-attention model (zamba2 family).
+
+A Mamba-2 backbone with a SHARED transformer block applied every
+`shared_attn_period` layers (zamba2-2.7b: every 6 of 54 -> 9 applications,
+alternating between `num_shared_blocks`=2 distinct shared blocks).  Per
+the Zamba recipe the shared block runs on concat([hidden, initial_embed])
+(width 2*d_model) and is projected back to d_model by a per-application
+linear.
+
+The shared block is the paper's broadcast analogue taken to the extreme:
+ONE set of resident attention weights serves nine layer positions — pure
+weight stationarity (weights loaded once, reused 9x per forward pass).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models import mamba2 as M
+from repro.distribution.sharding import with_logical_constraint
+
+
+def _shared_cfg(cfg: ModelConfig) -> ModelConfig:
+    """The shared block runs at width 2*d_model."""
+    return cfg.replace(d_model=2 * cfg.d_model, family="dense")
+
+
+def shared_block_init(key, cfg: ModelConfig):
+    scfg = _shared_cfg(cfg)
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.rmsnorm_init(scfg),
+        "attn": L.attention_init(k1, scfg),
+        "ln2": L.rmsnorm_init(scfg),
+        "mlp": L.mlp_init(k2, scfg),
+    }
+
+
+def shared_block_axes(cfg: ModelConfig):
+    scfg = _shared_cfg(cfg)
+    return {
+        "ln1": L.rmsnorm_axes(),
+        "attn": L.attention_axes(),
+        "ln2": L.rmsnorm_axes(),
+        "mlp": L.mlp_axes(scfg),
+    }
+
+
+def init(key, cfg: ModelConfig):
+    G = cfg.num_layers // cfg.shared_attn_period
+    P = cfg.shared_attn_period
+    ke, km, ks, kp, kh = jax.random.split(key, 5)
+    mamba_keys = jax.random.split(km, cfg.num_layers)
+    mamba_keys = mamba_keys.reshape((G, P) + mamba_keys.shape[1:])
+    mamba = jax.vmap(jax.vmap(lambda k: M.layer_init(k, cfg)))(mamba_keys)
+    shared_keys = jax.random.split(ks, cfg.num_shared_blocks)
+    shared = jax.vmap(lambda k: shared_block_init(k, cfg))(shared_keys)
+    params = {
+        "embed": L.embedding_init(ke, cfg),
+        "mamba": mamba,                      # leaves: (G, P, ...)
+        "shared": shared,                    # leaves: (num_shared_blocks, ...)
+        "group_proj": L._normal(kp, (G, 2 * cfg.d_model, cfg.d_model), 0.02,
+                                cfg.params_dtype),
+        "ln_f": L.rmsnorm_init(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = L._normal(kh, (cfg.d_model, cfg.vocab_size), 0.02,
+                                   cfg.params_dtype)
+    return params
+
+
+def param_axes(cfg: ModelConfig):
+    mamba = jax.tree.map(lambda ax: ("stage", "stage") + ax, M.layer_axes(cfg),
+                         is_leaf=lambda x: isinstance(x, tuple))
+    shared = jax.tree.map(lambda ax: ("stage",) + ax, shared_block_axes(cfg),
+                          is_leaf=lambda x: isinstance(x, tuple))
+    axes = {
+        "embed": L.embedding_axes(),
+        "mamba": mamba,
+        "shared": shared,
+        "group_proj": ("stage", "heads", "embed"),
+        "ln_f": L.rmsnorm_axes(),
+    }
+    if not cfg.tie_embeddings:
+        axes["head"] = ("embed", "vocab")
+    return axes
+
+
+def _select_shared(params, cfg: ModelConfig, g):
+    """Pick shared block g % num_shared_blocks (traced index)."""
+    idx = jax.lax.rem(g, cfg.num_shared_blocks)
+    return jax.tree.map(lambda a: jax.lax.dynamic_index_in_dim(a, idx, 0,
+                                                               keepdims=False),
+                        params["shared"])
+
+
+def _shared_apply(sp, cfg: ModelConfig, x, x0, proj_g, positions):
+    scfg = _shared_cfg(cfg)
+    cat = jnp.concatenate([x, x0], axis=-1)          # (b, s, 2d)
+    h = L.rmsnorm_apply(sp["ln1"], cat, cfg.norm_eps)
+    h = cat + L.attention_apply(sp["attn"], scfg, h, positions)
+    h2 = L.rmsnorm_apply(sp["ln2"], h, cfg.norm_eps)
+    h = h + L.mlp_apply(sp["mlp"], scfg, h2)
+    return x + h @ proj_g
+
+
+def forward_hidden(params, cfg: ModelConfig, x):
+    G = cfg.num_layers // cfg.shared_attn_period
+    x0 = x
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def inner(h, p):
+        hn = L.rmsnorm_apply(p["ln"], h, cfg.norm_eps)
+        return h + M.block_apply(p["mixer"], cfg, hn), None
+
+    def group(carry, xs):
+        h, g = carry
+        mamba_g, proj_g = xs
+        h, _ = jax.lax.scan(inner, h, mamba_g)
+        sp = _select_shared(params, cfg, g)
+        h = _shared_apply(sp, cfg, h, x0, proj_g, positions)
+        return (h, g + 1), None
+
+    group = T._maybe_remat(group, cfg)
+    (x, _), _ = jax.lax.scan(group, (x, jnp.int32(0)),
+                             (params["mamba"], params["group_proj"]))
+    return L.rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
+
+
+def forward(params, cfg: ModelConfig, batch):
+    x = L.embed_tokens(params["embed"], cfg, batch["tokens"])
+    h = forward_hidden(params, cfg, x)
+    return L.logits_from_hidden(T.head_weights(params, cfg), cfg, h)
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    x = L.embed_tokens(params["embed"], cfg, batch["tokens"])
+    h = forward_hidden(params, cfg, x)
+    return L.lm_loss(h, T.head_weights(params, cfg), cfg, batch["labels"])
+
+
+# ----------------------------------------------------------------- serving
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
+    dtype = dtype or cfg.compute_dtype
+    G = cfg.num_layers // cfg.shared_attn_period
+    P = cfg.shared_attn_period
+    kv_shape = (G, batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "conv": jnp.zeros((G, P, batch, cfg.conv_width - 1, cfg.conv_channels), dtype),
+        "ssm": jnp.zeros((G, P, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                          cfg.ssm_state), dtype),
+        "k": jnp.zeros(kv_shape, dtype),
+        "v": jnp.zeros(kv_shape, dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def cache_axes():
+    kv = (None, "act_batch", "act_kv_seq", None, None)
+    return {
+        "conv": (None, None, "act_batch", None, "ssm_inner"),
+        "ssm": (None, None, "act_batch", "act_ssm_heads", None, None),
+        "k": kv,
+        "v": kv,
+        "pos": ("act_batch",),
+    }
+
+
+def prefill(params, cfg: ModelConfig, batch, cache):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    scfg = _shared_cfg(cfg)
+    x = L.embed_tokens(params["embed"], cfg, tokens)
+    x0 = x
+    positions = jnp.arange(s)[None, :]
+
+    def inner(h, xs):
+        p, conv_c, ssm_c = xs
+        hn = L.rmsnorm_apply(p["ln"], h, cfg.norm_eps)
+        out, (S, tail) = M.block_apply(p["mixer"], cfg, hn, return_state=True)
+        return h + out, (tail.astype(conv_c.dtype), S.astype(ssm_c.dtype))
+
+    def group(carry, xs):
+        h, g = carry
+        mamba_g, proj_g, conv_g, ssm_g, k_g, v_g = xs
+        h, (conv_new, ssm_new) = jax.lax.scan(inner, h, (mamba_g, conv_g, ssm_g))
+        sp = _select_shared(params, cfg, g)
+        cat = jnp.concatenate([h, x0], axis=-1)
+        hn = L.rmsnorm_apply(sp["ln1"], cat, cfg.norm_eps)
+        q, k, v = L.attention_qkv(sp["attn"], scfg, hn, positions)
+        o = L.run_attention(scfg, q, k, v).reshape(b, s, scfg.q_dim)
+        cat = cat + o @ sp["attn"]["wo"]
+        h2 = L.rmsnorm_apply(sp["ln2"], cat, cfg.norm_eps)
+        cat = cat + L.mlp_apply(sp["mlp"], scfg, h2)
+        h = h + cat @ proj_g
+        k_g = jax.lax.dynamic_update_slice(k_g, k.astype(k_g.dtype), (0, 0, 0, 0))
+        v_g = jax.lax.dynamic_update_slice(v_g, v.astype(v_g.dtype), (0, 0, 0, 0))
+        return (h, g + 1), (conv_new, ssm_new, k_g, v_g)
+
+    (x, _), (conv, ssm, k, v) = jax.lax.scan(
+        group, (x, jnp.int32(0)),
+        (params["mamba"], params["group_proj"], cache["conv"], cache["ssm"],
+         cache["k"], cache["v"]),
+    )
+    cache = {"conv": conv, "ssm": ssm, "k": k, "v": v,
+             "pos": jnp.full((b,), s, jnp.int32)}
+    h = L.rmsnorm_apply(params["ln_f"], x[:, -1:], cfg.norm_eps)
+    logits = L.logits_from_hidden(T.head_weights(params, cfg), cfg, h)
+    return cache, logits[:, 0]
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens):
+    b = tokens.shape[0]
+    scfg = _shared_cfg(cfg)
+    pos = cache["pos"]
+    x = L.embed_tokens(params["embed"], cfg, tokens[:, None])[:, 0]   # (b, d)
+    x0 = x
+
+    def inner(h, xs):
+        p, conv_c, ssm_c = xs
+        hn = L.rmsnorm_apply(p["ln"], h, cfg.norm_eps)
+        y, conv_c, ssm_c = M.block_step(p["mixer"], cfg, hn, conv_c, ssm_c)
+        return h + y, (conv_c, ssm_c)
+
+    def group(carry, xs):
+        h, g = carry
+        mamba_g, proj_g, conv_g, ssm_g, k_g, v_g = xs
+        h, (conv_new, ssm_new) = jax.lax.scan(inner, h, (mamba_g, conv_g, ssm_g))
+        sp = _select_shared(params, cfg, g)
+        cat = jnp.concatenate([h, x0], axis=-1)[:, None, :]           # (b,1,2d)
+        hn = L.rmsnorm_apply(sp["ln1"], cat, cfg.norm_eps)
+        q, k, v = L.attention_qkv(sp["attn"], scfg, hn, pos[:, None])
+        k_g = T._scatter_kv(k_g, k.astype(k_g.dtype), pos)
+        v_g = T._scatter_kv(v_g, v.astype(v_g.dtype), pos)
+        o = L.run_decode_attention(scfg, q[:, 0], k_g, v_g, pos)
+        cat = cat[:, 0] + o @ sp["attn"]["wo"]
+        h2 = L.rmsnorm_apply(sp["ln2"], cat, cfg.norm_eps)
+        cat = cat + L.mlp_apply(sp["mlp"], scfg, h2[:, None, :])[:, 0]
+        h = h + cat @ proj_g
+        return (h, g + 1), (conv_new, ssm_new, k_g, v_g)
+
+    (x, _), (conv, ssm, k, v) = jax.lax.scan(
+        group, (x, jnp.int32(0)),
+        (params["mamba"], params["group_proj"], cache["conv"], cache["ssm"],
+         cache["k"], cache["v"]),
+    )
+    cache = {"conv": conv, "ssm": ssm, "k": k, "v": v, "pos": pos + 1}
+    h = L.rmsnorm_apply(params["ln_f"], x[:, None], cfg.norm_eps)
+    logits = L.logits_from_hidden(T.head_weights(params, cfg), cfg, h)
+    return cache, logits[:, 0]

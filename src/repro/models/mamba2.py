@@ -1,0 +1,383 @@
+"""Mamba-2 (SSD — state-space duality) language model, attention-free.
+
+Implements the chunked SSD algorithm (Dao & Gu 2024, arXiv:2405.21060):
+within-chunk terms are computed as a masked decay-weighted "attention"
+(dual form), across-chunk terms via a short `lax.scan` recurrence over
+chunk states — sequence-parallel-friendly and O(s * l) not O(s^2).
+
+The SSM state is the paper's "localized intermediate": it lives and dies
+inside the unit (device) that owns its heads, never crossing the fabric —
+the purest expression of the Sunrise dataflow (DESIGN.md section 4).
+
+The intra-chunk dual form is the hot spot mirrored by the ssd_scan Pallas
+kernel (kernels/ssd_scan).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.distribution.sharding import with_logical_constraint
+
+
+# ----------------------------------------------------------------- SSD core
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, initial_state=None, impl="xla"):
+    """Chunked state-space-duality scan.
+
+    x:  (b, s, h, p)   per-head inputs
+    dt: (b, s, h)      post-softplus step sizes
+    A:  (h,)           negative decay rates
+    B:  (b, s, h, n)   input maps (already repeated over group heads)
+    C:  (b, s, h, n)   output maps
+    impl: "xla" (default) or "pallas" (intra-chunk TPU kernel).
+    Returns (y (b, s, h, p), final_state (b, h, p, n)).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    l = min(chunk, s)
+    pad = (-s) % l
+    if pad:
+        # zero-pad to a chunk multiple: dt=0 rows carry no state update
+        # (dA=0, w*dt=0) so the recurrence is exact; pad outputs dropped.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        s_orig = s
+        s = s + pad
+    nc = s // l
+
+    xc = x.reshape(b, nc, l, h, p)
+    dtc = dt.reshape(b, nc, l, h)
+    Bc = B.reshape(b, nc, l, h, n)
+    Cc = C.reshape(b, nc, l, h, n)
+
+    dA = dtc * A                                    # (b, nc, l, h), <= 0
+    seg = jnp.cumsum(dA, axis=2)                    # inclusive cumsum
+
+    if impl == "pallas":
+        from repro.kernels.ssd_scan.ops import ssd_intra_chunk
+
+        def to_bh(a):                                # (b,nc,l,...) -> (b*h,nc,l,...)
+            return jnp.moveaxis(a, 3, 1).reshape((b * h, nc, l) + a.shape[4:])
+
+        xk = to_bh(xc)
+        dtk = jnp.moveaxis(dtc, 3, 1).reshape(b * h, nc, l)
+        Ak = jnp.broadcast_to(A, (b, h)).reshape(b * h)
+        yk, sk, _ = ssd_intra_chunk(xk, dtk, Ak, to_bh(Bc), to_bh(Cc))
+        y_intra = jnp.moveaxis(yk.reshape(b, h, nc, l, p), 1, 3).astype(x.dtype)
+        # kernel returns (n, p) summaries; host recurrence uses (p, n)
+        s_chunk = jnp.swapaxes(sk.reshape(b, h, nc, n, p), -1, -2)
+        s_chunk = jnp.moveaxis(s_chunk, 1, 2).astype(x.dtype)      # (b,nc,h,p,n)
+    else:
+        # ---- intra-chunk (dual / attention form)
+        cb = jnp.einsum("bclhn,bcmhn->bchlm", Cc, Bc)   # (b, nc, h, l, l)
+        dlog = seg[..., :, None, :] - seg[..., None, :, :]           # (b,nc,l,m,h)
+        mask = jnp.tril(jnp.ones((l, l), bool))[None, None, :, :, None]
+        dlog = jnp.where(mask, dlog, L.NEG_INF)     # mask BEFORE exp: no inf*0
+        decay = jnp.moveaxis(jnp.exp(dlog), -1, 2)  # (b, nc, h, l, m)
+        scores = cb * decay
+        scores = scores * jnp.moveaxis(dtc, -1, -2)[:, :, :, None, :]  # * dt_j
+        y_intra = jnp.einsum("bchlm,bcmhp->bclhp", scores.astype(x.dtype), xc)
+
+        # ---- chunk summaries: S_c = sum_j exp(seg_last - seg_j) dt_j B_j x_j^T
+        w = jnp.exp(seg[:, :, -1:, :] - seg) * dtc      # (b, nc, l, h)
+        s_chunk = jnp.einsum("bclhn,bclh,bclhp->bchpn", Bc, w.astype(x.dtype), xc)
+
+    # ---- inter-chunk recurrence (short scan over nc chunks)
+    chunk_decay = jnp.exp(seg[:, :, -1, :])         # (b, nc, h)
+    s0 = (jnp.zeros((b, h, p, n), x.dtype) if initial_state is None
+          else initial_state.astype(x.dtype))
+
+    def step(S, xs):
+        cd, sc = xs                                  # (b,h), (b,h,p,n)
+        S_prev = S
+        S = S * cd[:, :, None, None].astype(x.dtype) + sc
+        return S, S_prev
+
+    cd_t = jnp.moveaxis(chunk_decay, 1, 0)          # (nc, b, h)
+    sc_t = jnp.moveaxis(s_chunk, 1, 0)              # (nc, b, h, p, n)
+    S_final, S_prevs = jax.lax.scan(step, s0, (cd_t, sc_t))
+    S_prevs = jnp.moveaxis(S_prevs, 0, 1)           # (b, nc, h, p, n)
+
+    # ---- inter-chunk contribution: y_i += exp(seg_i) C_i . S_prev
+    y_inter = jnp.einsum("bclhn,bchpn,bclh->bclhp", Cc, S_prevs,
+                         jnp.exp(seg).astype(x.dtype))
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    if pad:
+        y = y[:, :s_orig]
+    return y, S_final
+
+
+def ssd_step(state, x, dt, A, B, C):
+    """Single-token recurrence.  state: (b, h, p, n); x: (b, h, p);
+    dt: (b, h); B, C: (b, h, n).  Returns (new_state, y (b, h, p))."""
+    da = jnp.exp(dt * A)                            # (b, h)
+    upd = jnp.einsum("bh,bhn,bhp->bhpn", dt.astype(x.dtype), B, x)
+    state = state * da[:, :, None, None].astype(x.dtype) + upd
+    y = jnp.einsum("bhn,bhpn->bhp", C, state)
+    return state, y
+
+
+# ------------------------------------------------------------ depthwise conv
+
+def causal_conv_apply(w, b_, x):
+    """Depthwise causal conv.  w: (width, ch); x: (b, s, ch)."""
+    width, ch = w.shape
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    y = jax.lax.conv_general_dilated(
+        pad, w[:, None, :], window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"), feature_group_count=ch,
+    )
+    return y + b_
+
+
+def causal_conv_step(w, b_, conv_cache, x_new):
+    """conv_cache: (b, width-1, ch); x_new: (b, ch)."""
+    window = jnp.concatenate([conv_cache, x_new[:, None, :]], axis=1)
+    y = jnp.einsum("bwc,wc->bc", window, w) + b_
+    return window[:, 1:], y
+
+
+# ------------------------------------------------------------- mamba2 block
+
+def block_init(key, cfg: ModelConfig):
+    d, di = cfg.d_model, cfg.ssm_inner
+    h, n, g = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups
+    proj_out = 2 * di + 2 * g * n + h
+    ks = jax.random.split(key, 4)
+    std = 0.02
+    out_std = std / math.sqrt(2 * cfg.num_layers)
+    return {
+        "in_proj": L._normal(ks[0], (d, proj_out), std, cfg.params_dtype),
+        "conv_w": L._normal(ks[1], (cfg.conv_width, cfg.conv_channels), 0.2,
+                            cfg.params_dtype),
+        "conv_b": jnp.zeros((cfg.conv_channels,), cfg.params_dtype),
+        "dt_bias": jnp.zeros((h,), cfg.params_dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(cfg.params_dtype),
+        "D": jnp.ones((h,), cfg.params_dtype),
+        "norm": L.rmsnorm_init(cfg, di),
+        "out_proj": L._normal(ks[3], (di, d), out_std, cfg.params_dtype),
+    }
+
+
+def block_axes():
+    return {
+        "in_proj": ("embed", "ssm_inner"),
+        "conv_w": ("norm", "ssm_inner"),
+        "conv_b": ("ssm_inner",),
+        "dt_bias": ("ssm_heads",),
+        "A_log": ("ssm_heads",),
+        "D": ("ssm_heads",),
+        "norm": ("ssm_inner",),
+        "out_proj": ("ssm_inner", "embed"),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    di, g, n, h = cfg.ssm_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:di + cfg.conv_channels]
+    dt = zxbcdt[..., di + cfg.conv_channels:]
+    return z, xBC, dt
+
+
+def _split_xbc(cfg: ModelConfig, xBC):
+    di, g, n = cfg.ssm_inner, cfg.ssm_groups, cfg.ssm_state
+    x = xBC[..., :di]
+    B = xBC[..., di:di + g * n]
+    C = xBC[..., di + g * n:]
+    return x, B, C
+
+
+def _expand_groups(cfg: ModelConfig, bc):
+    """(b, ..., g*n) -> (b, ..., h, n) repeated over heads in each group."""
+    lead = bc.shape[:-1]
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    bc = bc.reshape(*lead, g, n)
+    return jnp.repeat(bc, h // g, axis=len(lead))
+
+
+def block_apply(p, cfg: ModelConfig, u, initial_state=None, return_state=False):
+    """u: (b, s, d) -> (b, s, d).  Full-sequence (training / prefill)."""
+    b, s, _ = u.shape
+    h, pdim, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    zxbcdt = u @ p["in_proj"]
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    xBC = jax.nn.silu(causal_conv_apply(p["conv_w"], p["conv_b"], xBC))
+    x, B, C = _split_xbc(cfg, xBC)
+    x = x.reshape(b, s, h, pdim)
+    x = with_logical_constraint(x, "act_batch", "act_seq", "act_ssm_heads", None)
+    B = _expand_groups(cfg, B)
+    C = _expand_groups(cfg, C)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, S = ssd_chunked(x, dt, A, B, C, cfg.ssm_chunk, initial_state,
+                       impl=cfg.ssd_impl)
+    y = y + p["D"].astype(y.dtype)[:, None] * x
+    y = y.reshape(b, s, cfg.ssm_inner)
+    y = L.rmsnorm_apply(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ p["out_proj"]
+    out = with_logical_constraint(out, "act_batch", "act_seq", "act_embed")
+    if return_state:
+        conv_tail = _conv_tail(cfg, u, p)
+        return out, (S, conv_tail)
+    return out
+
+
+def _conv_tail(cfg: ModelConfig, u, p):
+    """Last (width-1) pre-conv xBC rows — the decode conv cache."""
+    zxbcdt = u[:, -(cfg.conv_width - 1):] @ p["in_proj"]
+    _, xBC, _ = _split_proj(cfg, zxbcdt)
+    return xBC
+
+
+def block_step(p, cfg: ModelConfig, u, conv_cache, ssm_state):
+    """Single token.  u: (b, d).  Returns (y (b, d), conv_cache, ssm_state)."""
+    b = u.shape[0]
+    h, pdim = cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = u @ p["in_proj"]
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    conv_cache, xBC = causal_conv_step(p["conv_w"], p["conv_b"], conv_cache, xBC)
+    xBC = jax.nn.silu(xBC)
+    x, B, C = _split_xbc(cfg, xBC)
+    x = x.reshape(b, h, pdim)
+    B = _expand_groups(cfg, B)
+    C = _expand_groups(cfg, C)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    ssm_state, y = ssd_step(ssm_state, x, dt, A, B, C)
+    y = y + p["D"].astype(y.dtype)[:, None] * x
+    y = y.reshape(b, cfg.ssm_inner)
+    y = L.rmsnorm_apply(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ p["out_proj"], conv_cache, ssm_state
+
+
+# ------------------------------------------------------------------- model
+
+def layer_init(key, cfg: ModelConfig):
+    return {"ln": L.rmsnorm_init(cfg), "mixer": block_init(key, cfg)}
+
+
+def layer_axes(cfg: ModelConfig):
+    return {"ln": L.rmsnorm_axes(), "mixer": block_axes()}
+
+
+def init(key, cfg: ModelConfig):
+    ke, kl, kh = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.num_layers)
+    stacked = jax.vmap(lambda k: layer_init(k, cfg))(layer_keys)
+    params = {
+        "embed": L.embedding_init(ke, cfg),
+        "layers": stacked,
+        "ln_f": L.rmsnorm_init(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = L._normal(kh, (cfg.d_model, cfg.vocab_size), 0.02,
+                                   cfg.params_dtype)
+    return params
+
+
+def param_axes(cfg: ModelConfig):
+    stacked = jax.tree.map(lambda ax: ("stage",) + ax, layer_axes(cfg),
+                           is_leaf=lambda x: isinstance(x, tuple))
+    axes = {
+        "embed": L.embedding_axes(),
+        "layers": stacked,
+        "ln_f": L.rmsnorm_axes(),
+    }
+    if not cfg.tie_embeddings:
+        axes["head"] = ("embed", "vocab")
+    return axes
+
+
+def forward_hidden(params, cfg: ModelConfig, x):
+    def body(h, p):
+        hn = L.rmsnorm_apply(p["ln"], h, cfg.norm_eps)
+        h = h + block_apply(p["mixer"], cfg, hn)
+        return h, None
+
+    body = T._maybe_remat(body, cfg)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return L.rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
+
+
+def forward(params, cfg: ModelConfig, batch):
+    x = L.embed_tokens(params["embed"], cfg, batch["tokens"])
+    h = forward_hidden(params, cfg, x)
+    return L.logits_from_hidden(T.head_weights(params, cfg), cfg, h)
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    x = L.embed_tokens(params["embed"], cfg, batch["tokens"])
+    h = forward_hidden(params, cfg, x)
+    return L.lm_loss(h, T.head_weights(params, cfg), cfg, batch["labels"])
+
+
+# ----------------------------------------------------------------- serving
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int = 0, dtype=None):
+    """SSM cache is O(1) in sequence length (max_seq unused)."""
+    dtype = dtype or cfg.compute_dtype
+    Lyr = cfg.num_layers
+    return {
+        "conv": jnp.zeros((Lyr, batch, cfg.conv_width - 1, cfg.conv_channels), dtype),
+        "ssm": jnp.zeros((Lyr, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                          cfg.ssm_state), dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def cache_axes():
+    return {
+        "conv": (None, "act_batch", None, "ssm_inner"),
+        "ssm": (None, "act_batch", "act_ssm_heads", None, None),
+        "pos": ("act_batch",),
+    }
+
+
+def prefill(params, cfg: ModelConfig, batch, cache):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = L.embed_tokens(params["embed"], cfg, tokens)
+
+    def body(h, xs):
+        p, conv_c, ssm_c = xs
+        hn = L.rmsnorm_apply(p["ln"], h, cfg.norm_eps)
+        out, (S, conv_tail) = block_apply(p["mixer"], cfg, hn,
+                                          initial_state=None, return_state=True)
+        return h + out, (conv_tail.astype(conv_c.dtype), S.astype(ssm_c.dtype))
+
+    x, (conv_new, ssm_new) = jax.lax.scan(
+        body, x, (params["layers"], cache["conv"], cache["ssm"])
+    )
+    cache = {"conv": conv_new, "ssm": ssm_new,
+             "pos": jnp.full((b,), s, jnp.int32)}
+    h = L.rmsnorm_apply(params["ln_f"], x[:, -1:], cfg.norm_eps)
+    logits = L.logits_from_hidden(T.head_weights(params, cfg), cfg, h)
+    return cache, logits[:, 0]
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens):
+    b = tokens.shape[0]
+    x = L.embed_tokens(params["embed"], cfg, tokens[:, None])[:, 0]   # (b, d)
+
+    def body(h, xs):
+        p, conv_c, ssm_c = xs
+        hn = L.rmsnorm_apply(p["ln"], h, cfg.norm_eps)
+        y, conv_c, ssm_c = block_step(p["mixer"], cfg, hn, conv_c, ssm_c)
+        return h + y, (conv_c, ssm_c)
+
+    x, (conv_new, ssm_new) = jax.lax.scan(
+        body, x, (params["layers"], cache["conv"], cache["ssm"])
+    )
+    cache = {"conv": conv_new, "ssm": ssm_new, "pos": cache["pos"] + 1}
+    h = L.rmsnorm_apply(params["ln_f"], x[:, None], cfg.norm_eps)
+    logits = L.logits_from_hidden(T.head_weights(params, cfg), cfg, h)
+    return cache, logits[:, 0]

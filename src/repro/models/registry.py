@@ -1,0 +1,41 @@
+"""Model family registry — one uniform functional interface per family.
+
+Each family module exposes:
+    init(key, cfg) -> params
+    param_axes(cfg) -> logical-axes pytree (same structure as params)
+    forward(params, cfg, batch) -> logits
+    loss_fn(params, cfg, batch) -> scalar loss
+    init_cache(cfg, batch, max_seq) / cache_axes() / prefill / decode_step
+      (None for encoder-only families)
+"""
+from __future__ import annotations
+
+from types import SimpleNamespace
+
+from repro.models import transformer, moe, mamba2, hybrid, encoder, vlm
+from repro.models.config import ModelConfig
+
+FAMILIES = {
+    "dense": transformer,
+    "moe": moe,
+    "ssm": mamba2,
+    "hybrid": hybrid,
+    "encoder": encoder,
+    "vlm": vlm,
+}
+
+
+def get_family(cfg: ModelConfig):
+    try:
+        return FAMILIES[cfg.family]
+    except KeyError:
+        raise ValueError(f"unknown model family {cfg.family!r}") from None
+
+
+def has_decode(cfg: ModelConfig) -> bool:
+    return getattr(get_family(cfg), "decode_step", None) is not None
+
+
+def supports_long_context(cfg: ModelConfig) -> bool:
+    """Sub-quadratic families run long_500k; pure full-attention skip it."""
+    return cfg.family in ("ssm", "hybrid")

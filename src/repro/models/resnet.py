@@ -1,0 +1,148 @@
+"""ResNet-50 — the paper's benchmark workload (1500 img/s on Sunrise).
+
+Two faces:
+  * `resnet50_layer_specs()` — exact per-layer shapes/MACs consumed by the
+    analytical Sunrise scheduler (`core/simulator.py`).
+  * `ResNet50` — a runnable pure-JAX model (inference-style, folded BN)
+    used by examples and tests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------- layer specs
+
+@dataclass(frozen=True)
+class LayerSpec:
+    name: str
+    kind: str              # "conv" | "matmul" | "pool"
+    c_in: int
+    c_out: int
+    kh: int
+    kw: int
+    stride: int
+    h_out: int
+    w_out: int
+
+    @property
+    def macs(self) -> int:
+        return self.c_in * self.c_out * self.kh * self.kw * self.h_out * self.w_out
+
+    @property
+    def weight_params(self) -> int:
+        return self.c_in * self.c_out * self.kh * self.kw
+
+    @property
+    def in_elems(self) -> int:
+        # Input activation volume feeding this layer (per image).
+        return self.c_in * self.h_out * self.stride * self.w_out * self.stride
+
+    @property
+    def out_elems(self) -> int:
+        return self.c_out * self.h_out * self.w_out
+
+    @property
+    def spatial(self) -> int:
+        return self.h_out * self.w_out
+
+
+STAGES = [  # (num_blocks, bottleneck_width, out_width, stride)
+    (3, 64, 256, 1),
+    (4, 128, 512, 2),
+    (6, 256, 1024, 2),
+    (3, 512, 2048, 2),
+]
+
+
+def resnet50_layer_specs(image_hw: int = 224) -> list[LayerSpec]:
+    specs: list[LayerSpec] = []
+    hw = image_hw // 2
+    specs.append(LayerSpec("conv1", "conv", 3, 64, 7, 7, 2, hw, hw))
+    hw = hw // 2  # maxpool /2 (no MACs)
+    c_in = 64
+    for si, (blocks, width, out_width, stride) in enumerate(STAGES):
+        for bi in range(blocks):
+            s = stride if bi == 0 else 1
+            hw_out = hw // s
+            p = f"s{si + 1}b{bi + 1}"
+            if bi == 0:
+                specs.append(LayerSpec(f"{p}.proj", "conv", c_in, out_width, 1, 1, s, hw_out, hw_out))
+            specs.append(LayerSpec(f"{p}.c1", "conv", c_in, width, 1, 1, 1, hw, hw))
+            specs.append(LayerSpec(f"{p}.c2", "conv", width, width, 3, 3, s, hw_out, hw_out))
+            specs.append(LayerSpec(f"{p}.c3", "conv", width, out_width, 1, 1, 1, hw_out, hw_out))
+            c_in = out_width
+            hw = hw_out
+    specs.append(LayerSpec("fc", "matmul", 2048, 1000, 1, 1, 1, 1, 1))
+    return specs
+
+
+def resnet50_total_macs(image_hw: int = 224) -> int:
+    return sum(s.macs for s in resnet50_layer_specs(image_hw))
+
+
+def resnet50_total_params() -> int:
+    return sum(s.weight_params for s in resnet50_layer_specs())
+
+
+# ------------------------------------------------------------ runnable JAX
+
+def _conv_init(key, c_in, c_out, kh, kw, dtype):
+    fan_in = c_in * kh * kw
+    w = jax.random.normal(key, (kh, kw, c_in, c_out), dtype) * np.sqrt(2.0 / fan_in)
+    return {"w": w, "scale": jnp.ones((c_out,), dtype), "bias": jnp.zeros((c_out,), dtype)}
+
+
+def _conv_apply(p, x, stride):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y * p["scale"] + p["bias"]  # folded batch-norm
+
+
+def init_resnet50(key, num_classes: int = 1000, dtype=jnp.float32):
+    keys = iter(jax.random.split(key, 64))
+    params: dict = {"conv1": _conv_init(next(keys), 3, 64, 7, 7, dtype)}
+    c_in = 64
+    for si, (blocks, width, out_width, stride) in enumerate(STAGES):
+        for bi in range(blocks):
+            p = f"s{si + 1}b{bi + 1}"
+            blk = {
+                "c1": _conv_init(next(keys), c_in, width, 1, 1, dtype),
+                "c2": _conv_init(next(keys), width, width, 3, 3, dtype),
+                "c3": _conv_init(next(keys), width, out_width, 1, 1, dtype),
+            }
+            if bi == 0:
+                blk["proj"] = _conv_init(next(keys), c_in, out_width, 1, 1, dtype)
+            params[p] = blk
+            c_in = out_width
+    params["fc"] = {
+        "w": jax.random.normal(next(keys), (2048, num_classes), dtype) * 0.02,
+        "b": jnp.zeros((num_classes,), dtype),
+    }
+    return params
+
+
+def resnet50_forward(params, images):
+    """images: (B, H, W, 3) -> logits (B, num_classes)."""
+    x = jax.nn.relu(_conv_apply(params["conv1"], images, 2))
+    x = jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 3, 3, 1), (1, 2, 2, 1), "SAME"
+    )
+    for si, (blocks, _, _, stride) in enumerate(STAGES):
+        for bi in range(blocks):
+            p = params[f"s{si + 1}b{bi + 1}"]
+            s = stride if bi == 0 else 1
+            shortcut = _conv_apply(p["proj"], x, s) if "proj" in p else x
+            y = jax.nn.relu(_conv_apply(p["c1"], x, 1))
+            y = jax.nn.relu(_conv_apply(p["c2"], y, s))
+            y = _conv_apply(p["c3"], y, 1)
+            x = jax.nn.relu(y + shortcut)
+    x = jnp.mean(x, axis=(1, 2))
+    return x @ params["fc"]["w"] + params["fc"]["b"]

@@ -1,0 +1,213 @@
+"""Decoder-only transformer LM (llama-style, GQA, silu-GLU or relu^2).
+
+Covers deepseek-67b, internlm2-1.8b, nemotron-4-340b, yi-9b, and serves
+as the backbone for the encoder (hubert) and VLM (phi-3-vision) families.
+
+Layers are stacked and executed with `lax.scan` (compile time independent
+of depth); remat policy is configurable.  KV caches for decode are
+sharded along SEQ over the "model" axis — the near-memory layout: each
+chip owns a resident slice of the cache, queries are broadcast, partial
+softmax terms are reduced (DESIGN.md section 2).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import layers as L
+from repro.distribution.sharding import with_logical_constraint
+
+
+# ------------------------------------------------------------- layer defs
+
+def layer_init(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.rmsnorm_init(cfg),
+        "attn": L.attention_init(k1, cfg),
+        "ln2": L.rmsnorm_init(cfg),
+        "mlp": L.mlp_init(k2, cfg),
+    }
+
+
+def layer_axes(cfg: ModelConfig):
+    return {
+        "ln1": L.rmsnorm_axes(),
+        "attn": L.attention_axes(),
+        "ln2": L.rmsnorm_axes(),
+        "mlp": L.mlp_axes(cfg),
+    }
+
+
+def layer_apply(p, cfg: ModelConfig, x, positions):
+    h = L.rmsnorm_apply(p["ln1"], x, cfg.norm_eps)
+    x = x + L.attention_apply(p["attn"], cfg, h, positions)
+    h = L.rmsnorm_apply(p["ln2"], x, cfg.norm_eps)
+    x = x + L.mlp_apply(p["mlp"], cfg, h)
+    return with_logical_constraint(x, "act_batch", "act_seq", "act_embed")
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    raise ValueError(cfg.remat)
+
+
+# ------------------------------------------------------------------ model
+
+def init(key, cfg: ModelConfig):
+    ke, kl, kh = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.num_layers)
+    stacked = jax.vmap(lambda k: layer_init(k, cfg))(layer_keys)
+    params = {
+        "embed": L.embedding_init(ke, cfg),
+        "layers": stacked,
+        "ln_f": L.rmsnorm_init(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = L._normal(kh, (cfg.d_model, cfg.vocab_size), 0.02,
+                                   cfg.params_dtype)
+    return params
+
+
+def param_axes(cfg: ModelConfig):
+    lax_ = layer_axes(cfg)
+    stacked = jax.tree.map(lambda ax: ("stage",) + ax, lax_,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    axes = {
+        "embed": L.embedding_axes(),
+        "layers": stacked,
+        "ln_f": L.rmsnorm_axes(),
+    }
+    if not cfg.tie_embeddings:
+        axes["head"] = ("embed", "vocab")
+    return axes
+
+
+def forward_hidden(params, cfg: ModelConfig, x, positions):
+    """x: (b, s, d) embedded input -> final hidden states (pre-head norm)."""
+    body = _maybe_remat(
+        lambda h, p: (layer_apply(p, cfg, h, positions), None), cfg
+    )
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(lambda h, p: body(h, p), x, params["layers"])
+    else:
+        for i in range(cfg.num_layers):
+            p_i = jax.tree.map(lambda a: a[i], params["layers"])
+            x, _ = body(x, p_i)
+    return L.rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
+
+
+def head_weights(params, cfg: ModelConfig):
+    return params["embed"] if cfg.tie_embeddings else params["head"]
+
+
+def forward(params, cfg: ModelConfig, batch):
+    """batch: {"tokens": (b, s)} -> logits (b, s, vocab)."""
+    tokens = batch["tokens"]
+    positions = jnp.arange(tokens.shape[1])[None, :]
+    x = L.embed_tokens(params["embed"], cfg, tokens)
+    h = forward_hidden(params, cfg, x, positions)
+    return L.logits_from_hidden(head_weights(params, cfg), cfg, h)
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    tokens, labels = batch["tokens"], batch["labels"]
+    positions = jnp.arange(tokens.shape[1])[None, :]
+    x = L.embed_tokens(params["embed"], cfg, tokens)
+    h = forward_hidden(params, cfg, x, positions)
+    return L.lm_loss(h, head_weights(params, cfg), cfg, labels)
+
+
+# ---------------------------------------------------------------- serving
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
+    dtype = dtype or cfg.compute_dtype
+    shape = (cfg.num_layers, batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def cache_axes():
+    # seq dim of the cache lives sharded over "model" — near-memory layout.
+    kv = (None, "act_batch", "act_kv_seq", None, None)
+    return {"k": kv, "v": kv, "pos": ("act_batch",)}
+
+
+def prefill(params, cfg: ModelConfig, batch, cache):
+    """Run the full prompt, fill the cache, return (cache, last_logits)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.arange(s)[None, :]
+    x = L.embed_tokens(params["embed"], cfg, tokens)
+
+    def body(h, xs):
+        p, k_l, v_l = xs
+        hn = L.rmsnorm_apply(p["ln1"], h, cfg.norm_eps)
+        q, k, v = L.attention_qkv(p["attn"], cfg, hn, positions)
+        o = L.run_attention(cfg, q, k, v).reshape(b, s, cfg.q_dim)
+        h = h + o @ p["attn"]["wo"]
+        hn = L.rmsnorm_apply(p["ln2"], h, cfg.norm_eps)
+        h = h + L.mlp_apply(p["mlp"], cfg, hn)
+        k_l = jax.lax.dynamic_update_slice(k_l, k.astype(k_l.dtype), (0, 0, 0, 0))
+        v_l = jax.lax.dynamic_update_slice(v_l, v.astype(v_l.dtype), (0, 0, 0, 0))
+        h = with_logical_constraint(h, "act_batch", "act_seq", "act_embed")
+        return h, (k_l, v_l)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"])
+    )
+    cache = {"k": k_new, "v": v_new,
+             "pos": jnp.full((b,), s, jnp.int32)}
+    h = L.rmsnorm_apply(params["ln_f"], x[:, -1:], cfg.norm_eps)
+    logits = L.logits_from_hidden(head_weights(params, cfg), cfg, h)
+    return cache, logits[:, 0]
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens):
+    """One decode step.  tokens: (b,) int32; cache["pos"]: (b,) per-seq
+    lengths.  Returns (cache, logits (b, vocab))."""
+    b = tokens.shape[0]
+    pos = cache["pos"]                                   # (b,)
+    x = L.embed_tokens(params["embed"], cfg, tokens[:, None])  # (b, 1, d)
+
+    def body(h, xs):
+        p, k_l, v_l = xs
+        hn = L.rmsnorm_apply(p["ln1"], h, cfg.norm_eps)
+        q, k, v = L.attention_qkv(p["attn"], cfg, hn, pos[:, None])
+        # write this token's K/V at each sequence's own position
+        k_l = _scatter_kv(k_l, k.astype(k_l.dtype), pos)
+        v_l = _scatter_kv(v_l, v.astype(v_l.dtype), pos)
+        o = L.run_decode_attention(cfg, q[:, 0], k_l, v_l, pos)
+        h = h + (o @ p["attn"]["wo"])[:, None, :]
+        hn = L.rmsnorm_apply(p["ln2"], h, cfg.norm_eps)
+        h = h + L.mlp_apply(p["mlp"], cfg, hn)
+        return h, (k_l, v_l)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"])
+    )
+    cache = {"k": k_new, "v": v_new, "pos": pos + 1}
+    h = L.rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
+    logits = L.logits_from_hidden(head_weights(params, cfg), cfg, h)
+    return cache, logits[:, 0]
+
+
+def _scatter_kv(cache_l, kv_new, pos):
+    """cache_l: (b, S, hkv, d); kv_new: (b, 1, hkv, d); pos: (b,)."""
+    def upd(c, k, p):
+        return jax.lax.dynamic_update_slice(c, k, (p, 0, 0))
+    return jax.vmap(upd)(cache_l, kv_new, pos)

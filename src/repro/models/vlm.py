@@ -1,0 +1,101 @@
+"""VLM (phi-3-vision family): phi3-mini text backbone + CLIP patch stub.
+
+The vision frontend is a STUB per the brief: `batch["patch_embeds"]`
+carries precomputed patch embeddings (b, num_patches, frontend_dim).
+A 2-layer MLP projector maps them into the text embedding space; the
+image tokens are prepended to the text sequence (causal over the whole
+sequence).  Loss is computed on text positions only.
+
+Decode reuses the dense-transformer decode path — a VLM params tree is a
+superset of the transformer tree (embed/layers/ln_f/head + img_proj), and
+after prefill the cache is modality-agnostic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.distribution.sharding import with_logical_constraint
+
+
+def init(key, cfg: ModelConfig):
+    kt, k1, k2 = jax.random.split(key, 3)
+    params = T.init(kt, cfg)
+    params["img_proj"] = {
+        "w1": L._normal(k1, (cfg.frontend_dim, cfg.d_model), 0.02, cfg.params_dtype),
+        "w2": L._normal(k2, (cfg.d_model, cfg.d_model), 0.02, cfg.params_dtype),
+    }
+    return params
+
+
+def param_axes(cfg: ModelConfig):
+    axes = T.param_axes(cfg)
+    axes["img_proj"] = {"w1": ("norm", "embed"), "w2": ("embed", "norm")}
+    return axes
+
+
+def _project_patches(params, cfg: ModelConfig, patch_embeds):
+    h = patch_embeds.astype(cfg.compute_dtype) @ params["img_proj"]["w1"]
+    h = jax.nn.gelu(h)
+    h = h @ params["img_proj"]["w2"]
+    return with_logical_constraint(h, "act_batch", "act_patch", "act_embed")
+
+
+def _fused_input(params, cfg: ModelConfig, batch):
+    img = _project_patches(params, cfg, batch["patch_embeds"])    # (b, p, d)
+    txt = L.embed_tokens(params["embed"], cfg, batch["tokens"])   # (b, s, d)
+    x = jnp.concatenate([img, txt], axis=1)
+    return with_logical_constraint(x, "act_batch", "act_seq", "act_embed")
+
+
+def forward(params, cfg: ModelConfig, batch):
+    x = _fused_input(params, cfg, batch)
+    positions = jnp.arange(x.shape[1])[None, :]
+    h = T.forward_hidden(params, cfg, x, positions)
+    return L.logits_from_hidden(T.head_weights(params, cfg), cfg, h)
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    """CE on text positions; image positions are ignored (-1 labels)."""
+    x = _fused_input(params, cfg, batch)
+    positions = jnp.arange(x.shape[1])[None, :]
+    h = T.forward_hidden(params, cfg, x, positions)
+    p = batch["patch_embeds"].shape[1]
+    img_ignore = jnp.full(batch["tokens"].shape[:1] + (p,), -1, jnp.int32)
+    labels = jnp.concatenate([img_ignore, batch["labels"]], axis=1)
+    return L.lm_loss(h, T.head_weights(params, cfg), cfg, labels)
+
+
+# ---------------------------------------------------------------- serving
+
+init_cache = T.init_cache
+cache_axes = T.cache_axes
+decode_step = T.decode_step     # params tree is a transformer superset
+
+
+def prefill(params, cfg: ModelConfig, batch, cache):
+    """Multimodal prefill: image patches + prompt tokens fill the cache."""
+    x = _fused_input(params, cfg, batch)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+
+    def body(h, xs):
+        p, k_l, v_l = xs
+        hn = L.rmsnorm_apply(p["ln1"], h, cfg.norm_eps)
+        q, k, v = L.attention_qkv(p["attn"], cfg, hn, positions)
+        o = L.run_attention(cfg, q, k, v).reshape(b, s, cfg.q_dim)
+        h = h + o @ p["attn"]["wo"]
+        hn = L.rmsnorm_apply(p["ln2"], h, cfg.norm_eps)
+        h = h + L.mlp_apply(p["mlp"], cfg, hn)
+        k_l = jax.lax.dynamic_update_slice(k_l, k.astype(k_l.dtype), (0, 0, 0, 0))
+        v_l = jax.lax.dynamic_update_slice(v_l, v.astype(v_l.dtype), (0, 0, 0, 0))
+        return h, (k_l, v_l)
+
+    x, (k_new, v_new) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    cache = {"k": k_new, "v": v_new, "pos": jnp.full((b,), s, jnp.int32)}
+    h = L.rmsnorm_apply(params["ln_f"], x[:, -1:], cfg.norm_eps)
+    logits = L.logits_from_hidden(T.head_weights(params, cfg), cfg, h)
+    return cache, logits[:, 0]

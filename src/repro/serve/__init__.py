@@ -1,0 +1,10 @@
+from repro.serve.kv_cache import (
+    PagedKVArena,
+    paged_write,
+    paged_decode_attention,
+    gather_pages,
+    insert_slot,
+    clear_slot,
+)
+from repro.serve.serve_step import make_serve_fns, sample_logits, init_cache
+from repro.serve.engine import ServingEngine, Request, Result

@@ -1,0 +1,190 @@
+"""Continuous-batching serving engine over the UniMem page pool.
+
+The engine owns `max_batch` decode slots backed by ONE family cache (the
+contiguous layout) and admits requests against a UniMem page pool sized
+to the real KV budget — a request is admitted only if the pool can cover
+its max footprint (prompt + max_new_tokens), which is exactly the paper's
+"single pooled memory, explicit allocation" discipline applied to
+serving.  Slots that finish free their pages back to the pool.
+
+Loop shape (classic continuous batching):
+
+    while work:
+        admit: free slot + admissible request -> prefill(batch=1) -> insert
+        step:  one fused decode step over ALL active slots
+        retire: eos / token-budget slots -> emit result, free pages
+
+Prefill is per-request (sequences arrive at different lengths; padding a
+joint prefill wastes quadratic attention), decode is fused across slots.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.unimem import UniMemPool, SequencePageTable, UniMemOOM
+from repro.models.config import ModelConfig
+from repro.models import registry
+from repro.serve.kv_cache import insert_slot, clear_slot
+from repro.serve.serve_step import make_serve_fns
+from repro.utils.logging import get_logger
+
+log = get_logger("engine")
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                 # (prompt_len,) int32
+    max_new_tokens: int = 32
+    eos_token: int = -1                # -1 = never (synthetic serving)
+
+    @property
+    def max_footprint(self) -> int:
+        return len(self.prompt) + self.max_new_tokens
+
+
+@dataclass
+class Result:
+    uid: int
+    tokens: list[int]
+    prompt_len: int
+    admitted_at: float = 0.0
+    finished_at: float = 0.0
+
+    @property
+    def latency_s(self) -> float:
+        return self.finished_at - self.admitted_at
+
+
+@dataclass
+class _Slot:
+    request: Request
+    pages: SequencePageTable
+    generated: list[int] = field(default_factory=list)
+    last_token: int = 0
+    admitted_at: float = 0.0
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
+                 max_seq: int = 1024, page_size: int = 16,
+                 pool_pages: int | None = None, temperature: float = 0.0):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        fam = registry.get_family(cfg)
+        if fam.decode_step is None:
+            raise ValueError(f"family {cfg.family!r} cannot serve (no decode)")
+        self.fam = fam
+        self.cache = fam.init_cache(cfg, max_batch, max_seq)
+        self.cache_ax = fam.cache_axes()
+        # UniMem pool: default budget = the slots' worth of pages.
+        pool_pages = pool_pages or (max_batch * max_seq) // page_size
+        self.pool = UniMemPool(pool_pages, page_size)
+        self.prefill_fn, self.decode_fn, _ = make_serve_fns(
+            cfg, temperature=temperature)
+        self.pending: list[Request] = []
+        self.slots: dict[int, _Slot] = {}        # slot index -> state
+        self.results: list[Result] = []
+        self.steps = 0
+        self.tokens_out = 0
+
+    # ------------------------------------------------------------ intake
+
+    def submit(self, request: Request):
+        if request.max_footprint > self.max_seq:
+            raise ValueError(
+                f"request {request.uid}: footprint {request.max_footprint} "
+                f"> max_seq {self.max_seq}")
+        self.pending.append(request)
+
+    def _free_slots(self) -> list[int]:
+        return [i for i in range(self.max_batch) if i not in self.slots]
+
+    # ------------------------------------------------------------- admit
+
+    def _admit(self):
+        free = self._free_slots()
+        while free and self.pending:
+            req = self.pending[0]
+            if not self.pool.can_admit(req.max_footprint):
+                break                            # UniMem backpressure
+            self.pending.pop(0)
+            slot = free.pop(0)
+            pages = SequencePageTable(self.pool)
+            pages.append_tokens(req.max_footprint)
+            # batch=1 prefill, then insert into the shared cache at `slot`
+            one_cache = self.fam.init_cache(self.cfg, 1, self.max_seq)
+            batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None, :]}
+            one_cache, logits = self.prefill_fn(self.params, batch, one_cache)
+            first = int(jnp.argmax(logits[0]))
+            self.cache = insert_slot(self.cache, one_cache, slot, self.cache_ax)
+            self.slots[slot] = _Slot(
+                request=req, pages=pages, generated=[first],
+                last_token=first, admitted_at=time.perf_counter())
+
+    # ------------------------------------------------------------- step
+
+    def _decode_active(self):
+        if not self.slots:
+            return
+        tokens = np.zeros((self.max_batch,), np.int32)
+        for i, s in self.slots.items():
+            tokens[i] = s.last_token
+        key = jax.random.key(self.steps)
+        self.cache, nxt, _ = self.decode_fn(
+            self.params, self.cache, jnp.asarray(tokens), key)
+        nxt = np.asarray(nxt)
+        for i, s in list(self.slots.items()):
+            tok = int(nxt[i])
+            s.generated.append(tok)
+            s.last_token = tok
+            self.tokens_out += 1
+
+    def _retire(self):
+        for i, s in list(self.slots.items()):
+            done = (len(s.generated) >= s.request.max_new_tokens
+                    or s.generated[-1] == s.request.eos_token)
+            if not done:
+                continue
+            self.results.append(Result(
+                uid=s.request.uid, tokens=list(s.generated),
+                prompt_len=len(s.request.prompt),
+                admitted_at=s.admitted_at, finished_at=time.perf_counter()))
+            s.pages.release()                   # pages back to the one pool
+            self.cache = clear_slot(self.cache, i, self.cache_ax)
+            del self.slots[i]
+
+    def step(self):
+        self._admit()
+        self._decode_active()
+        self.steps += 1
+        self._retire()
+
+    def run(self, max_steps: int = 10_000) -> list[Result]:
+        t0 = time.perf_counter()
+        while (self.pending or self.slots) and self.steps < max_steps:
+            self.step()
+        dt = time.perf_counter() - t0
+        if dt > 0:
+            log.info("engine: %d results, %d tokens, %.1f tok/s, pool util %.2f",
+                     len(self.results), self.tokens_out, self.tokens_out / dt,
+                     self.pool.stats().utilization)
+        return self.results
+
+    # ------------------------------------------------------------- stats
+
+    def stats(self) -> dict:
+        return {
+            "steps": self.steps,
+            "tokens_out": self.tokens_out,
+            "active_slots": len(self.slots),
+            "pending": len(self.pending),
+            "pool": self.pool.stats().__dict__,
+        }

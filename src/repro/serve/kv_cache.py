@@ -1,0 +1,168 @@
+"""KV caches for serving: contiguous slots + the UniMem paged arena.
+
+Two layouts:
+
+* **Contiguous** — the family cache (`init_cache`): per-slot (batch-row)
+  K/V of fixed max_seq.  Simple, works for every family; memory is
+  `max_batch * max_seq` whether or not sequences are that long.
+
+* **Paged (UniMem)** — ONE device arena of KV pages shared by every
+  sequence (the paper's single pooled memory form): K/V shaped
+  (layers, num_pages, page_size, kv_heads, head_dim); each sequence maps
+  logical pages -> physical pages through a block table.  Memory is
+  proportional to TOKENS IN FLIGHT, not slots x max_seq, and prefix
+  sharing (pool refcounts) is free.  `core/unimem.py` is the host-side
+  allocator; this module owns the device arrays + the gather/scatter and
+  paged-attention device code.
+
+Tests assert paged decode attention == contiguous decode attention.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.unimem import UniMemPool, SequencePageTable
+from repro.models.config import ModelConfig
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------ paged arena
+
+@dataclass
+class PagedKVArena:
+    """Device-side UniMem arena + host-side page allocator."""
+    cfg: ModelConfig
+    num_pages: int
+    page_size: int
+    k: jax.Array = field(default=None, repr=False)   # (L, P, page, hkv, hd)
+    v: jax.Array = field(default=None, repr=False)
+    pool: UniMemPool = field(default=None, repr=False)
+
+    def __post_init__(self):
+        c = self.cfg
+        shape = (c.num_layers, self.num_pages, self.page_size,
+                 c.num_kv_heads, c.head_dim)
+        if self.k is None:
+            self.k = jnp.zeros(shape, c.compute_dtype)
+            self.v = jnp.zeros(shape, c.compute_dtype)
+        if self.pool is None:
+            self.pool = UniMemPool(self.num_pages, self.page_size)
+
+    @property
+    def bytes(self) -> int:
+        return 2 * self.k.size * self.k.dtype.itemsize
+
+    def new_sequence(self) -> SequencePageTable:
+        return SequencePageTable(self.pool)
+
+    def block_table(self, seqs: list[SequencePageTable], max_pages: int) -> np.ndarray:
+        """(b, max_pages) physical page ids, -padded with 0 (masked by length)."""
+        bt = np.zeros((len(seqs), max_pages), np.int32)
+        for i, s in enumerate(seqs):
+            bt[i, :len(s.pages)] = s.pages
+        return bt
+
+
+def paged_write(k_arena, v_arena, k_new, v_new, block_table, positions):
+    """Write one token's K/V for every sequence into its page.
+
+    k_arena/v_arena: (L, P, page, hkv, hd); k_new/v_new: (L, b, hkv, hd);
+    block_table: (b, max_pages) int32; positions: (b,) token index being
+    written.  Returns updated arenas.
+    """
+    page_size = k_arena.shape[2]
+    page_idx = positions // page_size                      # (b,)
+    offset = positions % page_size                         # (b,)
+    phys = jnp.take_along_axis(block_table, page_idx[:, None], axis=1)[:, 0]
+
+    def write_one(arena, new):
+        # arena: (L, P, page, hkv, hd); new: (L, b, hkv, hd)
+        def per_seq(ar, nb, pg, off):
+            # ar: (L,P,page,hkv,hd) ; nb: (L,hkv,hd)
+            return ar.at[:, pg, off].set(nb)
+        def body(ar, i):
+            return per_seq(ar, new[:, i], phys[i], offset[i]), None
+        arena, _ = jax.lax.scan(body, arena, jnp.arange(new.shape[1]))
+        return arena
+
+    return write_one(k_arena, k_new), write_one(v_arena, v_new)
+
+
+def gather_pages(arena, block_table):
+    """arena: (L, P, page, hkv, hd); block_table: (b, max_pages)
+    -> contiguous view (L, b, max_pages*page, hkv, hd)."""
+    L, _, page, hkv, hd = arena.shape
+    b, mp = block_table.shape
+    g = arena[:, block_table]                       # (L, b, mp, page, hkv, hd)
+    return g.reshape(L, b, mp * page, hkv, hd)
+
+
+def paged_decode_attention(q, k_arena, v_arena, block_table, positions, layer):
+    """Single-token paged attention for one layer.
+
+    q: (b, hq, hd); arenas (L, P, page, hkv, hd); positions: (b,) index of
+    the newest token (inclusive).  Returns (b, hq*hd).
+
+    The gather keeps pages in place (near-memory: pages are the resident
+    DRAM arrays; the query is what travels) — XLA lowers the page gather
+    to dynamic-slices into the single arena, never copying the pool.
+    """
+    b, hq, hd = q.shape
+    k_pages = gather_pages(k_arena[layer:layer + 1], block_table)[0]
+    v_pages = gather_pages(v_arena[layer:layer + 1], block_table)[0]
+    S = k_pages.shape[1]
+    hkv = k_pages.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, hd)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k_pages).astype(jnp.float32)
+    s = s / math.sqrt(hd)
+    mask = jnp.arange(S)[None, :] <= positions[:, None]
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v_pages.dtype)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, v_pages)
+    return o.reshape(b, hq * hd)
+
+
+# ------------------------------------------------------- contiguous slots
+
+def batch_axis_index(axes: tuple) -> int:
+    """Index of the batch dim in a cache leaf's logical axes tuple."""
+    return axes.index("act_batch") if "act_batch" in axes else 0
+
+
+def _zip_axes(cache, cache_axes):
+    """(leaves, axes_tuples, treedef) with axes subtrees kept as tuples."""
+    leaves, treedef = jax.tree.flatten(cache)
+    axes = treedef.flatten_up_to(cache_axes)
+    return leaves, axes, treedef
+
+
+def insert_slot(cache, slot_cache, slot: int, cache_axes):
+    """Write a batch=1 cache into slot `slot` of a batched cache."""
+    leaves, axes, treedef = _zip_axes(cache, cache_axes)
+    new_leaves = treedef.flatten_up_to(slot_cache)
+    out = []
+    for c, n, ax in zip(leaves, new_leaves, axes):
+        i = batch_axis_index(tuple(ax))
+        idx = [slice(None)] * c.ndim
+        idx[i] = slot
+        out.append(c.at[tuple(idx)].set(jnp.squeeze(n, axis=i).astype(c.dtype)))
+    return jax.tree.unflatten(treedef, out)
+
+
+def clear_slot(cache, slot: int, cache_axes):
+    """Zero a finished slot (pos -> 0 keeps it inert in masked attention)."""
+    leaves, axes, treedef = _zip_axes(cache, cache_axes)
+    out = []
+    for c, ax in zip(leaves, axes):
+        i = batch_axis_index(tuple(ax))
+        idx = [slice(None)] * c.ndim
+        idx[i] = slot
+        out.append(c.at[tuple(idx)].set(jnp.zeros((), c.dtype)))
+    return jax.tree.unflatten(treedef, out)

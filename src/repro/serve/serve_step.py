@@ -1,0 +1,66 @@
+"""Jit-compiled serving steps: prefill, decode, sampling.
+
+`make_serve_fns(cfg)` returns jitted `prefill(params, batch, cache)` and
+`decode(params, cache, tokens, key, temperature)` closures for any family
+with a decode path.  Sampling is greedy at temperature 0, categorical
+otherwise; both are pure functions of an explicit PRNG key (reproducible
+serving).  `decode_many` fuses N decode steps into one `lax.scan` — one
+dispatch for a whole token budget (the decode analogue of the paper's
+UCE sequencing a fixed schedule without host round-trips).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import registry
+
+
+def sample_logits(logits, key, temperature: float):
+    """logits: (b, V) -> tokens (b,)."""
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits.astype(jnp.float32) / temperature
+    return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+
+
+def make_serve_fns(cfg: ModelConfig, *, temperature: float = 0.0):
+    fam = registry.get_family(cfg)
+    if fam.decode_step is None:
+        raise ValueError(f"family {cfg.family!r} has no decode path")
+
+    @jax.jit
+    def prefill(params, batch, cache):
+        cache, logits = fam.prefill(params, cfg, batch, cache)
+        return cache, logits
+
+    @jax.jit
+    def decode(params, cache, tokens, key):
+        cache, logits = fam.decode_step(params, cfg, cache, tokens)
+        key, sub = jax.random.split(key)
+        next_tokens = sample_logits(logits, sub, temperature)
+        return cache, next_tokens, key
+
+    @partial(jax.jit, static_argnames=("num_steps",))
+    def decode_many(params, cache, tokens, key, num_steps: int):
+        """Scan `num_steps` decode steps; returns (cache, tokens (b, n))."""
+        def body(carry, _):
+            cache, toks, key = carry
+            cache, logits = fam.decode_step(params, cfg, cache, toks)
+            key, sub = jax.random.split(key)
+            nxt = sample_logits(logits, sub, temperature)
+            return (cache, nxt, key), nxt
+
+        (cache, _, key), out = jax.lax.scan(
+            body, (cache, tokens, key), None, length=num_steps)
+        return cache, jnp.moveaxis(out, 0, 1), key
+
+    return prefill, decode, decode_many
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    fam = registry.get_family(cfg)
+    return fam.init_cache(cfg, batch, max_seq)

@@ -1,0 +1,3 @@
+from repro.train.optimizer import OptimizerConfig, make_optimizer
+from repro.train.train_step import TrainState, make_train_step, init_train_state
+from repro.train.checkpoint import CheckpointManager

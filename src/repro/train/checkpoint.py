@@ -1,0 +1,190 @@
+"""Fault-tolerant checkpointing: atomic, async, retention, manifest.
+
+Layout (one directory per step):
+
+    <root>/step_00001200/
+        arrays.npz        every leaf as host numpy, flat dotted names
+        manifest.json     step, leaf names/shapes/dtypes, mesh + user metadata
+    <root>/LATEST          text file -> "step_00001200"  (atomic pointer)
+
+Crash-safety: the step directory is written under a `tmp.` prefix and
+renamed into place (rename is atomic on POSIX); LATEST is updated last,
+also via rename.  A crash mid-save leaves only a tmp dir that the next
+`CheckpointManager` sweep garbage-collects — never a half checkpoint that
+restore could pick up.
+
+Async: `save()` snapshots device arrays to host, then hands the file I/O
+to a background thread; `wait()` joins it.  Retention keeps the newest
+`keep` checkpoints plus every multiple of `keep_period` (milestones).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any
+
+import numpy as np
+import jax
+
+from repro.utils.tree import tree_flatten_with_names
+from repro.utils.logging import get_logger
+
+log = get_logger("checkpoint")
+
+_STEP_RE = re.compile(r"^step_(\d{8})$")
+
+
+def _step_dirname(step: int) -> str:
+    return f"step_{step:08d}"
+
+
+@dataclass
+class CheckpointManager:
+    root: str
+    keep: int = 3
+    keep_period: int = 0              # 0 = no milestones
+    async_save: bool = True
+    _thread: threading.Thread | None = field(default=None, repr=False)
+
+    def __post_init__(self):
+        os.makedirs(self.root, exist_ok=True)
+        self._gc_tmp()
+
+    # ------------------------------------------------------------- save
+
+    def save(self, state, step: int | None = None, metadata: dict | None = None):
+        """Snapshot `state` (any pytree; TrainState works) and persist it."""
+        self.wait()
+        if step is None:
+            step = int(np.asarray(jax.tree.leaves(state)[0])) \
+                if hasattr(state, "step") is False else int(np.asarray(state.step))
+        # Snapshot to host NOW (donation/mutation safety); I/O can be async.
+        named = tree_flatten_with_names(state)
+        host = {name: np.asarray(jax.device_get(leaf)) for name, leaf in named}
+        manifest = {
+            "step": int(step),
+            "time": time.time(),
+            "leaves": {
+                name: {"shape": list(a.shape), "dtype": str(a.dtype)}
+                for name, a in host.items()
+            },
+            "metadata": metadata or {},
+        }
+        if self.async_save:
+            self._thread = threading.Thread(
+                target=self._write, args=(int(step), host, manifest), daemon=True)
+            self._thread.start()
+        else:
+            self._write(int(step), host, manifest)
+
+    def _write(self, step: int, host: dict, manifest: dict):
+        final = os.path.join(self.root, _step_dirname(step))
+        tmp = os.path.join(self.root, f"tmp.{_step_dirname(step)}.{os.getpid()}")
+        os.makedirs(tmp, exist_ok=True)
+        try:
+            np.savez(os.path.join(tmp, "arrays.npz"),
+                     **{k: v for k, v in host.items()})
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f, indent=1)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)                      # atomic commit
+            self._point_latest(step)
+            self._retain()
+            log.info("saved checkpoint step=%d -> %s", step, final)
+        except Exception:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+
+    def _point_latest(self, step: int):
+        tmp = os.path.join(self.root, f"LATEST.tmp.{os.getpid()}")
+        with open(tmp, "w") as f:
+            f.write(_step_dirname(step))
+        os.rename(tmp, os.path.join(self.root, "LATEST"))
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # ---------------------------------------------------------- restore
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.root):
+            m = _STEP_RE.match(name)
+            if m and os.path.exists(os.path.join(self.root, name, "manifest.json")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        latest = os.path.join(self.root, "LATEST")
+        if os.path.exists(latest):
+            with open(latest) as f:
+                m = _STEP_RE.match(f.read().strip())
+            if m:
+                step = int(m.group(1))
+                if step in self.all_steps():
+                    return step
+        steps = self.all_steps()                  # pointer lost: fall back
+        return steps[-1] if steps else None
+
+    def restore_arrays(self, step: int | None = None) -> tuple[dict, dict]:
+        """-> ({dotted_name: np.ndarray}, manifest).  Raw host-side load."""
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.root}")
+        d = os.path.join(self.root, _step_dirname(step))
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        with np.load(os.path.join(d, "arrays.npz")) as z:
+            arrays = {k: z[k] for k in z.files}
+        return arrays, manifest
+
+    def restore(self, like, step: int | None = None, shardings=None):
+        """Restore into the structure of `like` (pytree of arrays or
+        ShapeDtypeStructs).  With `shardings` (a matching pytree of
+        NamedShardings) each leaf is placed directly onto its shards —
+        this is also the elastic-resume path (any mesh shape works, since
+        checkpoints store full, unsharded arrays)."""
+        arrays, manifest = self.restore_arrays(step)
+        named = tree_flatten_with_names(like)
+        leaves = []
+        for name, ref in named:
+            if name not in arrays:
+                raise KeyError(f"checkpoint missing leaf {name!r}")
+            a = arrays[name]
+            if tuple(a.shape) != tuple(ref.shape):
+                raise ValueError(
+                    f"leaf {name!r}: checkpoint shape {a.shape} != expected {ref.shape}")
+            leaves.append(a.astype(ref.dtype))
+        treedef = jax.tree.structure(like)
+        tree = jax.tree.unflatten(treedef, leaves)
+        if shardings is not None:
+            tree = jax.tree.map(jax.device_put, tree, shardings)
+        return tree, manifest
+
+    # --------------------------------------------------------- retention
+
+    def _retain(self):
+        steps = self.all_steps()
+        if len(steps) <= self.keep:
+            return
+        protect = set(steps[-self.keep:])
+        if self.keep_period:
+            protect |= {s for s in steps if s % self.keep_period == 0}
+        for s in steps:
+            if s not in protect:
+                shutil.rmtree(os.path.join(self.root, _step_dirname(s)),
+                              ignore_errors=True)
+
+    def _gc_tmp(self):
+        for name in os.listdir(self.root):
+            if name.startswith("tmp.") or name.startswith("LATEST.tmp"):
+                path = os.path.join(self.root, name)
+                (shutil.rmtree if os.path.isdir(path) else os.remove)(path)

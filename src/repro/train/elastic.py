@@ -1,0 +1,78 @@
+"""Elastic scaling: resume a run on a different mesh / device count.
+
+Checkpoints store FULL (unsharded) arrays, so any mesh can restore them —
+the work is in keeping the optimization trajectory identical:
+
+  * the GLOBAL batch is the contract; when the data-parallel width
+    changes, `elastic_plan` recomputes per-device batch and grad-accum so
+    `global_batch = dp_width * per_device_batch * grad_accum` still holds;
+  * learning-rate schedule is step-indexed (not epoch-indexed), so the
+    restored `step` keeps the schedule aligned;
+  * optimizer moments restore like parameters (full arrays, re-placed
+    under the new mesh's shardings).
+
+A node-failure recovery is the same flow with a smaller mesh: the
+launcher detects the failure, re-forms the mesh from the survivors, and
+calls `elastic_restore`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.train.checkpoint import CheckpointManager
+from repro.train.train_step import TrainState, state_shapes, state_shardings
+from repro.utils.logging import get_logger
+
+log = get_logger("elastic")
+
+
+class ElasticError(RuntimeError):
+    pass
+
+
+@dataclass(frozen=True)
+class ElasticPlan:
+    global_batch: int
+    dp_width: int                 # data-parallel width (pod*data axes)
+    per_device_batch: int
+    grad_accum: int
+
+    @property
+    def device_batch_total(self) -> int:
+        return self.dp_width * self.per_device_batch
+
+
+def elastic_plan(global_batch: int, dp_width: int,
+                 max_per_device_batch: int = 0) -> ElasticPlan:
+    """Pick (per_device_batch, grad_accum) preserving the global batch.
+
+    Strategy: largest per-device batch that divides cleanly (optionally
+    capped by memory via `max_per_device_batch`), remainder becomes grad
+    accumulation.  Raises if global_batch is not divisible by dp_width.
+    """
+    if global_batch % dp_width != 0:
+        raise ElasticError(
+            f"global_batch {global_batch} not divisible by dp width {dp_width}; "
+            f"choose a different mesh or pad the batch")
+    per_dp = global_batch // dp_width
+    pdb = per_dp if not max_per_device_batch else min(per_dp, max_per_device_batch)
+    while per_dp % pdb != 0:
+        pdb -= 1
+    return ElasticPlan(
+        global_batch=global_batch, dp_width=dp_width,
+        per_device_batch=pdb, grad_accum=per_dp // pdb,
+    )
+
+
+def elastic_restore(mgr: CheckpointManager, cfg, optimizer, mesh,
+                    step: int | None = None):
+    """Restore a TrainState onto `mesh` (any shape).  Returns
+    (state, manifest).  Must be called under `use_mesh(mesh)` or with the
+    mesh passed explicitly so shardings resolve."""
+    shapes = state_shapes(cfg, optimizer)
+    shardings = state_shardings(cfg, optimizer, mesh, shapes=shapes)
+    state, manifest = mgr.restore(shapes, step=step, shardings=shardings)
+    saved_mesh = manifest.get("metadata", {}).get("mesh")
+    log.info("elastic restore: step=%s saved_mesh=%s -> new mesh %s",
+             manifest["step"], saved_mesh, dict(mesh.shape))
+    return state, manifest

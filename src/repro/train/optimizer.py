@@ -1,0 +1,204 @@
+"""Optimizers, from scratch (no optax): AdamW, Adafactor, SGD-momentum.
+
+ZeRO-style partitioning falls out of the sharding rules: optimizer state
+mirrors parameter sharding (FSDP over "data" + TP over "model"), so the
+moments are already fully sharded — the JAX analogue of ZeRO-3.
+Adafactor's factored second moment is the memory lever for the 340B-class
+configs (moments go from O(params) to O(rows+cols)).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"                  # adamw | adafactor | sgdm
+    peak_lr: float = 3e-4
+    end_lr_frac: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    # adafactor
+    min_dim_size_to_factor: int = 128
+    decay_offset: float = 1e-3
+
+
+def lr_schedule(cfg: OptimizerConfig, step):
+    """Linear warmup -> cosine decay to end_lr_frac * peak."""
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * step / max(1, cfg.warmup_steps)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = cfg.peak_lr * (cfg.end_lr_frac
+                         + (1 - cfg.end_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    config: OptimizerConfig
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, Any], tuple[Any, Any]]  # (g, state, p, step)
+    # (param_axes, opt_state_shapes) -> opt-state logical-axes tree
+    state_axes: Callable[[Any, Any], Any]
+
+
+def _lookup(tree, path):
+    for k in path:
+        key = k.key if hasattr(k, "key") else k.idx
+        tree = tree[key]
+    return tree
+
+
+def _split_pairs(out):
+    is_pair = lambda x: isinstance(x, tuple)
+    a = jax.tree.map(lambda o: o[0], out, is_leaf=is_pair)
+    b = jax.tree.map(lambda o: o[1], out, is_leaf=is_pair)
+    return a, b
+
+
+# --------------------------------------------------------------------- AdamW
+
+def _adamw(cfg: OptimizerConfig) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        lr = lr_schedule(cfg, step)
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1 - cfg.b1 ** t
+        bc2 = 1 - cfg.b2 ** t
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = cfg.b1 * m + (1 - cfg.b1) * g
+            v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+            if p.ndim >= 2:                      # decoupled wd on matrices only
+                u = u + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        is3 = lambda x: isinstance(x, tuple)
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=is3)
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=is3)
+        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=is3)
+        return new_p, {"m": new_m, "v": new_v}
+
+    def state_axes(param_axes, state_shapes=None):
+        return {"m": param_axes, "v": param_axes}
+
+    return Optimizer(cfg, init, update, state_axes)
+
+
+# ----------------------------------------------------------------- Adafactor
+
+def _factored(shape, min_size) -> bool:
+    return len(shape) >= 2 and shape[-1] >= min_size and shape[-2] >= min_size
+
+
+def _adafactor(cfg: OptimizerConfig) -> Optimizer:
+    def init(params):
+        def one(p):
+            if _factored(p.shape, cfg.min_dim_size_to_factor):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": jax.tree.map(one, params)}
+
+    def update(grads, state, params, step):
+        lr = lr_schedule(cfg, step)
+        t = step.astype(jnp.float32) + 1.0
+        beta2 = 1.0 - t ** (-0.8)                       # schedule from the paper
+
+        def upd(g, f, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + 1e-30
+            if "vr" in f:
+                vr = beta2 * f["vr"] + (1 - beta2) * g2.mean(axis=-1)
+                vc = beta2 * f["vc"] + (1 - beta2) * g2.mean(axis=-2)
+                r = vr / jnp.maximum(vr.mean(axis=-1, keepdims=True), 1e-30)
+                u = g / (jnp.sqrt(r)[..., None] * jnp.sqrt(vc)[..., None, :] + cfg.eps)
+                nf = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * f["v"] + (1 - beta2) * g2
+                u = g / (jnp.sqrt(v) + cfg.eps)
+                nf = {"v": v}
+            # update clipping (RMS <= 1) as in the adafactor paper
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms)
+            if p.ndim >= 2:
+                u = u + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), nf
+
+        out = jax.tree_util.tree_map_with_path(
+            lambda path, g, p: upd(g, _lookup(state["f"], path), p), grads, params
+        )
+        new_p, new_f = _split_pairs(out)
+        return new_p, {"f": new_f}
+
+    def state_axes(param_axes, state_shapes):
+        """Factored leaves drop dims: vr drops the last, vc drops dim -2."""
+        def one(path, ax):
+            ax = tuple(ax)
+            sub = _lookup(state_shapes["f"], path)
+            if "vr" in sub:
+                return {"vr": ax[:-1], "vc": ax[:-2] + ax[-1:]}
+            return {"v": ax}
+
+        return {"f": jax.tree_util.tree_map_with_path(
+            one, param_axes, is_leaf=lambda x: isinstance(x, tuple))}
+
+    return Optimizer(cfg, init, update, state_axes)
+
+
+# --------------------------------------------------------------------- SGDm
+
+def _sgdm(cfg: OptimizerConfig) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        lr = lr_schedule(cfg, step)
+
+        def upd(g, m, p):
+            m = cfg.b1 * m + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * m).astype(p.dtype), m
+
+        out = jax.tree.map(upd, grads, state["m"], params)
+        new_p, new_m = _split_pairs(out)
+        return new_p, {"m": new_m}
+
+    def state_axes(param_axes, state_shapes=None):
+        return {"m": param_axes}
+
+    return Optimizer(cfg, init, update, state_axes)
+
+
+def make_optimizer(cfg: OptimizerConfig) -> Optimizer:
+    return {"adamw": _adamw, "adafactor": _adafactor, "sgdm": _sgdm}[cfg.name](cfg)

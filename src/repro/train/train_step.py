@@ -1,0 +1,165 @@
+"""Training step: grad-accumulation scan, clipping, optimizer update.
+
+The step is one jit-compiled function over a `TrainState` pytree.  Grad
+accumulation splits the global batch into `grad_accum` microbatches and
+scans over them (live memory = one microbatch of activations); remat is
+the model's own policy (cfg.remat).  Optimizer-state sharding mirrors the
+parameter sharding (ZeRO-3 analogue) via `state_shardings`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import registry
+from repro.train.optimizer import Optimizer, clip_by_global_norm
+from repro.distribution.sharding import param_shardings, named_sharding
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class TrainState:
+    step: jax.Array            # i32 scalar
+    params: Any
+    opt_state: Any
+
+    def replace(self, **kw) -> "TrainState":
+        return dataclasses.replace(self, **kw)
+
+
+def init_train_state(key, cfg: ModelConfig, optimizer: Optimizer) -> TrainState:
+    fam = registry.get_family(cfg)
+    params = fam.init(key, cfg)
+    return TrainState(
+        step=jnp.zeros((), jnp.int32),
+        params=params,
+        opt_state=optimizer.init(params),
+    )
+
+
+def state_shapes(cfg: ModelConfig, optimizer: Optimizer) -> TrainState:
+    """TrainState of ShapeDtypeStructs — no allocation (dry-run path)."""
+    shapes = jax.eval_shape(
+        lambda k: init_train_state(k, cfg, optimizer),
+        jax.ShapeDtypeStruct((2,), jnp.uint32),
+    )
+    return shapes
+
+
+def state_logical_axes(cfg: ModelConfig, optimizer: Optimizer,
+                       shapes: TrainState | None = None) -> TrainState:
+    """Logical-axes pytree matching TrainState (step is replicated)."""
+    fam = registry.get_family(cfg)
+    p_axes = fam.param_axes(cfg)
+    shapes = shapes or state_shapes(cfg, optimizer)
+    o_axes = optimizer.state_axes(p_axes, shapes.opt_state)
+    return TrainState(step=(), params=p_axes, opt_state=o_axes)
+
+
+def state_shardings(cfg: ModelConfig, optimizer: Optimizer, mesh=None,
+                    rules=None, shapes: TrainState | None = None):
+    """NamedSharding tree for a TrainState on the active mesh."""
+    shapes = shapes or state_shapes(cfg, optimizer)
+    axes = state_logical_axes(cfg, optimizer, shapes)
+    shard = param_shardings(
+        TrainState(step=axes.step, params=axes.params, opt_state=axes.opt_state),
+        shapes, mesh, rules)
+    return shard
+
+
+def _split_microbatches(batch, grad_accum: int):
+    def split(x):
+        b = x.shape[0]
+        assert b % grad_accum == 0, (
+            f"batch {b} not divisible by grad_accum {grad_accum}")
+        return x.reshape((grad_accum, b // grad_accum) + x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer, *,
+                    grad_accum: int = 1, donate: bool = True,
+                    constrain_grads: bool = True):
+    """Returns `train_step(state, batch) -> (state, metrics)` (un-jitted;
+    callers jit with in/out shardings — see launch/train.py).
+
+    `constrain_grads` pins per-microbatch gradients AND the accumulator
+    to the parameter sharding.  Without it XLA's sharding propagation may
+    replicate the f32 accumulator and all-reduce FULL gradients on every
+    scan iteration — measured 16x collective-bytes blowup on
+    nemotron-4-340b x train_4k (EXPERIMENTS.md §Perf, iteration N1).
+    Weights stay stationary; only the one post-accumulation reduction
+    remains.
+    """
+    fam = registry.get_family(cfg)
+    p_axes = fam.param_axes(cfg) if constrain_grads else None
+
+    def loss_fn(params, microbatch):
+        return fam.loss_fn(params, cfg, microbatch)
+
+    def _pin(tree):
+        """Constrain a param-shaped tree to the parameter sharding."""
+        if p_axes is None:
+            return tree
+        from repro.distribution.sharding import current_mesh, logical_to_spec
+        from jax.sharding import NamedSharding
+        mesh = current_mesh()
+        if mesh is None:
+            return tree
+        leaves, treedef = jax.tree.flatten(tree)
+        axes = treedef.flatten_up_to(p_axes)
+        out = [jax.lax.with_sharding_constraint(
+                   x, NamedSharding(mesh, logical_to_spec(
+                       tuple(a), tuple(x.shape), mesh)))
+               for x, a in zip(leaves, axes)]
+        return jax.tree.unflatten(treedef, out)
+
+    def train_step(state: TrainState, batch):
+        if grad_accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+            grads = _pin(grads)
+        else:
+            mbs = _split_microbatches(batch, grad_accum)
+
+            def body(carry, mb):
+                loss_acc, grad_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(state.params, mb)
+                g = _pin(g)
+                grad_acc = jax.tree.map(
+                    lambda a, b_: a + b_.astype(jnp.float32), grad_acc, g)
+                return (loss_acc + l, _pin(grad_acc)), None
+
+            zeros = _pin(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params))
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.float32(0.0), zeros), mbs)
+            loss = loss / grad_accum
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+
+        grads, grad_norm = clip_by_global_norm(grads, optimizer.config.clip_norm)
+        new_params, new_opt = optimizer.update(
+            grads, state.opt_state, state.params, state.step)
+        metrics = {
+            "loss": loss.astype(jnp.float32),
+            "grad_norm": grad_norm.astype(jnp.float32),
+            "step": state.step.astype(jnp.float32),
+        }
+        new_state = TrainState(step=state.step + 1, params=new_params,
+                               opt_state=new_opt)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    fam = registry.get_family(cfg)
+
+    def eval_step(params, batch):
+        return fam.loss_fn(params, cfg, batch)
+
+    return eval_step

@@ -1,0 +1,8 @@
+from repro.utils.tree import (
+    tree_size_bytes,
+    tree_num_params,
+    tree_flatten_with_names,
+    tree_allclose,
+    tree_any_nan,
+)
+from repro.utils.logging import get_logger

@@ -1,0 +1,60 @@
+"""Shared fixtures: tiny per-family configs (CPU-friendly), synthetic
+batches.  NOTE: no XLA_FLAGS here — tests must see the real single
+device; only the dry-run uses 512 placeholder devices."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+import jax
+
+from repro.models.config import ModelConfig
+from repro.data import synthetic_batch
+
+
+TINY = {
+    "dense": ModelConfig(
+        name="tiny-dense", family="dense", num_layers=2, d_model=64,
+        vocab_size=128, num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+        attn_chunk=32, max_seq=64),
+    "moe": ModelConfig(
+        name="tiny-moe", family="moe", num_layers=2, d_model=64,
+        vocab_size=128, num_heads=4, num_kv_heads=2, head_dim=16,
+        num_experts=4, experts_per_token=2, moe_d_ff=32,
+        num_shared_experts=1, attn_chunk=32, max_seq=64),
+    "ssm": ModelConfig(
+        name="tiny-ssm", family="ssm", num_layers=2, d_model=64,
+        vocab_size=128, ssm_state=16, ssm_head_dim=32, ssm_chunk=16,
+        max_seq=64),
+    "hybrid": ModelConfig(
+        name="tiny-hybrid", family="hybrid", num_layers=4, d_model=64,
+        vocab_size=128, num_heads=4, num_kv_heads=4, head_dim=32, d_ff=128,
+        ssm_state=16, ssm_head_dim=32, ssm_chunk=16,
+        shared_attn_period=2, num_shared_blocks=2, attn_chunk=32, max_seq=64),
+    "encoder": ModelConfig(
+        name="tiny-encoder", family="encoder", num_layers=2, d_model=64,
+        vocab_size=32, num_heads=4, num_kv_heads=4, head_dim=16, d_ff=128,
+        causal=False, rope_theta=0.0, frontend="frame", frontend_dim=48,
+        activation="gelu", attn_chunk=32, max_seq=64),
+    "vlm": ModelConfig(
+        name="tiny-vlm", family="vlm", num_layers=2, d_model=64,
+        vocab_size=128, num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+        frontend="patch", frontend_dim=32, num_patches=8,
+        attn_chunk=32, max_seq=64),
+}
+
+
+@pytest.fixture(params=list(TINY))
+def family_cfg(request):
+    cfg = TINY[request.param]
+    cfg.validate()
+    return cfg
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def tiny_batch(cfg: ModelConfig, batch=2, seq=32, seed=0):
+    return {k: jax.numpy.asarray(v)
+            for k, v in synthetic_batch(cfg, batch, seq, seed).items()}

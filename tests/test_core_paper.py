@@ -1,0 +1,168 @@
+"""The paper's own numbers, reproduced analytically (Tables I-VII +
+the 1500 img/s ResNet-50 claim)."""
+from __future__ import annotations
+
+import math
+
+import pytest
+
+from repro.core import datapath as DP
+from repro.core import hwmodel as HW
+from repro.core import projection as PJ
+from repro.core.simulator import (
+    SunriseChip, resnet50_throughput, no_weight_stationarity,
+    sram_cache_chip, schedule)
+from repro.models.resnet import (
+    resnet50_layer_specs, resnet50_total_macs, resnet50_total_params)
+
+
+def rel_err(got, want):
+    return abs(got - want) / abs(want)
+
+
+# ------------------------------------------------------------- Table I
+
+def test_table1_wire_density_matches_paper():
+    for tech, want in (
+        (DP.INTERPOSER, 86.0), (DP.TSV, 1.2e4), (DP.HITOC, 1.0e6),
+    ):
+        got = DP.wire_density(tech)
+        assert rel_err(got, want) < 0.02, f"{tech.name}: {got} vs {want}"
+
+
+def test_table1_bandwidth_matches_paper():
+    for tech, want in (
+        (DP.INTERPOSER, 0.086), (DP.TSV, 1.2), (DP.HITOC, 100.0),
+    ):
+        got = DP.bandwidth_TBps(tech)
+        assert rel_err(got, want) < 0.05, f"{tech.name}: {got} vs {want}"
+
+
+def test_hitoc_power_advantage():
+    """Section III: 0.02 pJ/b vs 2.17 / 0.55 -> >25x better than TSV."""
+    p_hitoc = DP.transfer_power_w(DP.HITOC, 1.8)   # at Sunrise's 1.8 TB/s
+    p_tsv = DP.transfer_power_w(DP.TSV, 1.8)
+    p_int = DP.transfer_power_w(DP.INTERPOSER, 1.8)
+    assert p_tsv / p_hitoc == pytest.approx(0.55 / 0.02, rel=1e-6)
+    assert p_int / p_hitoc == pytest.approx(2.17 / 0.02, rel=1e-6)
+    assert p_hitoc < 0.5    # moving 1.8 TB/s costs < 0.5 W with HITOC
+
+
+# --------------------------------------------------------- Tables II/III
+
+def test_table3_die_normalized_metrics():
+    for chip, want in (
+        (HW.SUNRISE, HW.PAPER_TABLE3["Sunrise"]),
+        (HW.CHIP_A, HW.PAPER_TABLE3["Chip A"]),
+        (HW.CHIP_B, HW.PAPER_TABLE3["Chip B"]),
+        (HW.CHIP_C, HW.PAPER_TABLE3["Chip C"]),
+    ):
+        got = HW.die_normalized(chip)
+        assert rel_err(got.tops_per_mm2, want[0]) < 0.03
+        if want[1] is not None:
+            assert rel_err(got.bw_gbps_per_mm2, want[1]) < 0.03
+        assert rel_err(got.mb_per_mm2, want[2]) < 0.03
+        assert rel_err(got.tops_per_w, want[3]) < 0.03
+
+
+def test_sunrise_beats_others_on_capacity_and_efficiency():
+    rows = {r.name: r for r in HW.table3()}
+    sun = rows["Sunrise"]
+    for other in ("Chip A", "Chip B", "Chip C"):
+        assert sun.mb_per_mm2 > rows[other].mb_per_mm2
+        assert sun.tops_per_w > rows[other].tops_per_w
+
+
+# -------------------------------------------------------------- Table IV
+
+def test_table4_costs_within_2x_of_paper():
+    """Die costs from first principles (wafer price, gross dies, Poisson
+    yield) — the paper's own estimates are approximate, so assert order
+    of magnitude + ranking, and NRE exactly (published mask costs)."""
+    for rep in HW.table4():
+        nre, die, cpt = HW.PAPER_TABLE4[rep.name]
+        assert rep.nre_usd == nre
+        assert 0.4 < rep.die_cost_usd / die < 2.5, (
+            f"{rep.name}: {rep.die_cost_usd} vs {die}")
+    reps = {r.name: r for r in HW.table4()}
+    assert reps["Sunrise"].cost_per_tops == min(
+        r.cost_per_tops for r in reps.values())
+
+
+# ------------------------------------------------------- Tables V/VI/VII
+
+def test_table7_sunrise_projection():
+    proj = PJ.project_to_7nm(HW.SUNRISE)
+    want = PJ.PAPER_TABLE7["Sunrise"]
+    assert rel_err(proj.tops_per_mm2, want[0]) < 0.10
+    assert rel_err(proj.tops_per_w, want[3]) < 0.10
+    assert rel_err(proj.mb_per_mm2, want[2]) < 0.10
+
+
+def test_table7_sunrise_dominates_all_benchmarks():
+    rows = {r.name: r for r in PJ.table7()}
+    sun = rows["Sunrise"]
+    for other in ("Chip A", "Chip B", "Chip C"):
+        assert sun.tops_per_mm2 > rows[other].tops_per_mm2
+        assert sun.tops_per_w > rows[other].tops_per_w
+        assert sun.mb_per_mm2 > rows[other].mb_per_mm2
+
+
+def test_capacity_gain_is_about_20x():
+    """Section VII: '20 times the memory capacities of other chips'."""
+    rows = {r.name: r for r in PJ.table7()}
+    best_other = max(r.mb_per_mm2 for n, r in rows.items() if n != "Sunrise")
+    assert 15 < rows["Sunrise"].mb_per_mm2 / best_other < 30
+
+
+def test_big_die_capacity_24gb():
+    got = PJ.sunrise_big_die_capacity_gb(800.0)
+    assert rel_err(got, 24.0) < 0.10
+
+
+# -------------------------------------------------- ResNet-50 simulator
+
+def test_resnet50_shapes_and_macs():
+    specs = resnet50_layer_specs()
+    assert len(specs) == 54                      # 53 convs + fc
+    assert rel_err(resnet50_total_macs(), 4.1e9) < 0.05   # ~4.1 GMACs
+    assert rel_err(resnet50_total_params(), 25.5e6) < 0.10
+
+
+def test_resnet50_throughput_matches_paper_claim():
+    rep = resnet50_throughput(batch=1)
+    assert rel_err(rep.throughput_per_s, 1500.0) < 0.10, (
+        f"got {rep.throughput_per_s:.0f} img/s, paper claims 1500")
+
+
+def test_weight_stationarity_is_load_bearing():
+    """Ablation: removing weight reuse must make the chip slower."""
+    chip = SunriseChip()
+    specs = resnet50_layer_specs()
+    ws = schedule(chip, specs, batch=1)
+    ns = no_weight_stationarity(chip, specs, batch=1)
+    assert ns.total_s > ws.total_s * 1.5
+
+
+def test_sram_cache_chip_is_memory_bound():
+    """Ablation: a conventional 256 GB/s-class memory system flips the
+    chip from compute-bound to weight-stream-bound (the memory wall), and
+    the gap widens with batch (weight streams stop amortizing)."""
+    specs = resnet50_layer_specs()
+    sun1 = schedule(SunriseChip(), specs, batch=1)
+    sram1 = schedule(sram_cache_chip(), specs, batch=1)
+    hist = sram1.bound_histogram()
+    assert hist.get("weight", 0) > hist.get("compute", 0)
+    assert sram1.throughput_per_s < sun1.throughput_per_s
+    sun8 = schedule(SunriseChip(), specs, batch=8)
+    sram8 = schedule(sram_cache_chip(), specs, batch=8)
+    gap1 = sun1.throughput_per_s / sram1.throughput_per_s
+    gap8 = sun8.throughput_per_s / sram8.throughput_per_s
+    assert gap8 > gap1 > 1.05
+
+
+def test_batching_amortizes_weight_streams():
+    chip = SunriseChip()
+    b1 = resnet50_throughput(batch=1).throughput_per_s
+    b8 = resnet50_throughput(batch=8).throughput_per_s
+    assert b8 > b1 * 1.05

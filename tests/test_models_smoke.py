@@ -1,0 +1,199 @@
+"""Per-assigned-arch smoke tests (reduced configs) + family behaviour:
+one forward/train step on CPU asserting output shapes + no NaNs, and
+prefill+decode consistency against the full forward."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_arch
+from repro.models.config import reduced_for_smoke
+from repro.models import registry
+from repro.data import synthetic_batch
+from repro.train.optimizer import OptimizerConfig, make_optimizer
+from repro.train.train_step import init_train_state, make_train_step
+
+from conftest import TINY, tiny_batch
+
+
+# ------------------------------------------------ assigned-arch smokes
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_reduced_forward_and_train_step(arch):
+    spec = get_arch(arch)
+    cfg = reduced_for_smoke(spec.model, max_seq=64)
+    cfg.validate()
+    fam = registry.get_family(cfg)
+    batch = {k: jnp.asarray(v) for k, v in synthetic_batch(cfg, 2, 32).items()}
+
+    params = fam.init(jax.random.key(0), cfg)
+    logits = jax.jit(lambda p, b: fam.forward(p, cfg, b))(params, batch)
+    s = 32 + (cfg.num_patches if cfg.family == "vlm" else 0)
+    assert logits.shape == (2, s, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any()), f"{arch}: NaN logits"
+
+    opt = make_optimizer(OptimizerConfig(name=spec.optimizer, total_steps=4))
+    state = init_train_state(jax.random.key(1), cfg, opt)
+    step = jax.jit(make_train_step(cfg, opt, grad_accum=2))
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"])), f"{arch}: non-finite loss"
+    assert int(state.step) == 1
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_param_axes_match_params(arch):
+    """Sharding axes tree must exactly mirror the param tree, with one
+    logical name per array dimension."""
+    spec = get_arch(arch)
+    cfg = reduced_for_smoke(spec.model)
+    fam = registry.get_family(cfg)
+    params = jax.eval_shape(lambda k: fam.init(k, cfg),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    axes = fam.param_axes(cfg)
+    p_leaves, p_def = jax.tree.flatten(params)
+    a_leaves = p_def.flatten_up_to(axes)
+    assert len(p_leaves) == len(a_leaves)
+    for p, a in zip(p_leaves, a_leaves):
+        assert isinstance(a, tuple) and len(a) == len(p.shape), (
+            f"{arch}: axes {a} vs shape {p.shape}")
+
+
+# ----------------------------------------------- decode == forward parity
+
+DECODE_FAMILIES = ["dense", "moe", "ssm", "hybrid", "vlm"]
+
+
+@pytest.mark.parametrize("family", DECODE_FAMILIES)
+def test_prefill_decode_matches_forward(family):
+    cfg = TINY[family]
+    fam = registry.get_family(cfg)
+    params = fam.init(jax.random.key(7), cfg)
+    batch = tiny_batch(cfg, batch=2, seq=16, seed=3)
+    s = 16
+
+    # full forward logits at every position
+    logits_full = fam.forward(params, cfg, batch)
+
+    # prefill on the full prompt: last-position logits must match
+    cache = fam.init_cache(cfg, 2, cfg.max_seq)
+    cache, logits_last = fam.prefill(params, cfg, batch, cache)
+    np.testing.assert_allclose(np.asarray(logits_last),
+                               np.asarray(logits_full[:, -1]),
+                               rtol=2e-3, atol=2e-3)
+
+    # decode one token: must match forward over seq+1
+    nxt = jnp.argmax(logits_last, -1).astype(jnp.int32)
+    cache2, logits_dec = fam.decode_step(params, cfg, cache, nxt)
+    ext = dict(batch)
+    ext["tokens"] = jnp.concatenate([batch["tokens"], nxt[:, None]], axis=1)
+    logits_ext = fam.forward(params, cfg, ext)
+    np.testing.assert_allclose(np.asarray(logits_dec),
+                               np.asarray(logits_ext[:, -1]),
+                               rtol=2e-2, atol=2e-2)
+    patches = cfg.num_patches if cfg.family == "vlm" else 0
+    assert int(cache2["pos"][0]) == s + patches + 1
+
+
+# ------------------------------------------------------ family invariants
+
+def test_moe_dense_and_scatter_dispatch_agree():
+    cfg = TINY["moe"].replace(capacity_factor=8.0)   # no drops -> exact match
+    fam = registry.get_family(cfg)
+    params = fam.init(jax.random.key(8), cfg)
+    batch = tiny_batch(cfg, batch=2, seq=16, seed=4)
+    ld = fam.forward(params, cfg.replace(capacity_factor=8.0,
+                                         moe_dispatch="dense"), batch)
+    ls = fam.forward(params, cfg.replace(capacity_factor=8.0,
+                                         moe_dispatch="scatter"), batch)
+    np.testing.assert_allclose(np.asarray(ld), np.asarray(ls),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_moe_capacity_drops_are_bounded():
+    cfg = TINY["moe"].replace(capacity_factor=1.0)
+    fam = registry.get_family(cfg)
+    params = fam.init(jax.random.key(9), cfg)
+    batch = tiny_batch(cfg, batch=2, seq=16, seed=5)
+    out = fam.forward(params, cfg, batch)
+    assert not bool(jnp.isnan(out).any())
+
+
+def test_ssd_chunked_matches_stepwise_recurrence():
+    """Property: the chunked dual form == token-by-token recurrence."""
+    from repro.models.mamba2 import ssd_chunked, ssd_step
+    ks = jax.random.split(jax.random.key(10), 5)
+    b, s, h, p, n = 2, 32, 2, 16, 8
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    B = jax.random.normal(ks[3], (b, s, h, n))
+    C = jax.random.normal(ks[4], (b, s, h, n))
+    y_chunk, S_chunk = ssd_chunked(x, dt, A, B, C, chunk=8)
+
+    S = jnp.zeros((b, h, p, n))
+    ys = []
+    for t in range(s):
+        S, y = ssd_step(S, x[:, t], dt[:, t], A, B[:, t], C[:, t])
+        ys.append(y)
+    y_step = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_step),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(S_chunk), np.asarray(S),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_flash_xla_matches_dense_attention():
+    from repro.models import layers as L
+    ks = jax.random.split(jax.random.key(11), 3)
+    q = jax.random.normal(ks[0], (2, 64, 4, 16))
+    k = jax.random.normal(ks[1], (2, 64, 2, 16))
+    v = jax.random.normal(ks[2], (2, 64, 2, 16))
+    a = L.dense_attention(q, k, v, causal=True)
+    b = L.flash_xla_attention(q, k, v, causal=True, chunk=16)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_encoder_loss_only_on_masked_positions():
+    cfg = TINY["encoder"]
+    fam = registry.get_family(cfg)
+    params = fam.init(jax.random.key(12), cfg)
+    batch = tiny_batch(cfg, batch=2, seq=16, seed=6)
+    loss = fam.loss_fn(params, cfg, batch)
+    assert np.isfinite(float(loss))
+    # all-unmasked -> loss falls back to denominator guard, stays finite
+    b2 = dict(batch)
+    b2["labels"] = jnp.full_like(batch["labels"], -1)
+    loss2 = fam.loss_fn(params, cfg, b2)
+    assert np.isfinite(float(loss2))
+
+
+def test_chunked_ce_matches_full_ce():
+    from repro.models import layers as L
+    cfg = TINY["dense"].replace(logits_chunk=8)
+    key = jax.random.key(13)
+    h = jax.random.normal(key, (2, 32, cfg.d_model))
+    head = jax.random.normal(jax.random.key(14),
+                             (cfg.d_model, cfg.vocab_size)) * 0.02
+    labels = jax.random.randint(jax.random.key(15), (2, 32), 0, cfg.vocab_size)
+    full = L.cross_entropy(L.logits_from_hidden(head, cfg, h), labels)
+    chunked = L.chunked_ce_loss(h, head, cfg, labels, chunk=8)
+    np.testing.assert_allclose(float(full), float(chunked), rtol=1e-5)
+
+
+def test_decode_step_flash_pallas_matches_xla():
+    """Full model decode step with the split-KV Pallas kernel == XLA path."""
+    cfg = TINY["dense"]
+    fam = registry.get_family(cfg)
+    params = fam.init(jax.random.key(30), cfg)
+    batch = tiny_batch(cfg, batch=2, seq=16, seed=7)
+    cache = fam.init_cache(cfg, 2, cfg.max_seq)
+    cache, logits = fam.prefill(params, cfg, batch, cache)
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+    _, l_xla = fam.decode_step(params, cfg, cache, nxt)
+    _, l_pal = fam.decode_step(params, cfg.replace(attention_impl="flash_pallas"),
+                               cache, nxt)
+    np.testing.assert_allclose(np.asarray(l_xla), np.asarray(l_pal),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,216 @@
+"""Serving: UniMem pool properties (hypothesis), paged == contiguous
+attention, continuous-batching engine behaviour."""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.unimem import UniMemPool, SequencePageTable, UniMemOOM
+from repro.models import registry
+from repro.serve.kv_cache import (
+    PagedKVArena, paged_write, paged_decode_attention, gather_pages)
+from repro.serve import ServingEngine, Request
+from repro.models import layers as L
+
+from conftest import TINY, tiny_batch
+
+
+# ------------------------------------------------------------ UniMem pool
+
+def test_pool_alloc_free_roundtrip():
+    pool = UniMemPool(num_pages=8, page_size=4)
+    pages = pool.alloc(5)
+    assert pool.free_pages == 3
+    pool.free(pages)
+    assert pool.free_pages == 8
+
+
+def test_pool_oom_and_admission():
+    pool = UniMemPool(num_pages=4, page_size=16)
+    assert pool.can_admit(64) and not pool.can_admit(65)
+    pool.alloc(4)
+    with pytest.raises(UniMemOOM):
+        pool.alloc(1)
+
+
+def test_prefix_sharing_refcounts():
+    pool = UniMemPool(num_pages=8, page_size=4)
+    seq = SequencePageTable(pool)
+    seq.append_tokens(10)                     # 3 pages
+    fork = seq.fork()                         # shares all 3
+    assert pool.free_pages == 5
+    assert all(pool.is_shared(p) for p in seq.pages)
+    seq.release()
+    assert pool.free_pages == 5               # fork still holds them
+    fork.release()
+    assert pool.free_pages == 8
+
+
+def test_double_free_raises():
+    pool = UniMemPool(num_pages=2, page_size=4)
+    pages = pool.alloc(1)
+    pool.free(pages)
+    with pytest.raises(KeyError):
+        pool.free(pages)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "free", "fork"]),
+                          st.integers(1, 20)), min_size=1, max_size=40))
+def test_property_pool_never_leaks_or_double_books(ops):
+    """Random alloc/free/fork interleavings: free + live == total, and a
+    page is never simultaneously on the free list and in a table."""
+    pool = UniMemPool(num_pages=16, page_size=4)
+    live: list[SequencePageTable] = []
+    for op, n in ops:
+        if op == "alloc":
+            t = SequencePageTable(pool)
+            try:
+                t.append_tokens(n * pool.page_size)
+                live.append(t)
+            except UniMemOOM:
+                pass
+        elif op == "free" and live:
+            live.pop(0).release()
+        elif op == "fork" and live:
+            try:
+                live.append(live[0].fork())
+            except UniMemOOM:
+                pass
+        held = [p for t in live for p in t.pages]
+        free = pool.free_pages
+        assert len(set(held) | set(pool._free)) == len(set(held)) + free
+        assert set(held).isdisjoint(pool._free)
+    for t in live:
+        t.release()
+    assert pool.free_pages == 16
+
+
+# ------------------------------------------------- paged == contiguous
+
+def test_paged_decode_attention_matches_contiguous():
+    cfg = TINY["dense"]
+    rng = np.random.default_rng(0)
+    b, S, hq, hkv, hd = 3, 32, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    page = 8
+    arena = PagedKVArena(cfg, num_pages=b * S // page + 2, page_size=page)
+    # random block tables (non-contiguous physical pages)
+    phys = rng.permutation(arena.num_pages)[:b * (S // page)]
+    bt = jnp.asarray(phys.reshape(b, S // page).astype(np.int32))
+    k_contig = rng.standard_normal((cfg.num_layers, b, S, hkv, hd)).astype(np.float32)
+    v_contig = rng.standard_normal((cfg.num_layers, b, S, hkv, hd)).astype(np.float32)
+
+    k_arena, v_arena = jnp.asarray(arena.k, jnp.float32), jnp.asarray(arena.v, jnp.float32)
+    k_arena = jnp.zeros((cfg.num_layers, arena.num_pages, page, hkv, hd))
+    v_arena = jnp.zeros_like(k_arena)
+    # scatter contiguous K/V into the paged arena through the block table
+    for i in range(b):
+        for pi in range(S // page):
+            k_arena = k_arena.at[:, int(bt[i, pi])].set(
+                k_contig[:, i, pi * page:(pi + 1) * page])
+            v_arena = v_arena.at[:, int(bt[i, pi])].set(
+                v_contig[:, i, pi * page:(pi + 1) * page])
+
+    positions = jnp.asarray([S - 1, S - 10, S - 5], jnp.int32)
+    q = jnp.asarray(rng.standard_normal((b, hq, hd)).astype(np.float32))
+    for layer in (0, 1):
+        got = paged_decode_attention(q, k_arena, v_arena, bt, positions, layer)
+        want = L.decode_attention(q, jnp.asarray(k_contig[layer]),
+                                  jnp.asarray(v_contig[layer]), positions)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_paged_write_then_gather_roundtrip():
+    cfg = TINY["dense"]
+    page, b = 4, 2
+    arena = PagedKVArena(cfg, num_pages=8, page_size=page)
+    seqs = [arena.new_sequence() for _ in range(b)]
+    for s in seqs:
+        s.append_tokens(8)
+    bt = jnp.asarray(arena.block_table(seqs, max_pages=2))
+    k_arena = jnp.zeros((cfg.num_layers, 8, page, cfg.num_kv_heads,
+                         cfg.head_dim))
+    v_arena = jnp.zeros_like(k_arena)
+    rng = np.random.default_rng(1)
+    toks = []
+    for pos in range(6):
+        k_new = jnp.asarray(rng.standard_normal(
+            (cfg.num_layers, b, cfg.num_kv_heads, cfg.head_dim)).astype(np.float32))
+        toks.append(np.asarray(k_new))
+        k_arena, v_arena = paged_write(
+            k_arena, v_arena, k_new, k_new, bt,
+            jnp.full((b,), pos, jnp.int32))
+    view = gather_pages(k_arena, bt)          # (L, b, 8, hkv, hd)
+    for pos in range(6):
+        np.testing.assert_allclose(np.asarray(view[:, :, pos]), toks[pos],
+                                   rtol=1e-6)
+
+
+# ----------------------------------------------------------------- engine
+
+def _engine(cfg, **kw):
+    fam = registry.get_family(cfg)
+    params = fam.init(jax.random.key(0), cfg)
+    return ServingEngine(cfg, params, **kw)
+
+
+def test_engine_continuous_batching_completes_all():
+    cfg = TINY["dense"]
+    eng = _engine(cfg, max_batch=2, max_seq=64, page_size=8)
+    rng = np.random.default_rng(2)
+    for i in range(5):
+        plen = int(rng.integers(3, 20))
+        eng.submit(Request(uid=i, prompt=rng.integers(
+            0, cfg.vocab_size, plen).astype(np.int32), max_new_tokens=6))
+    results = eng.run()
+    assert sorted(r.uid for r in results) == list(range(5))
+    assert all(len(r.tokens) == 6 for r in results)
+    assert eng.pool.stats().allocated_pages == 0   # everything freed
+
+
+def test_engine_unimem_backpressure():
+    """Pool too small for two concurrent requests: engine must serialize
+    them rather than OOM."""
+    cfg = TINY["dense"]
+    eng = _engine(cfg, max_batch=4, max_seq=64, page_size=8, pool_pages=8)
+    for i in range(3):
+        eng.submit(Request(uid=i, prompt=np.arange(30, dtype=np.int32),
+                           max_new_tokens=8))     # 38 tokens -> 5 pages
+    results = eng.run()
+    assert len(results) == 3                      # all served, sequentially
+
+
+def test_engine_rejects_oversized_request():
+    cfg = TINY["dense"]
+    eng = _engine(cfg, max_batch=1, max_seq=32)
+    with pytest.raises(ValueError):
+        eng.submit(Request(uid=0, prompt=np.arange(30, dtype=np.int32),
+                           max_new_tokens=8))
+
+
+def test_engine_decode_matches_batch_decode_many():
+    """Greedy engine output == fused decode_many on the same prompt."""
+    from repro.serve.serve_step import make_serve_fns
+    cfg = TINY["dense"]
+    fam = registry.get_family(cfg)
+    params = fam.init(jax.random.key(0), cfg)
+    prompt = np.arange(7, dtype=np.int32) % cfg.vocab_size
+
+    eng = ServingEngine(cfg, params, max_batch=1, max_seq=64, page_size=8)
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=5))
+    toks_engine = eng.run()[0].tokens
+
+    prefill, decode, decode_many = make_serve_fns(cfg, temperature=0.0)
+    cache = fam.init_cache(cfg, 1, 64)
+    cache, logits = prefill(params, {"tokens": jnp.asarray(prompt)[None]}, cache)
+    first = jnp.argmax(logits, -1).astype(jnp.int32)
+    cache, rest, _ = decode_many(params, cache, first, jax.random.key(0), 4)
+    want = [int(first[0])] + [int(t) for t in np.asarray(rest[0])]
+    assert toks_engine == want

@@ -1,0 +1,229 @@
+"""Training substrate: optimizers, grad accumulation, checkpointing,
+elastic plans, straggler detection."""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from hypothesis import given, settings, strategies as st
+
+from repro.train.optimizer import (
+    OptimizerConfig, make_optimizer, lr_schedule, clip_by_global_norm)
+from repro.train.train_step import (
+    TrainState, init_train_state, make_train_step, state_shapes,
+    state_logical_axes)
+from repro.train.checkpoint import CheckpointManager
+from repro.train.elastic import elastic_plan, ElasticError
+from repro.train.straggler import StragglerMonitor
+from repro.utils.tree import tree_allclose
+
+from conftest import TINY, tiny_batch
+
+CFG = TINY["dense"]
+
+
+def _opt(name="adamw", **kw):
+    return make_optimizer(OptimizerConfig(name=name, total_steps=100, **kw))
+
+
+# ----------------------------------------------------------- optimizers
+
+def test_adamw_first_step_matches_manual_math():
+    cfg = OptimizerConfig(name="adamw", total_steps=100, warmup_steps=10,
+                          weight_decay=0.0)
+    opt = make_optimizer(cfg)
+    p = {"w": jnp.ones((4, 4))}
+    g = {"w": jnp.full((4, 4), 0.5)}
+    state = opt.init(p)
+    newp, _ = opt.update(g, state, p, jnp.int32(0))
+    # step 0: lr = 0 (warmup from zero) -> params unchanged
+    np.testing.assert_allclose(np.asarray(newp["w"]), np.ones((4, 4)))
+    newp2, _ = opt.update(g, state, p, jnp.int32(5))
+    lr = float(lr_schedule(cfg, jnp.int32(5)))
+    # bias-corrected first moment of a constant gradient = g
+    expect = 1.0 - lr * 1.0   # m_hat/sqrt(v_hat) = g/|g| = 1 for constant g
+    np.testing.assert_allclose(np.asarray(newp2["w"]),
+                               np.full((4, 4), expect), rtol=1e-4)
+
+
+@pytest.mark.parametrize("name", ["adamw", "adafactor", "sgdm"])
+def test_optimizers_reduce_loss(name):
+    cfg = TINY["dense"]
+    opt = _opt(name, peak_lr=1e-2 if name != "sgdm" else 1e-3)
+    state = init_train_state(jax.random.key(0), cfg, opt)
+    step = jax.jit(make_train_step(cfg, opt))
+    batch = tiny_batch(cfg, batch=4, seq=32)
+    losses = []
+    for _ in range(8):
+        state, m = step(state, batch)      # same batch: loss must drop
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0], f"{name}: {losses[0]} -> {losses[-1]}"
+
+
+def test_adafactor_state_is_factored_and_small():
+    cfg = TINY["dense"]
+    opt = _opt("adafactor", min_dim_size_to_factor=32)
+    state = init_train_state(jax.random.key(0), cfg, opt)
+    from repro.utils.tree import tree_size_bytes
+    p_bytes = tree_size_bytes(state.params)
+    o_bytes = tree_size_bytes(state.opt_state)
+    assert o_bytes < p_bytes  # factored moments beat one full copy
+
+
+def test_adafactor_state_axes_match_state_structure():
+    cfg = TINY["dense"]
+    opt = _opt("adafactor")
+    shapes = state_shapes(cfg, opt)
+    axes = state_logical_axes(cfg, opt, shapes)
+    # same tree structure when axes tuples are treated as leaves
+    sl, sdef = jax.tree.flatten(shapes.opt_state)
+    al = sdef.flatten_up_to(axes.opt_state)
+    assert len(sl) == len(al)
+    for s, a in zip(sl, al):
+        assert len(a) == len(s.shape)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 3.0), "b": jnp.full((10,), 4.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(90 + 160))
+    total = np.sqrt(sum(float(jnp.sum(x ** 2))
+                        for x in jax.tree.leaves(clipped)))
+    assert total == pytest.approx(1.0, rel=1e-5)
+
+
+# ------------------------------------------------------ grad accumulation
+
+def test_grad_accum_invariance():
+    """accum=1 over batch B == accum=4 over the same batch (mean loss and
+    identical update, up to fp tolerance)."""
+    cfg = TINY["dense"]
+    opt = _opt("sgdm", peak_lr=1e-3)
+    batch = tiny_batch(cfg, batch=8, seq=16)
+    s1 = init_train_state(jax.random.key(2), cfg, opt)
+    s4 = jax.tree.map(jnp.copy, s1)
+    st1, m1 = jax.jit(make_train_step(cfg, opt, grad_accum=1))(s1, batch)
+    st4, m4 = jax.jit(make_train_step(cfg, opt, grad_accum=4))(s4, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m4["loss"]), rel=1e-5)
+    assert tree_allclose(st1.params, st4.params, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------- checkpointing
+
+def test_checkpoint_roundtrip_and_retention(tmp_path):
+    cfg = TINY["dense"]
+    opt = _opt()
+    state = init_train_state(jax.random.key(3), cfg, opt)
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    for s in (1, 2, 3, 4):
+        mgr.save(state.replace(step=jnp.int32(s)), s,
+                 metadata={"mesh": {"data": 1}})
+    assert mgr.all_steps() == [3, 4]           # retention keeps newest 2
+    assert mgr.latest_step() == 4
+    like = state_shapes(cfg, opt)
+    restored, manifest = mgr.restore(like)
+    assert manifest["step"] == 4
+    assert int(restored.step) == 4
+    assert tree_allclose(restored.params, state.params)
+
+
+def test_checkpoint_async_and_crash_safety(tmp_path):
+    cfg = TINY["dense"]
+    opt = _opt()
+    state = init_train_state(jax.random.key(4), cfg, opt)
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    mgr.save(state, 7)
+    mgr.wait()
+    # simulate an interrupted save: stray tmp dir must be GC'd on init
+    os.makedirs(tmp_path / "tmp.step_00000009.999")
+    mgr2 = CheckpointManager(str(tmp_path))
+    assert mgr2.all_steps() == [7]
+    assert not any(n.startswith("tmp.") for n in os.listdir(tmp_path))
+
+
+def test_checkpoint_milestone_retention(tmp_path):
+    cfg = TINY["dense"]
+    opt = _opt()
+    state = init_train_state(jax.random.key(5), cfg, opt)
+    mgr = CheckpointManager(str(tmp_path), keep=1, keep_period=10,
+                            async_save=False)
+    for s in (5, 10, 15, 20, 25):
+        mgr.save(state, s)
+    assert mgr.all_steps() == [10, 20, 25]     # milestones + newest
+
+
+# --------------------------------------------------------------- elastic
+
+def test_elastic_plan_preserves_global_batch():
+    for dp in (1, 2, 4, 8, 16, 32):
+        plan = elastic_plan(256, dp)
+        assert plan.dp_width * plan.per_device_batch * plan.grad_accum == 256
+
+
+def test_elastic_plan_respects_memory_cap():
+    plan = elastic_plan(256, 4, max_per_device_batch=16)
+    assert plan.per_device_batch <= 16
+    assert plan.dp_width * plan.per_device_batch * plan.grad_accum == 256
+
+
+def test_elastic_plan_rejects_indivisible():
+    with pytest.raises(ElasticError):
+        elastic_plan(100, 48)
+
+
+@settings(max_examples=100, deadline=None)
+@given(gb=st.sampled_from([64, 128, 256, 512]),
+       dp=st.sampled_from([1, 2, 4, 8, 16, 32, 64]),
+       cap=st.sampled_from([0, 1, 2, 8, 64]))
+def test_property_elastic_plan_contract(gb, dp, cap):
+    if gb % dp:
+        return
+    plan = elastic_plan(gb, dp, max_per_device_batch=cap)
+    assert plan.global_batch == gb
+    assert plan.dp_width * plan.per_device_batch * plan.grad_accum == gb
+    if cap:
+        assert plan.per_device_batch <= cap
+
+
+def test_elastic_restore_onto_new_mesh(tmp_path):
+    """Save under one mesh, restore under another — values identical."""
+    from repro.launch.mesh import make_mesh
+    from repro.train.elastic import elastic_restore
+    from repro.distribution.sharding import use_mesh
+    cfg = TINY["dense"]
+    opt = _opt()
+    state = init_train_state(jax.random.key(6), cfg, opt)
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(state, 11, metadata={"mesh": {"data": 1, "model": 1}})
+    mesh2 = make_mesh((1, 1), ("data", "model"))   # "different" mesh
+    with use_mesh(mesh2):
+        restored, manifest = elastic_restore(mgr, cfg, opt, mesh2)
+    assert tree_allclose(restored.params, state.params)
+    assert int(restored.step) == int(state.step)
+
+
+# -------------------------------------------------------------- straggler
+
+def test_straggler_detection_and_escalation():
+    mon = StragglerMonitor(num_workers=4, slow_factor=1.5, persist_steps=3)
+    rep = None
+    for step in range(6):
+        durs = {w: 0.1 for w in range(4)}
+        durs[2] = 0.5 if step >= 2 else 0.1     # worker 2 degrades
+        rep = mon.record_step(durs)
+    assert 2 in rep.stragglers
+    assert rep.action == "exclude"              # persisted past threshold
+    assert mon.excluded_workers() == [2]
+
+
+def test_straggler_transient_recovers():
+    mon = StragglerMonitor(num_workers=2, slow_factor=1.5, persist_steps=5,
+                           window=4)
+    mon.record_step({0: 0.1, 1: 0.8})           # one slow step
+    for _ in range(6):
+        rep = mon.record_step({0: 0.1, 1: 0.1})
+    assert rep.stragglers == {} and rep.action == "none"
