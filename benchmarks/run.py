@@ -19,10 +19,12 @@ from benchmarks import (
     table57_projection,
     resnet50_throughput,
     ws_dataflow,
+    serve_throughput,
 )
 
 MODULES = [table1_datapath, table23_diebench, table4_cost,
-           table57_projection, resnet50_throughput, ws_dataflow]
+           table57_projection, resnet50_throughput, ws_dataflow,
+           serve_throughput]
 
 
 def main() -> int:

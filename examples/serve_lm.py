@@ -1,11 +1,19 @@
-"""Serving example: continuous batching + UniMem prefix sharing.
+"""Serving example: paged-native continuous batching + UniMem prefix
+sharing.
 
     PYTHONPATH=src python examples/serve_lm.py
 
-Submits a bursty stream of mixed-length requests to the engine, prints
+Submits a bursty stream of mixed-length requests to the paged engine
+(lazy page allocation: pool memory tracks tokens in flight), prints
 per-request latency, throughput, and the page-pool high-water mark; then
-demonstrates prefix FORKING (two sequences sharing prompt pages —
-copy-free, the UniMem refcount path).
+demonstrates the two UniMem sharing paths end-to-end on devices:
+
+  * prefix sharing — identical prompts reuse each other's prompt pages
+    through the page-hash cache (refcounts, zero copies, zero
+    recompute of the shared K/V);
+  * `engine.fork()` — branch an in-flight sequence; the child shares
+    every page and the first divergent write copy-on-writes only the
+    partial last page.
 """
 from __future__ import annotations
 
@@ -16,7 +24,6 @@ from repro.configs import get_arch
 from repro.models.config import reduced_for_smoke
 from repro.models import registry
 from repro.serve import ServingEngine, Request
-from repro.core.unimem import UniMemPool, SequencePageTable
 
 
 def main():
@@ -36,24 +43,41 @@ def main():
 
     results = engine.run()
     lats = sorted(r.latency_s for r in results)
-    print(f"served {len(results)} requests | "
+    st = engine.pool.stats()
+    print(f"[{engine.layout}] served {len(results)} requests | "
           f"p50 {lats[len(lats) // 2]:.2f}s p95 {lats[-1]:.2f}s | "
           f"{engine.tokens_out} tokens in {engine.steps} engine steps")
-    print(f"pool: {engine.pool.stats()}")
+    print(f"pool: peak {st.peak_allocated_pages}/{st.num_pages} pages "
+          f"({engine.peak_kv_bytes() / 1e6:.2f} MB KV high-water vs "
+          f"{engine.max_batch * engine.max_seq // engine.page_size} pages "
+          f"a contiguous layout would pin)")
 
-    # --- UniMem prefix sharing: fork a 64-token prompt, zero page copies
-    pool = UniMemPool(num_pages=16, page_size=16)
-    parent = SequencePageTable(pool)
-    parent.append_tokens(64)                      # 4 pages
-    children = [parent.fork() for _ in range(3)]
-    stats = pool.stats()
-    print(f"prefix fork: 1 prompt + 3 forks -> {stats.allocated_pages} pages "
-          f"allocated ({stats.shared_pages} shared), "
-          f"vs {4 * 4} without sharing")
-    for c in children:
-        c.release()
-    parent.release()
-    assert pool.stats().allocated_pages == 0
+    # --- prefix sharing: same 64-token prompt, pages reused on device
+    prompt = rng.integers(0, cfg.vocab_size, 64).astype(np.int32)
+    eng = ServingEngine(cfg, params, max_batch=4, max_seq=128, page_size=16)
+    for uid in range(3):
+        eng.submit(Request(uid=uid, prompt=prompt.copy(), max_new_tokens=6))
+    eng.step()
+    st = eng.pool.stats()
+    print(f"prefix sharing: 3 identical prompts -> {st.allocated_pages} pages "
+          f"allocated ({st.shared_pages} shared) vs "
+          f"{3 * eng.pool.pages_for(64)} unshared")
+    res = eng.run()
+    assert all(r.tokens == res[0].tokens for r in res)
+
+    # --- fork: branch an in-flight sequence, COW on the last page only
+    eng = ServingEngine(cfg, params, max_batch=2, max_seq=128, page_size=16)
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=10))
+    while not any(s.generated for s in eng.slots.values()):
+        eng.step()
+    eng.fork(0, new_uid=1)
+    st = eng.pool.stats()
+    print(f"fork: parent+child share {st.shared_pages} pages; "
+          f"first divergent write copies exactly one")
+    res = eng.run()
+    assert len(res) == 2
+    assert eng.pool.stats().allocated_pages == 0
+    print("all pages returned to the pool")
 
 
 if __name__ == "__main__":

@@ -27,6 +27,7 @@ class PoolStats:
     allocated_pages: int
     shared_pages: int
     utilization: float
+    peak_allocated_pages: int = 0
 
 
 @dataclass
@@ -36,10 +37,12 @@ class UniMemPool:
     page_size: int                      # tokens (or generic slots) per page
     _free: list[int] = field(default_factory=list)
     _refcount: dict[int, int] = field(default_factory=dict)
+    _peak: int = 0                      # high-water mark of allocated pages
 
     def __post_init__(self):
         self._free = list(range(self.num_pages - 1, -1, -1))
         self._refcount = {}
+        self._peak = 0
 
     # ------------------------------------------------------------- alloc
 
@@ -52,6 +55,7 @@ class UniMemPool:
         pages = [self._free.pop() for _ in range(n)]
         for p in pages:
             self._refcount[p] = 1
+        self._peak = max(self._peak, self.num_pages - len(self._free))
         return pages
 
     def share(self, pages: list[int]) -> list[int]:
@@ -77,6 +81,9 @@ class UniMemPool:
     def is_shared(self, page: int) -> bool:
         return self._refcount.get(page, 0) > 1
 
+    def is_allocated(self, page: int) -> bool:
+        return page in self._refcount
+
     # ------------------------------------------------------------- stats
 
     @property
@@ -98,6 +105,7 @@ class UniMemPool:
             allocated_pages=alloc,
             shared_pages=shared,
             utilization=alloc / self.num_pages if self.num_pages else 0.0,
+            peak_allocated_pages=self._peak,
         )
 
 
@@ -121,6 +129,19 @@ class SequencePageTable:
         """Share the full prefix with a new sequence (no copy)."""
         self.pool.share(self.pages)
         return SequencePageTable(self.pool, list(self.pages), self.num_tokens)
+
+    def cow_last_page(self) -> tuple[int, int] | None:
+        """Copy-on-write: swap a SHARED last page for a private one before
+        writing into it.  Returns (src, dst) physical ids so the caller
+        can copy the device page, or None when the last page is already
+        exclusively owned (nothing to do)."""
+        if not self.pages or not self.pool.is_shared(self.pages[-1]):
+            return None
+        src = self.pages[-1]
+        dst = self.pool.alloc(1)[0]
+        self.pool.free([src])               # drop our ref; peers keep theirs
+        self.pages[-1] = dst
+        return src, dst
 
     def release(self) -> None:
         self.pool.free(self.pages)

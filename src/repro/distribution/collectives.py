@@ -20,6 +20,14 @@ from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 
+def axis_size(axis: str) -> int:
+    """Static size of a bound mesh axis (jax.lax.axis_size is >= 0.5)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis)
+    frame = jax.core.axis_frame(axis)       # 0.4.x: int or frame object
+    return frame if isinstance(frame, int) else frame.size
+
+
 # ------------------------------------------------------------ quantization
 
 def quantize_int8(x):
@@ -40,7 +48,7 @@ def ring_allreduce_int8(x, axis: str):
     Each hop passes the ORIGINAL quantized block along the ring and
     accumulates the dequantized value — n-1 hops, int8 bytes on the wire.
     """
-    n = jax.lax.axis_size(axis)
+    n = axis_size(axis)
     q, scale = quantize_int8(x)
     acc = dequantize_int8(q, scale)
     perm = [(i, (i + 1) % n) for i in range(n)]
@@ -68,7 +76,7 @@ def compressed_tree_psum(grads, mesh, axis: str = "pod", error_feedback=None):
         def body(gl, el):
             x = gl.astype(jnp.float32) + el
             q, scale = quantize_int8(x)
-            reduced = ring_allreduce_int8(x, axis) / jax.lax.axis_size(axis)
+            reduced = ring_allreduce_int8(x, axis) / axis_size(axis)
             new_err = x - dequantize_int8(q, scale)
             return reduced.astype(gl.dtype), new_err
 

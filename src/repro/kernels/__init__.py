@@ -5,5 +5,6 @@
 #   ws_matmul/        weight-stationary blocked matmul (the paper's dataflow)
 #   flash_attention/  online-softmax attention (prefill hot spot)
 #   decode_attention/ split-KV flash-decoding (resident KV, broadcast query)
+#   paged_attention/  flash-decoding through a UniMem block table (paged KV)
 #   ssd_scan/         Mamba-2 SSD intra-chunk dual form
 #   grouped_matmul/   per-expert MoE matmul (vector-unit sparsity)

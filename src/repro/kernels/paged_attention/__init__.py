@@ -1,0 +1,1 @@
+# Paged split-KV flash-decoding over the UniMem arena (see kernel.py).

@@ -1,0 +1,123 @@
+"""Paged split-KV flash-decoding over the UniMem arena, as a Pallas TPU
+kernel.
+
+This generalizes `kernels/decode_attention` from a contiguous per-slot
+KV cache to the pooled page arena of `serve/kv_cache.py`: K/V live in ONE
+(P, page, hkv, hd) physical arena shared by every sequence, and each
+sequence reaches its tokens through a (b, max_pages) block table.  That
+is the paper's single pooled memory applied to serving — pages stay
+RESIDENT in their arena slots (the localized DRAM arrays), the one query
+is broadcast, and only tiny per-page softmax summaries (m, l, acc)
+travel back to be merged.
+
+Grid (b, kv_heads, max_pages): each cell DMAs exactly one physical page
+into VMEM — the page id comes from the scalar-prefetched block table, so
+the index map itself walks the UniMem page table and the gather never
+materializes a contiguous copy of the sequence.  Each cell reduces its
+page for the whole GQA query group; the combine over pages is the same
+log-sum-exp merge as the contiguous flash-decoding kernel
+(`decode_attention.kernel.combine_splits`).
+
+Pages past a sequence's length may point at the arena's null slot; the
+position mask zeroes their contribution (m = -inf, l = 0), so the merge
+ignores them.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref,
+                  m_ref, l_ref, acc_ref, *, page_size: int):
+    bi = pl.program_id(0)
+    pi = pl.program_id(2)
+    q = q_ref[0, 0]                                # (group, d)
+    k = k_ref[0, :, 0, :]                          # (page, d)
+    v = v_ref[0, :, 0, :]
+    pos = pos_ref[bi]                              # newest valid index
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)   # (group, page)
+    s = s / math.sqrt(q.shape[-1])
+    kv_pos = pi * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(kv_pos <= pos, s, NEG_INF)
+
+    m = s.max(axis=-1)                             # (group,)
+    p = jnp.exp(s - m[:, None])
+    l = p.sum(axis=-1)
+    acc = jnp.dot(p.astype(v.dtype), v,
+                  preferred_element_type=jnp.float32)         # (group, d)
+    m_ref[0, 0, 0] = m
+    l_ref[0, 0, 0] = l
+    acc_ref[0, 0, 0] = acc
+
+
+def paged_decode_attention_pallas(q, k_pages, v_pages, block_table,
+                                  positions, *, interpret: bool = False):
+    """q: (b, hq, d); k_pages/v_pages: (P, page, hkv, d) physical arena
+    for ONE layer; block_table: (b, max_pages) int32 physical page ids
+    (entries past the sequence may be any valid slot, e.g. the null
+    page); positions: (b,) inclusive newest token index.  Returns the
+    per-page partials (m, l, acc) for `combine_pages`.
+    """
+    b, hq, d = q.shape
+    page = k_pages.shape[1]
+    hkv = k_pages.shape[2]
+    group = hq // hkv
+    max_pages = block_table.shape[1]
+
+    qg = q.reshape(b, hkv, group, d)
+    # NOTE jax 0.4.x index-map convention: grid indices first, then the
+    # scalar-prefetch refs.
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, d),
+                         lambda bi, h, pi, bt, ps: (bi, h, 0, 0)),
+            pl.BlockSpec((1, page, 1, d),
+                         lambda bi, h, pi, bt, ps: (bt[bi, pi], 0, h, 0)),
+            pl.BlockSpec((1, page, 1, d),
+                         lambda bi, h, pi, bt, ps: (bt[bi, pi], 0, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, group),
+                         lambda bi, h, pi, bt, ps: (bi, h, pi, 0)),
+            pl.BlockSpec((1, 1, 1, group),
+                         lambda bi, h, pi, bt, ps: (bi, h, pi, 0)),
+            pl.BlockSpec((1, 1, 1, group, d),
+                         lambda bi, h, pi, bt, ps: (bi, h, pi, 0, 0)),
+        ],
+    )
+    m, l, acc = pl.pallas_call(
+        functools.partial(_paged_kernel, page_size=page),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, max_pages, group), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, max_pages, group), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, max_pages, group, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), positions.astype(jnp.int32),
+      qg, k_pages, v_pages)
+    return m, l, acc
+
+
+def combine_pages(m, l, acc, b: int, hq: int, d: int, out_dtype):
+    """Log-sum-exp merge of per-page partials -> (b, hq, d).  Reuses the
+    split-KV combine: a page is just a split whose offset came from the
+    block table."""
+    from repro.kernels.decode_attention.kernel import combine_splits
+    hkv, mp = m.shape[1], m.shape[2]
+    group = hq // hkv
+    m2 = m.reshape(b * hkv, mp, group)
+    l2 = l.reshape(b * hkv, mp, group)
+    a2 = acc.reshape(b * hkv, mp, group, d)
+    return combine_splits(m2, l2, a2, b, hq, d, out_dtype)

@@ -1,0 +1,25 @@
+"""Jit'd wrapper for paged flash-decoding (interpret-mode path off-TPU)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.paged_attention import kernel as K
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q, k_pages, v_pages, block_table, positions,
+                           interpret=None):
+    """q: (b, hq, d); k_pages/v_pages: (P, page, hkv, d) one layer's
+    arena; block_table: (b, max_pages); positions: (b,) inclusive newest
+    index.  Returns (b, hq, d)."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    b, hq, d = q.shape
+    m, l, acc = K.paged_decode_attention_pallas(
+        q, k_pages, v_pages, block_table, positions, interpret=interpret)
+    return K.combine_pages(m, l, acc, b, hq, d, q.dtype)

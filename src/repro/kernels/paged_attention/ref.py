@@ -1,0 +1,30 @@
+"""Pure-jnp oracle: masked single-token GQA attention through a block
+table into the paged arena (the XLA-gather formulation the kernel
+replaces — dynamic-slices into the single arena, no pool copy)."""
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, block_table, positions):
+    """q: (b, hq, d); k_pages/v_pages: (P, page, hkv, d) one layer's
+    physical arena; block_table: (b, max_pages) int32; positions: (b,)
+    inclusive newest index.  Returns (b, hq, d)."""
+    b, hq, d = q.shape
+    page, hkv = k_pages.shape[1], k_pages.shape[2]
+    mp = block_table.shape[1]
+    S = mp * page
+    g = hq // hkv
+    k = k_pages[block_table].reshape(b, S, hkv, d)     # (b, mp, page,..) view
+    v = v_pages[block_table].reshape(b, S, hkv, d)
+    qg = q.reshape(b, hkv, g, d)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k).astype(jnp.float32)
+    s = s / math.sqrt(d)
+    mask = jnp.arange(S)[None, :] <= positions[:, None]
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, v)
+    return o.reshape(b, hq, d)

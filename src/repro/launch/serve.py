@@ -1,11 +1,14 @@
-"""Serving driver: continuous-batching engine over the UniMem pool.
+"""Serving driver: paged-native continuous batching on the UniMem arena.
 
     PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
-        --reduced --requests 16 --max-new 24
+        --reduced --requests 16 --max-new 24 [--layout paged|contiguous]
 
 Spins up a reduced (or full, on real hardware) model, submits a synthetic
 request stream with mixed prompt lengths, runs the engine to completion
-and prints latency/throughput/pool stats.
+and prints latency/throughput/pool stats including the paged arena's
+page high-water mark (the memory the layout actually ties down).
+Transformer-family arches default to the paged layout; state-cache
+families (ssm/hybrid) fall back to contiguous automatically.
 """
 from __future__ import annotations
 
@@ -32,6 +35,11 @@ def main(argv=None):
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--layout", default=None,
+                    choices=["paged", "contiguous"],
+                    help="default: paged where the family supports it")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="prompt tokens prefilled per engine step (paged)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -45,7 +53,9 @@ def main(argv=None):
 
     params = fam.init(jax.random.key(args.seed), cfg)
     engine = ServingEngine(cfg, params, max_batch=args.max_batch,
-                           max_seq=args.max_seq, page_size=args.page_size)
+                           max_seq=args.max_seq, page_size=args.page_size,
+                           layout=args.layout,
+                           prefill_chunk=args.prefill_chunk)
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
         plen = int(rng.integers(4, args.max_seq - args.max_new))

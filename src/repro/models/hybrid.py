@@ -144,6 +144,13 @@ def loss_fn(params, cfg: ModelConfig, batch):
 
 # ----------------------------------------------------------------- serving
 
+# Hybrid caches mix SSM state with KV; paging only the KV share is an
+# open item — the engine serves this family from the contiguous layout.
+init_paged_cache = None
+paged_prefill = None
+paged_decode_step = None
+
+
 def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
     dtype = dtype or cfg.compute_dtype
     G = cfg.num_layers // cfg.shared_attn_period

@@ -172,6 +172,47 @@ def run_decode_attention(cfg: ModelConfig, q, k_cache, v_cache, position):
     return decode_attention(q, k_cache, v_cache, position)
 
 
+def run_paged_decode_attention(cfg: ModelConfig, q, k_pages, v_pages,
+                               block_table, positions):
+    """Config-dispatched paged decode attention over the UniMem arena.
+
+    q: (b, hq, d); k_pages/v_pages: (P, page, hkv, d) ONE layer's
+    physical page arena; block_table: (b, max_pages) page-table rows;
+    positions: (b,) inclusive newest index.  flash_pallas routes to the
+    Pallas block-table kernel (resident pages, travelling query); other
+    impls use the XLA gather oracle.  Returns (b, hq*d)."""
+    b, hq, d = q.shape
+    if cfg.attention_impl == "flash_pallas":
+        from repro.kernels.paged_attention.ops import paged_decode_attention
+        o = paged_decode_attention(q, k_pages, v_pages, block_table, positions)
+    else:
+        from repro.kernels.paged_attention.ref import paged_decode_attention_ref
+        o = paged_decode_attention_ref(q, k_pages, v_pages, block_table,
+                                       positions)
+    return o.reshape(b, hq * d)
+
+
+def chunk_attention_over_pages(q, k_view, v_view, positions):
+    """Causal attention of a prefill chunk against a gathered page view.
+
+    q: (b, c, hq, d) chunk queries; k_view/v_view: (b, S, hkv, d) the
+    sequence's pages gathered contiguous (prefix + just-written chunk);
+    positions: (b, c) absolute position of each query token.  Returns
+    (b, c, hq*d).  Dense per-chunk — chunks are small; the quadratic
+    term is c*S, not prompt^2."""
+    b, c, hq, d = q.shape
+    S, hkv = k_view.shape[1], k_view.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, c, hkv, g, d)
+    s = jnp.einsum("bchgd,bshd->bhgcs", qg, k_view).astype(jnp.float32)
+    s = s / math.sqrt(d)
+    mask = jnp.arange(S)[None, None, :] <= positions[:, :, None]   # (b,c,S)
+    s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v_view.dtype)
+    o = jnp.einsum("bhgcs,bshd->bchgd", p, v_view)
+    return o.reshape(b, c, hq * d)
+
+
 def run_attention(cfg: ModelConfig, q, k, v, *, q_offset=0):
     if cfg.attention_impl == "dense":
         return dense_attention(q, k, v, causal=cfg.causal, q_offset=q_offset)

@@ -322,6 +322,13 @@ def loss_fn(params, cfg: ModelConfig, batch):
 
 # ----------------------------------------------------------------- serving
 
+# SSM state is O(1) per sequence — nothing to page; the engine serves
+# this family from the contiguous layout.
+init_paged_cache = None
+paged_prefill = None
+paged_decode_step = None
+
+
 def init_cache(cfg: ModelConfig, batch: int, max_seq: int = 0, dtype=None):
     """SSM cache is O(1) in sequence length (max_seq unused)."""
     dtype = dtype or cfg.compute_dtype

@@ -357,6 +357,12 @@ def loss_fn(params, cfg: ModelConfig, batch):
 init_cache = T.init_cache
 cache_axes = T.cache_axes
 
+# MoE decode routes per token through expert dispatch; wiring that into
+# the paged dataplane is an open item — contiguous fallback for now.
+init_paged_cache = None
+paged_prefill = None
+paged_decode_step = None
+
 
 def prefill(params, cfg: ModelConfig, batch, cache):
     tokens = batch["tokens"]

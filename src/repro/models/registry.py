@@ -7,6 +7,13 @@ Each family module exposes:
     loss_fn(params, cfg, batch) -> scalar loss
     init_cache(cfg, batch, max_seq) / cache_axes() / prefill / decode_step
       (None for encoder-only families)
+
+Families that serve from the UniMem paged arena additionally expose the
+paged-cache hooks (None elsewhere — the engine falls back to the
+contiguous layout for them):
+    init_paged_cache(cfg, num_slots, page_size) -> {"k","v"} page arena
+    paged_prefill(params, cfg, tokens, arena, block_table, start)
+    paged_decode_step(params, cfg, arena, block_table, positions, tokens)
 """
 from __future__ import annotations
 
@@ -34,6 +41,13 @@ def get_family(cfg: ModelConfig):
 
 def has_decode(cfg: ModelConfig) -> bool:
     return getattr(get_family(cfg), "decode_step", None) is not None
+
+
+def has_paged(cfg: ModelConfig) -> bool:
+    """True when the family can serve from the UniMem paged arena."""
+    fam = get_family(cfg)
+    return (getattr(fam, "init_paged_cache", None) is not None
+            and getattr(fam, "paged_decode_step", None) is not None)
 
 
 def supports_long_context(cfg: ModelConfig) -> bool:

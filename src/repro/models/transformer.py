@@ -211,3 +211,113 @@ def _scatter_kv(cache_l, kv_new, pos):
     def upd(c, k, p):
         return jax.lax.dynamic_update_slice(c, k, (p, 0, 0))
     return jax.vmap(upd)(cache_l, kv_new, pos)
+
+
+# ------------------------------------------------- paged serving (UniMem)
+#
+# The paged hooks serve from ONE pooled page arena instead of per-slot
+# contiguous caches: K/V live in (layers, slots, page, hkv, hd) physical
+# pages, sequences reach their tokens through (b, max_pages) block
+# tables, and memory scales with tokens in flight.  The engine owns the
+# host-side page allocator (core/unimem.py); these functions are the
+# device-side dataplane it jits through serve_step.make_paged_serve_fns.
+
+def init_paged_cache(cfg: ModelConfig, num_slots: int, page_size: int,
+                     dtype=None):
+    """Physical page arena: `num_slots` includes any null/trash slots the
+    caller reserves (the serving arena keeps one for inactive rows)."""
+    dtype = dtype or cfg.compute_dtype
+    shape = (cfg.num_layers, num_slots, page_size,
+             cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def paged_cache_axes():
+    # one pooled arena; kv heads may shard over "model" (TP), pages stay
+    # whole — a page is the unit of residency.
+    kv = (None, None, None, "act_kv_heads", None)
+    return {"k": kv, "v": kv}
+
+
+def _paged_write(arena_l, kv, block_table, start):
+    """Scatter a chunk's K or V into arena pages through the block table.
+
+    arena_l: (slots, page, hkv, d); kv: (b, c, hkv, d); start: (b,) first
+    absolute position of the chunk.  Rows whose block-table entries point
+    at the null slot scatter harmlessly into it."""
+    page = arena_l.shape[1]
+    b, c = kv.shape[0], kv.shape[1]
+    pos = start[:, None] + jnp.arange(c)[None, :]              # (b, c)
+    phys = jnp.take_along_axis(block_table, pos // page, axis=1)
+    off = pos % page
+    return arena_l.at[phys.reshape(-1), off.reshape(-1)].set(
+        kv.reshape(b * c, *kv.shape[2:]).astype(arena_l.dtype))
+
+
+def paged_prefill(params, cfg: ModelConfig, tokens, arena, block_table,
+                  start):
+    """Prefill one chunk of each sequence's prompt through the arena.
+
+    tokens: (b, c) chunk tokens at absolute positions start..start+c-1
+    (start: (b,) int32); arena: {"k","v"} (L, slots, page, hkv, hd);
+    block_table: (b, max_pages).  Writes the chunk's K/V into the
+    sequences' pages, attends causally against everything already in the
+    pages (shared prefix included — that is how a forked prompt skips
+    recompute), and returns (arena, last-token logits (b, vocab)).
+    Chunking long prompts = calling this repeatedly with advancing
+    `start` while decode steps interleave."""
+    b, c = tokens.shape
+    positions = start[:, None] + jnp.arange(c)[None, :]
+    x = L.embed_tokens(params["embed"], cfg, tokens)
+    mp = block_table.shape[1]
+
+    def body(h, xs):
+        p, k_l, v_l = xs
+        hn = L.rmsnorm_apply(p["ln1"], h, cfg.norm_eps)
+        q, k, v = L.attention_qkv(p["attn"], cfg, hn, positions)
+        k_l = _paged_write(k_l, k, block_table, start)
+        v_l = _paged_write(v_l, v, block_table, start)
+        page = k_l.shape[1]
+        k_view = k_l[block_table].reshape(b, mp * page, *k_l.shape[2:])
+        v_view = v_l[block_table].reshape(b, mp * page, *v_l.shape[2:])
+        o = L.chunk_attention_over_pages(q, k_view, v_view, positions)
+        h = h + o @ p["attn"]["wo"]
+        hn = L.rmsnorm_apply(p["ln2"], h, cfg.norm_eps)
+        h = h + L.mlp_apply(p["mlp"], cfg, hn)
+        return h, (k_l, v_l)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["layers"], arena["k"], arena["v"]))
+    arena = {"k": k_new, "v": v_new}
+    h = L.rmsnorm_apply(params["ln_f"], x[:, -1:], cfg.norm_eps)
+    logits = L.logits_from_hidden(head_weights(params, cfg), cfg, h)
+    return arena, logits[:, 0]
+
+
+def paged_decode_step(params, cfg: ModelConfig, arena, block_table,
+                      positions, tokens):
+    """One fused decode step over the arena.  tokens: (b,) int32;
+    positions: (b,) index each new token is written at (== current
+    length); block_table: (b, max_pages).  Inactive rows point at the
+    null slot.  Returns (arena, logits (b, vocab))."""
+    x = L.embed_tokens(params["embed"], cfg, tokens[:, None])   # (b, 1, d)
+
+    def body(h, xs):
+        p, k_l, v_l = xs
+        hn = L.rmsnorm_apply(p["ln1"], h, cfg.norm_eps)
+        q, k, v = L.attention_qkv(p["attn"], cfg, hn, positions[:, None])
+        k_l = _paged_write(k_l, k, block_table, positions)
+        v_l = _paged_write(v_l, v, block_table, positions)
+        o = L.run_paged_decode_attention(cfg, q[:, 0], k_l, v_l,
+                                         block_table, positions)
+        h = h + (o @ p["attn"]["wo"])[:, None, :]
+        hn = L.rmsnorm_apply(p["ln2"], h, cfg.norm_eps)
+        h = h + L.mlp_apply(p["mlp"], cfg, hn)
+        return h, (k_l, v_l)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["layers"], arena["k"], arena["v"]))
+    arena = {"k": k_new, "v": v_new}
+    h = L.rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
+    logits = L.logits_from_hidden(head_weights(params, cfg), cfg, h)
+    return arena, logits[:, 0]

@@ -75,6 +75,12 @@ init_cache = T.init_cache
 cache_axes = T.cache_axes
 decode_step = T.decode_step     # params tree is a transformer superset
 
+# VLM prefill interleaves patch embeddings with tokens; the paged prefill
+# hook only understands token chunks — contiguous fallback for now.
+init_paged_cache = None
+paged_prefill = None
+paged_decode_step = None
+
 
 def prefill(params, cfg: ModelConfig, batch, cache):
     """Multimodal prefill: image patches + prompt tokens fill the cache."""

@@ -1,3 +1,22 @@
+"""Paged-native serving on the UniMem arena.
+
+Architecture (one pooled memory, the paper's form):
+
+    core/unimem.py           host control plane: page pool, refcounts,
+                             per-sequence page tables, copy-on-write
+    serve/kv_cache.py        device arena (+ null page) and COW copies
+    kernels/paged_attention  Pallas flash-decoding through block tables
+    models/<family>          paged hooks: init_paged_cache /
+                             paged_prefill / paged_decode_step
+    serve/serve_step.py      jitted closures over the hooks
+    serve/engine.py          continuous batching: lazy allocation,
+                             chunked prefill, prefix sharing, preemption
+
+Transformer-family models serve entirely from the paged arena (KV bytes
+scale with tokens in flight); families with state caches (ssm/hybrid)
+or family-specific decode structure (moe/vlm, pending) use the
+contiguous per-slot fallback behind the same engine API.
+"""
 from repro.serve.kv_cache import (
     PagedKVArena,
     paged_write,
@@ -6,5 +25,6 @@ from repro.serve.kv_cache import (
     insert_slot,
     clear_slot,
 )
-from repro.serve.serve_step import make_serve_fns, sample_logits, init_cache
+from repro.serve.serve_step import (
+    make_serve_fns, make_paged_serve_fns, sample_logits, init_cache)
 from repro.serve.engine import ServingEngine, Request, Result

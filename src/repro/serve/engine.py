@@ -1,21 +1,34 @@
-"""Continuous-batching serving engine over the UniMem page pool.
+"""Continuous-batching serving engine, paged-native on the UniMem arena.
 
-The engine owns `max_batch` decode slots backed by ONE family cache (the
-contiguous layout) and admits requests against a UniMem page pool sized
-to the real KV budget — a request is admitted only if the pool can cover
-its max footprint (prompt + max_new_tokens), which is exactly the paper's
-"single pooled memory, explicit allocation" discipline applied to
-serving.  Slots that finish free their pages back to the pool.
+The paper's serving claim made concrete: ONE pooled near-memory system
+(the page arena) backs every sequence's KV cache.  Pages stay resident;
+per step only the queries and tiny softmax summaries travel.  For
+families with paged hooks (transformer) the engine is **paged-native**:
+
+  * pages are allocated LAZILY as sequences grow — admission reserves
+    the prompt's pages only, so pool memory tracks tokens in flight,
+    not `max_batch * max_seq`;
+  * prompt-prefix pages are SHARED across requests through a page-hash
+    cache + `SequencePageTable.fork()` refcounts, with copy-on-write on
+    partial last pages (`PagedKVArena.cow_for_write`);
+  * long prefills are CHUNKED — each engine step advances admissions by
+    one chunk while the fused decode step keeps running, so a long
+    prompt never stalls tokens for active sequences;
+  * when the pool runs dry mid-decode the YOUNGEST sequence is
+    preempted back to the queue (recompute-on-readmit), which turns
+    OOM into backpressure.
+
+Families without paged hooks (ssm/hybrid state caches; moe/vlm pending)
+fall back to the contiguous layout: per-slot `max_seq` caches with the
+pool used as an admission counter over max footprints.
 
 Loop shape (classic continuous batching):
 
     while work:
-        admit: free slot + admissible request -> prefill(batch=1) -> insert
+        admit: free slot + admissible request -> slot enters PREFILL
+        prefill: one chunk per prefilling slot (paged) / whole prompt
         step:  one fused decode step over ALL active slots
         retire: eos / token-budget slots -> emit result, free pages
-
-Prefill is per-request (sequences arrive at different lengths; padding a
-joint prefill wastes quadratic attention), decode is fused across slots.
 """
 from __future__ import annotations
 
@@ -29,8 +42,8 @@ import jax.numpy as jnp
 from repro.core.unimem import UniMemPool, SequencePageTable, UniMemOOM
 from repro.models.config import ModelConfig
 from repro.models import registry
-from repro.serve.kv_cache import insert_slot, clear_slot
-from repro.serve.serve_step import make_serve_fns
+from repro.serve.kv_cache import PagedKVArena, insert_slot, clear_slot
+from repro.serve.serve_step import make_serve_fns, make_paged_serve_fns
 from repro.utils.logging import get_logger
 
 log = get_logger("engine")
@@ -64,36 +77,74 @@ class Result:
 @dataclass
 class _Slot:
     request: Request
-    pages: SequencePageTable
+    pages: SequencePageTable                 # paged: live table; contig: reservation
     generated: list[int] = field(default_factory=list)
     last_token: int = 0
     admitted_at: float = 0.0
+    order: int = 0                           # admission sequence number
+    prefill_pos: int = 0                     # prompt tokens already in pages
+    shared_tokens: int = 0                   # of which reused from the prefix cache
+    page_hashes: list[int] = field(default_factory=list)
+
+    @property
+    def prefilling(self) -> bool:
+        return self.prefill_pos < len(self.request.prompt)
 
 
 class ServingEngine:
+    """`layout="paged"` (default where the family supports it) serves
+    from the UniMem arena; `layout="contiguous"` is the per-slot
+    fallback.  Both run the same continuous-batching loop."""
+
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
                  max_seq: int = 1024, page_size: int = 16,
-                 pool_pages: int | None = None, temperature: float = 0.0):
+                 pool_pages: int | None = None, temperature: float = 0.0,
+                 layout: str | None = None, prefill_chunk: int | None = None):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
+        self.page_size = page_size
         fam = registry.get_family(cfg)
         if fam.decode_step is None:
             raise ValueError(f"family {cfg.family!r} cannot serve (no decode)")
         self.fam = fam
-        self.cache = fam.init_cache(cfg, max_batch, max_seq)
-        self.cache_ax = fam.cache_axes()
-        # UniMem pool: default budget = the slots' worth of pages.
+        if layout is None:
+            layout = "paged" if registry.has_paged(cfg) else "contiguous"
+        if layout == "paged" and not registry.has_paged(cfg):
+            raise ValueError(f"family {cfg.family!r} has no paged path")
+        if layout not in ("paged", "contiguous"):
+            raise ValueError(f"unknown layout {layout!r}")
+        self.layout = layout
         pool_pages = pool_pages or (max_batch * max_seq) // page_size
-        self.pool = UniMemPool(pool_pages, page_size)
-        self.prefill_fn, self.decode_fn, _ = make_serve_fns(
-            cfg, temperature=temperature)
+        self.max_pages = -(-max_seq // page_size)     # block-table width
+        self.prefill_chunk = prefill_chunk or max(page_size * 4, 32)
+
+        if layout == "paged":
+            self.arena = PagedKVArena(cfg, num_pages=pool_pages,
+                                      page_size=page_size)
+            self.pool = self.arena.pool
+            self.prefill_fn, self.decode_fn = make_paged_serve_fns(
+                cfg, temperature=temperature)
+            self.cache = None
+            # page-content hash -> physical page id (prompt prefix reuse)
+            self._prefix_cache: dict[int, int] = {}
+            self._page_hash: dict[int, int] = {}
+        else:
+            self.arena = None
+            self.cache = fam.init_cache(cfg, max_batch, max_seq)
+            self.cache_ax = fam.cache_axes()
+            self.pool = UniMemPool(pool_pages, page_size)
+            self.prefill_fn, self.decode_fn, _ = make_serve_fns(
+                cfg, temperature=temperature)
+
         self.pending: list[Request] = []
         self.slots: dict[int, _Slot] = {}        # slot index -> state
         self.results: list[Result] = []
         self.steps = 0
         self.tokens_out = 0
+        self._admitted = 0
+        self._key = jax.random.key(0)
 
     # ------------------------------------------------------------ intake
 
@@ -107,9 +158,110 @@ class ServingEngine:
     def _free_slots(self) -> list[int]:
         return [i for i in range(self.max_batch) if i not in self.slots]
 
+    # ------------------------------------------------- prefix page cache
+
+    def _page_hashes(self, prompt: np.ndarray) -> list[int]:
+        """Chained content hashes of the prompt's FULL pages (vLLM-style:
+        each page's identity includes everything before it)."""
+        ps = self.page_size
+        out, h = [], 0
+        for i in range(len(prompt) // ps):
+            h = hash((h, prompt[i * ps:(i + 1) * ps].tobytes()))
+            out.append(h)
+        return out
+
+    def _match_prefix(self, prompt: np.ndarray) -> tuple[list[int], list[int]]:
+        """Longest run of cached full pages for this prompt, capped so at
+        least one prompt token is always re-prefilled (it produces the
+        first-token logits).  Returns (page_ids, their hashes)."""
+        hashes = self._page_hashes(prompt)
+        limit = (len(prompt) - 1) // self.page_size
+        pages = []
+        for h in hashes[:limit]:
+            page = self._prefix_cache.get(h)
+            if page is None or not self.pool.is_allocated(page):
+                break
+            pages.append(page)
+        return pages, hashes
+
+    def _register_prefix(self, slot: _Slot):
+        """Publish the slot's prompt pages for future sharing — only the
+        pages whose K/V the prefill has fully WRITTEN (registering at
+        admission would let a second request attend to still-empty
+        pages)."""
+        full = min(len(slot.request.prompt), slot.prefill_pos) // self.page_size
+        for i, h in enumerate(slot.page_hashes[:full]):
+            if h not in self._prefix_cache:
+                page = slot.pages.pages[i]
+                self._prefix_cache[h] = page
+                self._page_hash[page] = h
+
+    def _absorb_shared(self, s: _Slot):
+        """Late-binding prefix sharing: a slot that was admitted before a
+        matching prompt finished prefilling can still adopt the published
+        pages — swap its own (not yet written) pages for the shared ones
+        and skip those chunks.  Only at page-aligned prefill positions."""
+        ps = self.page_size
+        limit = (len(s.request.prompt) - 1) // ps
+        while s.prefill_pos % ps == 0:
+            i = s.prefill_pos // ps
+            if i >= limit or i >= len(s.page_hashes):
+                break
+            page = self._prefix_cache.get(s.page_hashes[i])
+            if (page is None or not self.pool.is_allocated(page)
+                    or page == s.pages.pages[i]):
+                break
+            self.pool.share([page])
+            self.pool.free([s.pages.pages[i]])   # ours was never written
+            s.pages.pages[i] = page
+            s.prefill_pos += ps
+            s.shared_tokens += ps
+
+    def _release_pages(self, seq: SequencePageTable):
+        """Free a table and purge prefix-cache entries whose page died."""
+        pages = list(seq.pages)
+        seq.release()
+        for p in pages:
+            if not self.pool.is_allocated(p):
+                h = self._page_hash.pop(p, None)
+                if h is not None and self._prefix_cache.get(h) == p:
+                    del self._prefix_cache[h]
+
     # ------------------------------------------------------------- admit
 
     def _admit(self):
+        if self.layout == "paged":
+            self._admit_paged()
+        else:
+            self._admit_contiguous()
+
+    def _admit_paged(self):
+        """Admission reserves the PROMPT's pages only (lazy growth covers
+        decode); shared prefix pages cost nothing extra."""
+        free = self._free_slots()
+        while free and self.pending:
+            req = self.pending[0]
+            plen = len(req.prompt)
+            shared_pages, hashes = self._match_prefix(req.prompt)
+            shared_tokens = len(shared_pages) * self.page_size
+            need = self.pool.pages_for(plen) - len(shared_pages)
+            if need > self.pool.free_pages:
+                break                            # UniMem backpressure
+            self.pending.pop(0)
+            slot = free.pop(0)
+            if shared_pages:
+                self.pool.share(shared_pages)
+            seq = SequencePageTable(self.pool, list(shared_pages),
+                                    shared_tokens)
+            seq.append_tokens(plen - shared_tokens)
+            s = _Slot(request=req, pages=seq, admitted_at=time.perf_counter(),
+                      order=self._admitted, prefill_pos=shared_tokens,
+                      shared_tokens=shared_tokens, page_hashes=hashes)
+            self._admitted += 1
+            self.slots[slot] = s
+            self._register_prefix(s)    # shared pages are already written
+
+    def _admit_contiguous(self):
         free = self._free_slots()
         while free and self.pending:
             req = self.pending[0]
@@ -127,11 +279,106 @@ class ServingEngine:
             self.cache = insert_slot(self.cache, one_cache, slot, self.cache_ax)
             self.slots[slot] = _Slot(
                 request=req, pages=pages, generated=[first],
-                last_token=first, admitted_at=time.perf_counter())
+                last_token=first, admitted_at=time.perf_counter(),
+                order=self._admitted, prefill_pos=len(req.prompt))
+            self._admitted += 1
+
+    # ----------------------------------------------------------- prefill
+
+    def _prefill_tick(self):
+        """Advance every prefilling slot by ONE chunk (paged layout).
+        Decode over already-active slots proceeds in the same engine
+        step, so long prompts never freeze token emission."""
+        if self.layout != "paged":
+            return
+        for s in self.slots.values():
+            if not s.prefilling:
+                continue
+            self._absorb_shared(s)
+            prompt = s.request.prompt
+            c = min(self.prefill_chunk, len(prompt) - s.prefill_pos)
+            chunk = jnp.asarray(
+                prompt[s.prefill_pos:s.prefill_pos + c], jnp.int32)[None, :]
+            bt = jnp.asarray(self.arena.block_table([s.pages], self.max_pages))
+            start = jnp.asarray([s.prefill_pos], jnp.int32)
+            self.arena.kv, logits = self.prefill_fn(
+                self.params, chunk, self.arena.kv, bt, start)
+            s.prefill_pos += c
+            self._register_prefix(s)             # newly-written full pages
+            if not s.prefilling:                 # prompt complete
+                first = int(jnp.argmax(logits[0]))
+                s.generated = [first]
+                s.last_token = first
 
     # ------------------------------------------------------------- step
 
-    def _decode_active(self):
+    def _with_preemption(self, s: _Slot, fn) -> None:
+        """Run one ATOMIC allocator step (raises UniMemOOM before any
+        mutation), preempting younger slots until it fits."""
+        while True:
+            try:
+                fn()
+                return
+            except UniMemOOM:
+                if not self._preempt_youngest(but=s):
+                    raise
+
+    def _grow_for_write(self, s: _Slot) -> None:
+        """Lazy page growth + COW before this step's token write, each
+        retried separately under pool pressure — retrying them as a unit
+        would re-run the append after a COW OOM and double-count the
+        token."""
+        self._with_preemption(s, lambda: s.pages.append_tokens(1))
+        self._with_preemption(s, lambda: self.arena.cow_for_write(s.pages))
+
+    def _preempt_youngest(self, but: _Slot) -> bool:
+        """Kick the most recently admitted other slot back to the queue
+        (its work is recomputed on readmission) and reclaim its pages."""
+        victims = [(i, s) for i, s in self.slots.items()
+                   if s is not but]
+        if not victims:
+            return False
+        idx, victim = max(victims, key=lambda kv: kv[1].order)
+        log.info("engine: preempting uid=%d (pool pressure)",
+                 victim.request.uid)
+        self._release_pages(victim.pages)
+        del self.slots[idx]
+        self.pending.insert(0, victim.request)
+        return True
+
+    def _decode_paged(self):
+        active = {i: s for i, s in self.slots.items() if not s.prefilling
+                  and s.generated}
+        if not active:
+            return
+        # grow tables first (may preempt younger slots under pool pressure)
+        for i, s in list(active.items()):
+            if self.slots.get(i) is not s:
+                continue                         # already preempted this step
+            self._grow_for_write(s)
+        active = {i: s for i, s in active.items() if self.slots.get(i) is s}
+        if not active:
+            return
+
+        tokens = np.zeros((self.max_batch,), np.int32)
+        positions = np.zeros((self.max_batch,), np.int32)
+        bt = np.full((self.max_batch, self.max_pages), self.arena.null_page,
+                     np.int32)
+        for i, s in active.items():
+            tokens[i] = s.last_token
+            positions[i] = s.pages.num_tokens - 1   # slot appended above
+            bt[i, :len(s.pages.pages)] = s.pages.pages
+        self.arena.kv, nxt, self._key = self.decode_fn(
+            self.params, self.arena.kv, jnp.asarray(bt),
+            jnp.asarray(positions), jnp.asarray(tokens), self._key)
+        nxt = np.asarray(nxt)
+        for i, s in active.items():
+            tok = int(nxt[i])
+            s.generated.append(tok)
+            s.last_token = tok
+            self.tokens_out += 1
+
+    def _decode_contiguous(self):
         if not self.slots:
             return
         tokens = np.zeros((self.max_batch,), np.int32)
@@ -149,6 +396,8 @@ class ServingEngine:
 
     def _retire(self):
         for i, s in list(self.slots.items()):
+            if s.prefilling or not s.generated:
+                continue
             done = (len(s.generated) >= s.request.max_new_tokens
                     or s.generated[-1] == s.request.eos_token)
             if not done:
@@ -157,13 +406,20 @@ class ServingEngine:
                 uid=s.request.uid, tokens=list(s.generated),
                 prompt_len=len(s.request.prompt),
                 admitted_at=s.admitted_at, finished_at=time.perf_counter()))
-            s.pages.release()                   # pages back to the one pool
-            self.cache = clear_slot(self.cache, i, self.cache_ax)
+            if self.layout == "paged":
+                self._release_pages(s.pages)
+            else:
+                s.pages.release()               # pages back to the one pool
+                self.cache = clear_slot(self.cache, i, self.cache_ax)
             del self.slots[i]
 
     def step(self):
         self._admit()
-        self._decode_active()
+        self._prefill_tick()
+        if self.layout == "paged":
+            self._decode_paged()
+        else:
+            self._decode_contiguous()
         self.steps += 1
         self._retire()
 
@@ -173,18 +429,59 @@ class ServingEngine:
             self.step()
         dt = time.perf_counter() - t0
         if dt > 0:
-            log.info("engine: %d results, %d tokens, %.1f tok/s, pool util %.2f",
-                     len(self.results), self.tokens_out, self.tokens_out / dt,
-                     self.pool.stats().utilization)
+            log.info("engine[%s]: %d results, %d tokens, %.1f tok/s, "
+                     "pool util %.2f (peak %d pages)",
+                     self.layout, len(self.results), self.tokens_out,
+                     self.tokens_out / dt, self.pool.stats().utilization,
+                     self.pool.stats().peak_allocated_pages)
         return self.results
+
+    # -------------------------------------------------------------- fork
+
+    def fork(self, uid: int, new_uid: int) -> None:
+        """Branch an active sequence into a free slot: the child SHARES
+        every page (refcounts, zero copies) and diverges lazily — the
+        first write into the shared partial last page triggers
+        copy-on-write.  Paged layout only."""
+        if self.layout != "paged":
+            raise ValueError("fork requires the paged layout")
+        free = self._free_slots()
+        if not free:
+            raise RuntimeError("no free slot to fork into")
+        src = next((s for s in self.slots.values()
+                    if s.request.uid == uid), None)
+        if src is None or src.prefilling:
+            raise ValueError(f"uid {uid} is not active")
+        child_req = Request(uid=new_uid, prompt=src.request.prompt,
+                            max_new_tokens=src.request.max_new_tokens,
+                            eos_token=src.request.eos_token)
+        child = _Slot(request=child_req, pages=src.pages.fork(),
+                      generated=list(src.generated),
+                      last_token=src.last_token,
+                      admitted_at=time.perf_counter(), order=self._admitted,
+                      prefill_pos=len(child_req.prompt),
+                      shared_tokens=src.pages.num_tokens)
+        self._admitted += 1
+        self.slots[free[0]] = child
 
     # ------------------------------------------------------------- stats
 
+    def peak_kv_bytes(self) -> int:
+        """Device bytes the KV layout actually ties down: the contiguous
+        cache reserves its full footprint up front; the paged arena's
+        cost is the page high-water mark."""
+        if self.layout == "paged":
+            return self.pool.stats().peak_allocated_pages * self.arena.page_bytes
+        return sum(int(a.size) * a.dtype.itemsize
+                   for a in jax.tree.leaves(self.cache))
+
     def stats(self) -> dict:
         return {
+            "layout": self.layout,
             "steps": self.steps,
             "tokens_out": self.tokens_out,
             "active_slots": len(self.slots),
             "pending": len(self.pending),
+            "peak_kv_bytes": self.peak_kv_bytes(),
             "pool": self.pool.stats().__dict__,
         }

@@ -4,16 +4,21 @@ Two layouts:
 
 * **Contiguous** — the family cache (`init_cache`): per-slot (batch-row)
   K/V of fixed max_seq.  Simple, works for every family; memory is
-  `max_batch * max_seq` whether or not sequences are that long.
+  `max_batch * max_seq` whether or not sequences are that long.  This is
+  the fallback for families without paged hooks (ssm/hybrid state
+  caches, moe/vlm pending).
 
 * **Paged (UniMem)** — ONE device arena of KV pages shared by every
   sequence (the paper's single pooled memory form): K/V shaped
-  (layers, num_pages, page_size, kv_heads, head_dim); each sequence maps
-  logical pages -> physical pages through a block table.  Memory is
+  (layers, num_pages + 1, page_size, kv_heads, head_dim); each sequence
+  maps logical pages -> physical pages through a block table.  Memory is
   proportional to TOKENS IN FLIGHT, not slots x max_seq, and prefix
-  sharing (pool refcounts) is free.  `core/unimem.py` is the host-side
-  allocator; this module owns the device arrays + the gather/scatter and
-  paged-attention device code.
+  sharing (pool refcounts + copy-on-write last pages) is free.  The
+  LAST physical slot is the null page: inactive batch rows and
+  past-the-end block-table entries point at it, so fused steps over a
+  ragged batch scatter/gather harmlessly.  `core/unimem.py` is the
+  host-side allocator; this module owns the device arrays; the
+  family's paged hooks + `kernels/paged_attention` are the dataplane.
 
 Tests assert paged decode attention == contiguous decode attention.
 """
@@ -36,37 +41,83 @@ NEG_INF = -1e30
 
 @dataclass
 class PagedKVArena:
-    """Device-side UniMem arena + host-side page allocator."""
+    """Device-side UniMem arena + host-side page allocator.
+
+    `num_pages` is the POOL size; the device arrays carry one extra
+    physical slot (`null_page == num_pages`) that is never allocated —
+    the write/gather target for inactive rows and padding.
+    """
     cfg: ModelConfig
     num_pages: int
     page_size: int
-    k: jax.Array = field(default=None, repr=False)   # (L, P, page, hkv, hd)
-    v: jax.Array = field(default=None, repr=False)
+    kv: dict = field(default=None, repr=False)       # {"k","v"}: (L, P+1, page, hkv, hd)
     pool: UniMemPool = field(default=None, repr=False)
 
     def __post_init__(self):
-        c = self.cfg
-        shape = (c.num_layers, self.num_pages, self.page_size,
-                 c.num_kv_heads, c.head_dim)
-        if self.k is None:
-            self.k = jnp.zeros(shape, c.compute_dtype)
-            self.v = jnp.zeros(shape, c.compute_dtype)
+        if self.kv is None:
+            from repro.models import registry
+            fam = registry.get_family(self.cfg)
+            if getattr(fam, "init_paged_cache", None) is not None:
+                self.kv = fam.init_paged_cache(
+                    self.cfg, self.num_pages + 1, self.page_size)
+            else:                        # raw arena (tests, tools)
+                c = self.cfg
+                shape = (c.num_layers, self.num_pages + 1, self.page_size,
+                         c.num_kv_heads, c.head_dim)
+                self.kv = {"k": jnp.zeros(shape, c.compute_dtype),
+                           "v": jnp.zeros(shape, c.compute_dtype)}
         if self.pool is None:
             self.pool = UniMemPool(self.num_pages, self.page_size)
 
+    # The null page lives past the pool so the allocator can never hand
+    # it out.
+    @property
+    def null_page(self) -> int:
+        return self.num_pages
+
+    @property
+    def k(self) -> jax.Array:
+        return self.kv["k"]
+
+    @property
+    def v(self) -> jax.Array:
+        return self.kv["v"]
+
     @property
     def bytes(self) -> int:
-        return 2 * self.k.size * self.k.dtype.itemsize
+        return sum(int(a.size) * a.dtype.itemsize for a in self.kv.values())
+
+    @property
+    def page_bytes(self) -> int:
+        """Device bytes of ONE page across all layers and both of K/V."""
+        return self.bytes // (self.num_pages + 1)
 
     def new_sequence(self) -> SequencePageTable:
         return SequencePageTable(self.pool)
 
-    def block_table(self, seqs: list[SequencePageTable], max_pages: int) -> np.ndarray:
-        """(b, max_pages) physical page ids, -padded with 0 (masked by length)."""
-        bt = np.zeros((len(seqs), max_pages), np.int32)
+    def block_table(self, seqs: list[SequencePageTable],
+                    max_pages: int) -> np.ndarray:
+        """(b, max_pages) physical page ids, padded with the null page."""
+        bt = np.full((len(seqs), max_pages), self.null_page, np.int32)
         for i, s in enumerate(seqs):
             bt[i, :len(s.pages)] = s.pages
         return bt
+
+    def copy_page(self, src: int, dst: int) -> None:
+        """Device-side page copy (the COW fixup after
+        `SequencePageTable.cow_last_page`)."""
+        self.kv = {name: a.at[:, dst].set(a[:, src])
+                   for name, a in self.kv.items()}
+
+    def cow_for_write(self, seq: SequencePageTable) -> bool:
+        """Make `seq`'s last page privately owned before a write lands in
+        it, copying the device page when it was shared.  Returns True if
+        a copy-on-write happened."""
+        moved = seq.cow_last_page()
+        if moved is None:
+            return False
+        self.copy_page(*moved)
+        return True
 
 
 def paged_write(k_arena, v_arena, k_new, v_new, block_table, positions):
@@ -109,23 +160,16 @@ def paged_decode_attention(q, k_arena, v_arena, block_table, positions, layer):
     q: (b, hq, hd); arenas (L, P, page, hkv, hd); positions: (b,) index of
     the newest token (inclusive).  Returns (b, hq*hd).
 
-    The gather keeps pages in place (near-memory: pages are the resident
+    Thin multi-layer-arena wrapper over the `kernels/paged_attention`
+    oracle (the Pallas kernel's ops path is what serving jits): the
+    gather keeps pages in place (near-memory: pages are the resident
     DRAM arrays; the query is what travels) — XLA lowers the page gather
     to dynamic-slices into the single arena, never copying the pool.
     """
+    from repro.kernels.paged_attention.ref import paged_decode_attention_ref
     b, hq, hd = q.shape
-    k_pages = gather_pages(k_arena[layer:layer + 1], block_table)[0]
-    v_pages = gather_pages(v_arena[layer:layer + 1], block_table)[0]
-    S = k_pages.shape[1]
-    hkv = k_pages.shape[2]
-    g = hq // hkv
-    qg = q.reshape(b, hkv, g, hd)
-    s = jnp.einsum("bhgd,bshd->bhgs", qg, k_pages).astype(jnp.float32)
-    s = s / math.sqrt(hd)
-    mask = jnp.arange(S)[None, :] <= positions[:, None]
-    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1).astype(v_pages.dtype)
-    o = jnp.einsum("bhgs,bshd->bhgd", p, v_pages)
+    o = paged_decode_attention_ref(q, k_arena[layer], v_arena[layer],
+                                   block_table, positions)
     return o.reshape(b, hq * hd)
 
 

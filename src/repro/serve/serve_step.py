@@ -7,6 +7,12 @@ otherwise; both are pure functions of an explicit PRNG key (reproducible
 serving).  `decode_many` fuses N decode steps into one `lax.scan` — one
 dispatch for a whole token budget (the decode analogue of the paper's
 UCE sequencing a fixed schedule without host round-trips).
+
+`make_paged_serve_fns(cfg)` is the block-table-driven variant for
+families with the paged-cache hooks: prefill consumes prompt CHUNKS
+(advancing `start` offsets, so admission interleaves with decode) and
+decode walks the UniMem arena through (b, max_pages) block tables —
+memory proportional to tokens in flight, not slots x max_seq.
 """
 from __future__ import annotations
 
@@ -59,6 +65,40 @@ def make_serve_fns(cfg: ModelConfig, *, temperature: float = 0.0):
         return cache, jnp.moveaxis(out, 0, 1), key
 
     return prefill, decode, decode_many
+
+
+def make_paged_serve_fns(cfg: ModelConfig, *, temperature: float = 0.0):
+    """Jitted closures over the family's paged-cache hooks.
+
+    prefill_chunk(params, tokens (b,c), arena, block_table, start (b,))
+        -> (arena, last_logits (b, vocab))
+    decode(params, arena, block_table, positions, tokens, key)
+        -> (arena, next_tokens, key)
+    """
+    fam = registry.get_family(cfg)
+    if not registry.has_paged(cfg):
+        raise ValueError(f"family {cfg.family!r} has no paged serving path")
+
+    # The caller immediately replaces its arena with the returned one, so
+    # donate it — XLA then scatters the new K/V pages in place instead of
+    # copying the whole pool-sized arena every token step.  (CPU can't
+    # donate and would warn per call.)
+    cpu = jax.default_backend() == "cpu"
+
+    @partial(jax.jit, donate_argnums=() if cpu else (2,))
+    def prefill_chunk(params, tokens, arena, block_table, start):
+        return fam.paged_prefill(params, cfg, tokens, arena,
+                                 block_table, start)
+
+    @partial(jax.jit, donate_argnums=() if cpu else (1,))
+    def decode(params, arena, block_table, positions, tokens, key):
+        arena, logits = fam.paged_decode_step(params, cfg, arena,
+                                              block_table, positions, tokens)
+        key, sub = jax.random.split(key)
+        next_tokens = sample_logits(logits, sub, temperature)
+        return arena, next_tokens, key
+
+    return prefill_chunk, decode
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_seq: int):

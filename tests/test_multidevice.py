@@ -71,13 +71,12 @@ def test_sharded_train_step_matches_single_device():
 def test_gpipe_pipeline_matches_sequential():
     run_with_devices("""
         import numpy as np, jax, jax.numpy as jnp
-        from jax.sharding import AxisType
         from repro.distribution.pipeline import (
             pipelined_forward, stage_params_split, gpipe_bubble_fraction)
+        from repro.launch.mesh import make_mesh
 
         L, S, M, mb, d = 8, 4, 6, 4, 16
-        mesh = jax.make_mesh((4,), ("stage",),
-                             axis_types=(AxisType.Auto,))
+        mesh = make_mesh((4,), ("stage",))
         key = jax.random.key(0)
         w = jax.random.normal(key, (L, d, d)) * (1.0 / np.sqrt(d))
         xs = jax.random.normal(jax.random.key(1), (M, mb, d))
@@ -105,11 +104,12 @@ def test_gpipe_pipeline_matches_sequential():
 def test_int8_compressed_psum_close_to_exact():
     run_with_devices("""
         import numpy as np, jax, jax.numpy as jnp
-        from jax.sharding import AxisType, PartitionSpec as P
+        from jax.sharding import PartitionSpec as P
         from jax.experimental.shard_map import shard_map
         from repro.distribution.collectives import ring_allreduce_int8
+        from repro.launch.mesh import make_mesh
 
-        mesh = jax.make_mesh((8,), ("pod",), axis_types=(AxisType.Auto,))
+        mesh = make_mesh((8,), ("pod",))
         x = jax.random.normal(jax.random.key(0), (8, 256))
 
         def body(xl):

@@ -1,0 +1,281 @@
+"""Paged-native serving: the Pallas block-table flash-decoding kernel
+against its oracles, and the engine's UniMem behaviours — lazy
+allocation, prefix sharing, copy-on-write forks, OOM backpressure, and
+tokens-in-flight memory scaling."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core.unimem import UniMemPool, SequencePageTable, UniMemOOM
+from repro.models import registry
+from repro.kernels.paged_attention.ops import paged_decode_attention
+from repro.kernels.paged_attention.ref import paged_decode_attention_ref
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.serve import ServingEngine, Request
+from repro.serve.kv_cache import PagedKVArena
+
+from conftest import TINY
+
+
+# --------------------------------------------- kernel == ref == contiguous
+
+def _random_paged_setup(seed=0, b=3, hq=4, hkv=2, hd=16, page=8, mp=4):
+    """Random arena + scattered block tables; last slot is the null page."""
+    rng = np.random.default_rng(seed)
+    P = b * mp + 1
+    k_pages = jnp.asarray(rng.standard_normal((P, page, hkv, hd)), jnp.float32)
+    v_pages = jnp.asarray(rng.standard_normal((P, page, hkv, hd)), jnp.float32)
+    bt = jnp.asarray(rng.permutation(P - 1)[:b * mp].reshape(b, mp), jnp.int32)
+    pos = jnp.asarray([mp * page - 1, 5, 17], jnp.int32)
+    q = jnp.asarray(rng.standard_normal((b, hq, hd)), jnp.float32)
+    return q, k_pages, v_pages, bt, pos
+
+
+def test_paged_kernel_matches_ref_and_contiguous():
+    q, k_pages, v_pages, bt, pos = _random_paged_setup()
+    got = paged_decode_attention(q, k_pages, v_pages, bt, pos,
+                                 interpret=True)
+    want_ref = paged_decode_attention_ref(q, k_pages, v_pages, bt, pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want_ref),
+                               rtol=1e-5, atol=1e-5)
+    # gather the pages contiguous and compare against the dense oracle
+    b, mp = bt.shape
+    page = k_pages.shape[1]
+    kc = k_pages[bt].reshape(b, mp * page, *k_pages.shape[2:])
+    vc = v_pages[bt].reshape(b, mp * page, *v_pages.shape[2:])
+    want_contig = decode_attention_ref(q, kc, vc, pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want_contig),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_paged_kernel_ignores_null_page_tail():
+    """Block-table tails pointing at the null page must not perturb the
+    result for short sequences."""
+    q, k_pages, v_pages, bt, pos = _random_paged_setup(seed=1)
+    null = k_pages.shape[0] - 1
+    # sequence 1 only needs 1 page (pos 5): null out its tail
+    bt_nulled = bt.at[1, 1:].set(null)
+    a = paged_decode_attention(q, k_pages, v_pages, bt, pos, interpret=True)
+    b_ = paged_decode_attention(q, k_pages, v_pages, bt_nulled, pos,
+                                interpret=True)
+    np.testing.assert_allclose(np.asarray(a[1]), np.asarray(b_[1]),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------------------- engine: paged-native
+
+def _params(cfg):
+    return registry.get_family(cfg).init(jax.random.key(0), cfg)
+
+
+def _run_engine(cfg, params, reqs, **kw):
+    eng = ServingEngine(cfg, params, **kw)
+    for r in reqs:
+        eng.submit(Request(uid=r.uid, prompt=r.prompt,
+                           max_new_tokens=r.max_new_tokens))
+    results = eng.run()
+    return eng, {r.uid: r.tokens for r in results}
+
+
+def test_paged_and_contiguous_greedy_tokens_identical():
+    cfg = TINY["dense"]
+    params = _params(cfg)
+    rng = np.random.default_rng(3)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        int(rng.integers(3, 30))
+                                        ).astype(np.int32),
+                    max_new_tokens=6)
+            for i in range(5)]
+    _, paged = _run_engine(cfg, params, reqs, max_batch=2, max_seq=64,
+                           page_size=8, layout="paged")
+    _, contig = _run_engine(cfg, params, reqs, max_batch=2, max_seq=64,
+                            page_size=8, layout="contiguous")
+    assert paged == contig
+
+
+def test_chunked_prefill_matches_single_shot():
+    """A long prompt prefilled 8 tokens per engine step emits the same
+    tokens as the contiguous single-shot prefill."""
+    cfg = TINY["dense"]
+    params = _params(cfg)
+    prompt = (np.arange(50, dtype=np.int32) * 5) % cfg.vocab_size
+    reqs = [Request(uid=0, prompt=prompt, max_new_tokens=5)]
+    _, paged = _run_engine(cfg, params, reqs, max_batch=1, max_seq=64,
+                           page_size=8, prefill_chunk=8, layout="paged")
+    _, contig = _run_engine(cfg, params, reqs, max_batch=1, max_seq=64,
+                            layout="contiguous")
+    assert paged == contig
+
+
+def test_peak_kv_scales_with_tokens_in_flight():
+    """Acceptance: two half-length sequences tie down <= ~55% of the
+    pages the contiguous layout reserves (2 slots x max_seq)."""
+    cfg = TINY["dense"]
+    params = _params(cfg)
+    rng = np.random.default_rng(4)
+    max_seq, page = 64, 8
+    # footprint 32 = max_seq/2 each (24 prompt + 8 generated)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, 24).astype(np.int32),
+                    max_new_tokens=8)
+            for i in range(2)]
+    eng, toks = _run_engine(cfg, params, reqs, max_batch=2, max_seq=max_seq,
+                            page_size=page, layout="paged")
+    assert len(toks) == 2
+    contiguous_pages = 2 * max_seq // page
+    peak = eng.pool.stats().peak_allocated_pages
+    assert peak <= 0.55 * contiguous_pages, (peak, contiguous_pages)
+    # and the byte metric agrees
+    assert eng.peak_kv_bytes() == peak * eng.arena.page_bytes
+
+
+def test_prefix_sharing_counted_and_correct():
+    cfg = TINY["dense"]
+    params = _params(cfg)
+    prompt = (np.arange(24, dtype=np.int32) * 3) % cfg.vocab_size
+    eng = ServingEngine(cfg, params, max_batch=3, max_seq=64, page_size=8)
+    for uid in range(3):
+        eng.submit(Request(uid=uid, prompt=prompt.copy(), max_new_tokens=4))
+    eng.step()
+    st = eng.pool.stats()
+    # (24-1)//8 = 2 full pages shared by seqs 2 and 3
+    assert st.shared_pages >= 2
+    # without sharing: 3 seqs x (3 prompt + 1 decode-growth) = 12 pages;
+    # with the 2 prompt pages shared 3 ways: 8
+    assert st.allocated_pages <= 8
+    res = eng.run()
+    assert len(res) == 3
+    assert all(r.tokens == res[0].tokens for r in res)
+    assert eng.pool.stats().allocated_pages == 0
+
+
+def test_cow_fork_diverges_without_corrupting_parent():
+    cfg = TINY["dense"]
+    params = _params(cfg)
+    prompt = (np.arange(20, dtype=np.int32) * 7) % cfg.vocab_size
+    # baseline: un-forked run
+    _, solo = _run_engine(cfg, params,
+                          [Request(uid=0, prompt=prompt, max_new_tokens=8)],
+                          max_batch=1, max_seq=64, page_size=8)
+    eng = ServingEngine(cfg, params, max_batch=2, max_seq=64, page_size=8)
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=8))
+    while not any(s.generated for s in eng.slots.values()):
+        eng.step()
+    eng.fork(0, new_uid=1)
+    st = eng.pool.stats()
+    assert st.shared_pages == len(next(iter(eng.slots.values())).pages.pages)
+    res = {r.uid: r.tokens for r in eng.run()}
+    # greedy: parent unchanged by the fork, child identical to parent
+    assert res[0] == solo[0]
+    assert res[1] == res[0]
+    assert eng.pool.stats().allocated_pages == 0
+
+
+def test_cow_last_page_allocator_semantics():
+    pool = UniMemPool(num_pages=8, page_size=4)
+    seq = SequencePageTable(pool)
+    seq.append_tokens(10)                    # pages A B C, C partial
+    fork = seq.fork()
+    assert seq.cow_last_page() is not None   # shared -> private copy
+    assert seq.pages[:2] == fork.pages[:2] and seq.pages[2] != fork.pages[2]
+    assert seq.cow_last_page() is None       # now exclusive: no-op
+    assert fork.cow_last_page() is None      # peer became exclusive too
+    seq.release(); fork.release()
+    assert pool.free_pages == 8
+
+
+def test_oom_backpressure_preempts_and_completes():
+    """Pool too small for three concurrent sequences: lazy growth must
+    preempt rather than fail, and every request still completes."""
+    cfg = TINY["dense"]
+    params = _params(cfg)
+    reqs = [Request(uid=i, prompt=np.arange(30, dtype=np.int32),
+                    max_new_tokens=8) for i in range(3)]
+    eng, toks = _run_engine(cfg, params, reqs, max_batch=4, max_seq=64,
+                            page_size=8, pool_pages=8, layout="paged")
+    assert sorted(toks) == [0, 1, 2]
+    assert all(len(t) == 8 for t in toks.values())
+    assert eng.pool.stats().allocated_pages == 0
+
+
+def test_cow_oom_preempts_without_double_counting_tokens():
+    """COW hitting the pool limit mid-grow must preempt and retry ONLY
+    the copy, not re-append the token (which would shift every later
+    write position and corrupt generation)."""
+    cfg = TINY["dense"]
+    params = _params(cfg)
+    prompt = (np.arange(20, dtype=np.int32) * 7) % cfg.vocab_size
+    # footprint 24 fits EXACTLY in a 3-page pool, so the only OOM the
+    # parent can hit is the COW allocation right after the fork
+    _, solo = _run_engine(cfg, params,
+                          [Request(uid=0, prompt=prompt, max_new_tokens=4)],
+                          max_batch=1, max_seq=64, page_size=8)
+    eng = ServingEngine(cfg, params, max_batch=2, max_seq=64, page_size=8,
+                        pool_pages=3)
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=4))
+    while not any(s.generated for s in eng.slots.values()):
+        eng.step()
+    eng.fork(0, new_uid=1)
+    parent = next(s for s in eng.slots.values() if s.request.uid == 0)
+    before = parent.pages.num_tokens
+    eng.step()          # parent's COW OOMs -> child preempted mid-grow
+    assert any(r.uid == 1 for r in eng.pending), "child was not preempted"
+    # one decode step must account exactly ONE token (a combined
+    # append+COW retry would re-append and shift every later write)
+    assert parent.pages.num_tokens == before + 1
+    res = {r.uid: r.tokens for r in eng.run()}
+    assert res[0] == solo[0]         # parent positions never shifted
+    assert res[1] == solo[0]         # preempted child recomputed cleanly
+    assert eng.pool.stats().allocated_pages == 0
+
+
+def test_oom_raises_when_one_sequence_cannot_fit():
+    """No victim to preempt -> the OOM surfaces (pool genuinely too
+    small for a single request's growth)."""
+    cfg = TINY["dense"]
+    params = _params(cfg)
+    eng = ServingEngine(cfg, params, max_batch=1, max_seq=64, page_size=8,
+                        pool_pages=1, layout="paged")
+    eng.submit(Request(uid=0, prompt=np.arange(8, dtype=np.int32),
+                       max_new_tokens=10))
+    with pytest.raises(UniMemOOM):
+        eng.run()
+
+
+def test_paged_engine_with_pallas_kernel_matches_default():
+    """End-to-end: serving through the interpret-mode Pallas kernel
+    produces the same greedy tokens as the XLA-gather oracle path."""
+    cfg = TINY["dense"]
+    params = _params(cfg)
+    prompt = (np.arange(11, dtype=np.int32) * 11) % cfg.vocab_size
+    reqs = [Request(uid=0, prompt=prompt, max_new_tokens=4)]
+    _, oracle = _run_engine(cfg, params, reqs, max_batch=1, max_seq=32,
+                            page_size=8, layout="paged")
+    cfg_k = cfg.replace(attention_impl="flash_pallas")
+    _, kernel = _run_engine(cfg_k, params, reqs, max_batch=1, max_seq=32,
+                            page_size=8, layout="paged")
+    assert oracle == kernel
+
+
+def test_arena_null_page_is_never_allocated():
+    cfg = TINY["dense"]
+    arena = PagedKVArena(cfg, num_pages=4, page_size=8)
+    assert arena.null_page == 4
+    assert arena.k.shape[1] == 5             # pool + null slot
+    pages = arena.pool.alloc(4)
+    assert arena.null_page not in pages
+    with pytest.raises(UniMemOOM):
+        arena.pool.alloc(1)
+
+
+def test_non_paged_family_falls_back_to_contiguous():
+    cfg = TINY["ssm"]
+    params = _params(cfg)
+    eng = ServingEngine(cfg, params, max_batch=2, max_seq=32)
+    assert eng.layout == "contiguous"
+    with pytest.raises(ValueError):
+        ServingEngine(cfg, params, max_batch=2, max_seq=32, layout="paged")

@@ -1,24 +1,20 @@
 """Sharding rule engine: divisibility fallback, spec resolution, and the
-weight-stationarity HLO audit.  Property tests via hypothesis."""
+weight-stationarity HLO audit.  Property-style tests are parametrized
+sweeps (no hypothesis dependency); meshes come from the launch.mesh
+compat layer so the suite runs on jax 0.4.x and 0.5+ alike."""
 from __future__ import annotations
 
 import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from jax.sharding import AbstractMesh, AxisType, PartitionSpec as P
-
-from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
 
 from repro.distribution.sharding import (
     AxisRules, DEFAULT_RULES, SEQUENCE_PARALLEL_RULES, logical_to_spec)
 from repro.core.dataflow import (
     parse_shape_bytes, parse_collectives, audit_stationarity)
-
-
-def abstract_mesh(shape, axes):
-    return AbstractMesh(tuple(shape), tuple(axes),
-                        axis_types=(AxisType.Auto,) * len(axes))
+from repro.launch.mesh import make_abstract_mesh as abstract_mesh, make_mesh
 
 
 MESH_1POD = abstract_mesh((16, 16), ("data", "model"))
@@ -61,11 +57,9 @@ def test_seq_parallel_rules_shard_seq():
     assert spec == P("data", "model", None)
 
 
-@settings(max_examples=200, deadline=None)
-@given(
-    dim=st.integers(1, 1 << 20),
-    name=st.sampled_from([k for k, v in DEFAULT_RULES.items() if v]),
-)
+@pytest.mark.parametrize("name", [k for k, v in DEFAULT_RULES.items() if v])
+@pytest.mark.parametrize("dim", [1, 2, 3, 7, 15, 16, 17, 32, 96, 100, 256,
+                                 1000, 4096, 65536, (1 << 20) - 1, 1 << 20])
 def test_property_fallback_always_divides(dim, name):
     """For ANY size, the resolved spec's axis product divides the dim."""
     spec = logical_to_spec((name,), (dim,), MESH_2POD, RULES)
@@ -77,13 +71,11 @@ def test_property_fallback_always_divides(dim, name):
     assert dim % prod == 0 and dim >= prod
 
 
-@settings(max_examples=50, deadline=None)
-@given(st.lists(st.sampled_from(list(DEFAULT_RULES)), min_size=1, max_size=4),
-       st.data())
-def test_property_no_mesh_axis_reused(names, data):
-    shape = tuple(
-        data.draw(st.sampled_from([1, 8, 16, 64, 256, 4096]))
-        for _ in names)
+@pytest.mark.parametrize("seed", range(50))
+def test_property_no_mesh_axis_reused(seed):
+    rng = np.random.default_rng(seed)
+    names = list(rng.choice(list(DEFAULT_RULES), rng.integers(1, 5)))
+    shape = tuple(int(rng.choice([1, 8, 16, 64, 256, 4096])) for _ in names)
     spec = logical_to_spec(tuple(names), shape, MESH_2POD, RULES)
     used = []
     for entry in spec:
@@ -108,8 +100,7 @@ def test_stationarity_audit_on_compiled_tp_matmul():
     devs = jax.devices()
     if len(devs) < 1:
         pytest.skip("no devices")
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
 
     from jax.sharding import NamedSharding
     w1 = jax.ShapeDtypeStruct((64, 256), jnp.float32)
