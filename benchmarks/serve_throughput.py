@@ -1,16 +1,24 @@
 """Beyond-paper: contiguous vs UniMem-paged serving, measured end-to-end.
 
-Runs the SAME request stream through both engine layouts on a tiny
-transformer and reports tokens/s plus peak KV bytes across batch/seq
-sweeps.  The paper's claim, serving-shaped: a single pooled page arena
-makes KV memory proportional to tokens in flight while the contiguous
-layout pins `max_batch * max_seq` regardless of load.  PASS requires
-(a) both layouts emit identical greedy tokens and (b) paged peak KV
-bytes never exceed contiguous on any sweep point (CPU wall-clock is
-reported, not judged — this container is not the serving hardware).
+Runs the SAME request stream through both engine layouts and reports
+tokens/s plus peak KV bytes — for a dense batch/seq sweep AND a
+`--family` sweep over the whole paged-native model zoo (dense, moe,
+hybrid, vlm; vlm requests carry patch embeddings, hybrid pages its
+attention KV share while conv/SSM state stays contiguous per slot).
+The paper's claim, serving-shaped: a single pooled page arena makes KV
+memory proportional to tokens in flight while the contiguous layout
+pins `max_batch * max_seq` regardless of load.  PASS requires (a) both
+layouts emit identical greedy tokens on every row and (b) paged peak KV
+bytes never exceed contiguous (CPU wall-clock is reported, not judged —
+this container is not the serving hardware).
+
+    PYTHONPATH=src python benchmarks/serve_throughput.py \
+        [--family dense,moe,hybrid,vlm]
 """
 from __future__ import annotations
 
+import argparse
+import sys
 import time
 
 import numpy as np
@@ -25,74 +33,140 @@ CFG = ModelConfig(
     vocab_size=128, num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
     attn_chunk=32, max_seq=256)
 
-# (max_batch, max_seq, requests, prompt_hi, max_new)
+FAMILY_CFGS = {
+    "dense": CFG,
+    "moe": ModelConfig(
+        name="bench-moe", family="moe", num_layers=2, d_model=64,
+        vocab_size=128, num_heads=4, num_kv_heads=2, head_dim=16,
+        num_experts=4, experts_per_token=2, moe_d_ff=32,
+        num_shared_experts=1, attn_chunk=32, max_seq=256),
+    "hybrid": ModelConfig(
+        name="bench-hybrid", family="hybrid", num_layers=4, d_model=64,
+        vocab_size=128, num_heads=4, num_kv_heads=4, head_dim=32, d_ff=128,
+        ssm_state=16, ssm_head_dim=32, ssm_chunk=16, shared_attn_period=2,
+        num_shared_blocks=2, attn_chunk=32, max_seq=256),
+    "vlm": ModelConfig(
+        name="bench-vlm", family="vlm", num_layers=2, d_model=64,
+        vocab_size=128, num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+        frontend="patch", frontend_dim=32, num_patches=8,
+        attn_chunk=32, max_seq=256),
+}
+
+# dense-only scaling sweep: (max_batch, max_seq, requests, prompt_hi, max_new)
 SWEEP = [
     (2, 64, 6, 20, 6),
     (4, 128, 8, 48, 8),
     (4, 256, 8, 96, 8),
 ]
 
-
-def _stream(rng, n, prompt_hi, max_new):
-    return [Request(uid=i,
-                    prompt=rng.integers(0, CFG.vocab_size,
-                                        int(rng.integers(4, prompt_hi))
-                                        ).astype(np.int32),
-                    max_new_tokens=max_new)
-            for i in range(n)]
+# family sweep point (tiny: CI smoke runs this on CPU)
+FAM_POINT = dict(mb=2, ms=64, n=4, phi=24, mnew=5)
 
 
-def _run(params, layout, reqs, mb, ms):
-    eng = ServingEngine(CFG, params, max_batch=mb, max_seq=ms,
+def _stream(rng, cfg, n, prompt_hi, max_new):
+    reqs = []
+    for i in range(n):
+        pe = (rng.standard_normal((cfg.num_patches, cfg.frontend_dim))
+              .astype(np.float32) if cfg.frontend == "patch" else None)
+        reqs.append(Request(
+            uid=i,
+            prompt=rng.integers(0, cfg.vocab_size,
+                                int(rng.integers(4, prompt_hi))
+                                ).astype(np.int32),
+            max_new_tokens=max_new, patch_embeds=pe))
+    return reqs
+
+
+def _run(cfg, params, layout, reqs, mb, ms):
+    eng = ServingEngine(cfg, params, max_batch=mb, max_seq=ms,
                         page_size=16, layout=layout)
     for r in reqs:
         eng.submit(Request(uid=r.uid, prompt=r.prompt,
-                           max_new_tokens=r.max_new_tokens))
+                           max_new_tokens=r.max_new_tokens,
+                           patch_embeds=r.patch_embeds))
     t0 = time.perf_counter()
     results = eng.run()
     dt = time.perf_counter() - t0
     toks = {r.uid: tuple(r.tokens) for r in results}
     return dict(tok_s=sum(len(t) for t in toks.values()) / dt,
                 peak_kv_bytes=eng.peak_kv_bytes(), tokens=toks,
-                shared=eng.pool.stats().shared_pages)
+                shared=eng.pool.stats().shared_pages,
+                prefill_shapes=len(eng.prefill_shapes))
 
 
-def run() -> dict:
-    fam = registry.get_family(CFG)
-    params = fam.init(jax.random.key(0), CFG)
+def _row(cfg, params, reqs, mb, ms):
+    contig = _run(cfg, params, "contiguous", reqs, mb, ms)
+    paged = _run(cfg, params, "paged", reqs, mb, ms)
+    same = contig["tokens"] == paged["tokens"]
+    return dict(
+        family=cfg.family, batch=mb, max_seq=ms, requests=len(reqs),
+        contig_tok_s=contig["tok_s"], paged_tok_s=paged["tok_s"],
+        contig_kv_mb=contig["peak_kv_bytes"] / 1e6,
+        paged_kv_mb=paged["peak_kv_bytes"] / 1e6,
+        kv_ratio=paged["peak_kv_bytes"] / contig["peak_kv_bytes"],
+        prefill_shapes=paged["prefill_shapes"],
+        tokens_match=same,
+        ok=same and paged["peak_kv_bytes"] <= contig["peak_kv_bytes"],
+    )
+
+
+def run(families=None) -> dict:
+    families = families or list(FAMILY_CFGS)
     rows, ok = [], True
-    for mb, ms, n, phi, mnew in SWEEP:
-        rng = np.random.default_rng(hash((mb, ms)) % 2**32)
-        reqs = _stream(rng, n, phi, mnew)
-        contig = _run(params, "contiguous", reqs, mb, ms)
-        paged = _run(params, "paged", reqs, mb, ms)
-        same = contig["tokens"] == paged["tokens"]
-        ok &= same and paged["peak_kv_bytes"] <= contig["peak_kv_bytes"]
-        rows.append(dict(
-            batch=mb, max_seq=ms, requests=n,
-            contig_tok_s=contig["tok_s"], paged_tok_s=paged["tok_s"],
-            contig_kv_mb=contig["peak_kv_bytes"] / 1e6,
-            paged_kv_mb=paged["peak_kv_bytes"] / 1e6,
-            kv_ratio=paged["peak_kv_bytes"] / contig["peak_kv_bytes"],
-            tokens_match=same,
-        ))
+    # dense batch/seq scaling sweep (covers the dense family point too)
+    if "dense" in families:
+        params = registry.get_family(CFG).init(jax.random.key(0), CFG)
+        for mb, ms, n, phi, mnew in SWEEP:
+            rng = np.random.default_rng(hash((mb, ms)) % 2**32)
+            r = _row(CFG, params, _stream(rng, CFG, n, phi, mnew), mb, ms)
+            ok &= r["ok"]
+            rows.append(r)
+    # family sweep: the rest of the zoo paged-native at one tiny point
+    for fam in families:
+        if fam == "dense":
+            continue
+        cfg = FAMILY_CFGS[fam]
+        params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+        # str hash() is salted per process — seed deterministically so
+        # the CI smoke workload is reproducible run to run
+        rng = np.random.default_rng(1000 + sum(map(ord, fam)))
+        p = FAM_POINT
+        r = _row(cfg, params, _stream(rng, cfg, p["n"], p["phi"], p["mnew"]),
+                 p["mb"], p["ms"])
+        ok &= r["ok"]
+        rows.append(r)
     return {"name": "serve_throughput", "ok": ok, "rows": rows}
 
 
 def pretty(result: dict):
-    print("== Serving: contiguous slots vs UniMem paged arena ==")
-    print(f"{'batch':>6}{'max_seq':>8}{'reqs':>6}{'contig tok/s':>14}"
-          f"{'paged tok/s':>13}{'contig KV MB':>14}{'paged KV MB':>13}"
-          f"{'KV ratio':>10}  tokens")
+    print("== Serving: contiguous slots vs UniMem paged arena "
+          "(--family sweep: dense,moe,hybrid,vlm) ==")
+    print(f"{'family':>8}{'batch':>6}{'max_seq':>8}{'reqs':>6}"
+          f"{'contig tok/s':>14}{'paged tok/s':>13}{'contig KV MB':>14}"
+          f"{'paged KV MB':>13}{'KV ratio':>10}  tokens")
     for r in result["rows"]:
-        print(f"{r['batch']:>6}{r['max_seq']:>8}{r['requests']:>6}"
+        print(f"{r['family']:>8}{r['batch']:>6}{r['max_seq']:>8}"
+              f"{r['requests']:>6}"
               f"{r['contig_tok_s']:>14.1f}{r['paged_tok_s']:>13.1f}"
               f"{r['contig_kv_mb']:>14.3f}{r['paged_kv_mb']:>13.3f}"
               f"{r['kv_ratio']:>10.2f}  "
               f"{'==' if r['tokens_match'] else 'DIFFER'}")
     print(f"-> {'PASS' if result['ok'] else 'FAIL'} "
-          "(identical greedy tokens; paged KV high-water <= contiguous)\n")
+          "(identical greedy tokens; paged KV high-water <= contiguous "
+          "on every family)\n")
 
 
 if __name__ == "__main__":
-    pretty(run())
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--family", default=",".join(FAMILY_CFGS),
+                    help="comma-separated subset of "
+                         f"{','.join(FAMILY_CFGS)} to sweep")
+    args = ap.parse_args()
+    fams = [f.strip() for f in args.family.split(",") if f.strip()]
+    unknown = [f for f in fams if f not in FAMILY_CFGS]
+    if unknown:
+        raise SystemExit(f"unknown families {unknown}; "
+                         f"choose from {list(FAMILY_CFGS)}")
+    res = run(fams)
+    pretty(res)
+    sys.exit(0 if res["ok"] else 1)

@@ -23,7 +23,7 @@ NEG_INF = -1e30
 
 def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
                *, scale: float, causal: bool, kv_steps: int,
-               block_q: int, block_kv: int, seq_kv: int):
+               block_q: int, block_kv: int, seq_kv: int, q_offset: int):
     qi = pl.program_id(1)
     kj = pl.program_id(2)
 
@@ -38,7 +38,8 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
     v = v_ref[0]
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
 
-    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    q_pos = (qi * block_q + q_offset
+             + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0))
     kv_pos = kj * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
     valid = kv_pos < seq_kv
     if causal:
@@ -61,8 +62,11 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
 
 
 def flash_attention_pallas(q, k, v, *, causal=True, block_q=DEF_BQ,
-                           block_kv=DEF_BKV, interpret=False):
-    """q: (b, sq, hq, d); k, v: (b, skv, hkv, d) -> (b, sq, hq, d)."""
+                           block_kv=DEF_BKV, q_offset=0, interpret=False):
+    """q: (b, sq, hq, d); k, v: (b, skv, hkv, d) -> (b, sq, hq, d).
+    `q_offset` places the queries at absolute positions q_offset..
+    q_offset+sq-1 of the KV sequence — the chunked-prefill geometry
+    (query block is the tail of a longer cached context)."""
     b, sq, hq, d = q.shape
     skv, hkv = k.shape[1], k.shape[2]
     group = hq // hkv
@@ -87,6 +91,7 @@ def flash_attention_pallas(q, k, v, *, causal=True, block_q=DEF_BQ,
         functools.partial(
             _fa_kernel, scale=1.0 / math.sqrt(d), causal=causal,
             kv_steps=kv_steps, block_q=bq, block_kv=bkv, seq_kv=skv,
+            q_offset=q_offset,
         ),
         grid=(b * hq, sq // bq, kv_steps),
         in_specs=[

@@ -7,8 +7,10 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
-def attention_ref(q, k, v, *, causal=True):
-    """q: (b, sq, hq, d); k, v: (b, skv, hkv, d)."""
+def attention_ref(q, k, v, *, causal=True, q_offset=0):
+    """q: (b, sq, hq, d); k, v: (b, skv, hkv, d).  `q_offset` places the
+    queries at absolute KV positions q_offset..q_offset+sq-1 (chunked
+    prefill: the query block is the tail of the cached context)."""
     b, sq, hq, d = q.shape
     hkv = k.shape[2]
     if hkv != hq:
@@ -16,7 +18,7 @@ def attention_ref(q, k, v, *, causal=True):
         v = jnp.repeat(v, hq // hkv, axis=2)
     s = jnp.einsum("bqhd,bshd->bhqs", q, k).astype(jnp.float32) / math.sqrt(d)
     if causal:
-        qpos = jnp.arange(sq)[:, None]
+        qpos = jnp.arange(sq)[:, None] + q_offset
         kpos = jnp.arange(k.shape[1])[None, :]
         s = jnp.where(qpos >= kpos, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)

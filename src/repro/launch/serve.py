@@ -4,11 +4,12 @@
         --reduced --requests 16 --max-new 24 [--layout paged|contiguous]
 
 Spins up a reduced (or full, on real hardware) model, submits a synthetic
-request stream with mixed prompt lengths, runs the engine to completion
-and prints latency/throughput/pool stats including the paged arena's
-page high-water mark (the memory the layout actually ties down).
-Transformer-family arches default to the paged layout; state-cache
-families (ssm/hybrid) fall back to contiguous automatically.
+request stream with mixed prompt lengths (vlm arches get synthetic patch
+embeddings), runs the engine to completion and prints
+latency/throughput/pool stats including the paged arena's page
+high-water mark (the memory the layout actually ties down).  Every
+decode family except pure-SSM defaults to the paged layout (dense, moe,
+hybrid, vlm); ssm falls back to contiguous automatically.
 """
 from __future__ import annotations
 
@@ -50,6 +51,13 @@ def main(argv=None):
     fam = registry.get_family(cfg)
     if fam.decode_step is None:
         raise SystemExit(f"{args.arch} is encoder-only: nothing to serve")
+    patches = cfg.num_patches if cfg.frontend == "patch" else 0
+    budget = args.max_seq - args.max_new - patches
+    if budget < 5:       # before params init: fail fast on full models
+        raise SystemExit(
+            f"--max-seq {args.max_seq} too small: {patches} patch rows + "
+            f"--max-new {args.max_new} leave no room for a prompt "
+            f"(need max_seq >= {patches + args.max_new + 5})")
 
     params = fam.init(jax.random.key(args.seed), cfg)
     engine = ServingEngine(cfg, params, max_batch=args.max_batch,
@@ -58,9 +66,12 @@ def main(argv=None):
                            prefill_chunk=args.prefill_chunk)
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
-        plen = int(rng.integers(4, args.max_seq - args.max_new))
+        plen = int(rng.integers(4, budget))
         prompt = rng.integers(0, cfg.vocab_size, (plen,)).astype(np.int32)
-        engine.submit(Request(uid=i, prompt=prompt, max_new_tokens=args.max_new))
+        pe = (rng.standard_normal((patches, cfg.frontend_dim))
+              .astype(np.float32) if patches else None)
+        engine.submit(Request(uid=i, prompt=prompt,
+                              max_new_tokens=args.max_new, patch_embeds=pe))
 
     results = engine.run()
     lat = sorted(r.latency_s for r in results)

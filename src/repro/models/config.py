@@ -40,7 +40,7 @@ class ModelConfig:
     capacity_factor: float = 1.25
     router_aux_coef: float = 0.01
     router_z_coef: float = 1e-3
-    moe_dispatch: str = "scatter"        # dense | scatter
+    moe_dispatch: str = "scatter"        # dense | scatter | grouped | ep
 
     # ssm (Mamba-2 / SSD)
     ssm_state: int = 0

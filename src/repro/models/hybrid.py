@@ -144,13 +144,6 @@ def loss_fn(params, cfg: ModelConfig, batch):
 
 # ----------------------------------------------------------------- serving
 
-# Hybrid caches mix SSM state with KV; paging only the KV share is an
-# open item — the engine serves this family from the contiguous layout.
-init_paged_cache = None
-paged_prefill = None
-paged_decode_step = None
-
-
 def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
     dtype = dtype or cfg.compute_dtype
     G = cfg.num_layers // cfg.shared_attn_period
@@ -259,3 +252,153 @@ def decode_step(params, cfg: ModelConfig, cache, tokens):
     h = L.rmsnorm_apply(params["ln_f"], x[:, None], cfg.norm_eps)
     logits = L.logits_from_hidden(T.head_weights(params, cfg), cfg, h)
     return cache, logits[:, 0]
+
+
+# ------------------------------------------------- paged serving (UniMem)
+#
+# The shared-attention KV share lives in the page arena ((G, slots,
+# page, hkv, hd) — one K/V write site per GROUP, not per layer); the
+# Mamba conv/SSM state is O(1) per sequence and stays CONTIGUOUS per
+# engine slot inside the same arena dict ("conv"/"ssm" leaves, batch
+# row i == engine slot i — kv_cache.STATE_SLOT_AXIS).  Prefill chunks
+# carry the state across calls: a row's state is reset when its chunk
+# starts at position 0 and only written back where the row actually
+# advanced, so decode-active and empty rows are untouched.
+
+def init_paged_cache(cfg: ModelConfig, num_slots: int, page_size: int,
+                     max_batch: int = 1, dtype=None):
+    dtype = dtype or cfg.compute_dtype
+    G = cfg.num_layers // cfg.shared_attn_period
+    P = cfg.shared_attn_period
+    kv_shape = (G, num_slots, page_size, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(kv_shape, dtype),
+        "v": jnp.zeros(kv_shape, dtype),
+        "conv": jnp.zeros((G, P, max_batch, cfg.conv_width - 1,
+                           cfg.conv_channels), dtype),
+        "ssm": jnp.zeros((G, P, max_batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                          cfg.ssm_state), dtype),
+    }
+
+
+def paged_cache_axes():
+    kv = (None, None, None, "act_kv_heads", None)
+    return {
+        "k": kv, "v": kv,
+        "conv": (None, None, "act_batch", None, "ssm_inner"),
+        "ssm": (None, None, "act_batch", "act_ssm_heads", None, None),
+    }
+
+
+def paged_prefill(params, cfg: ModelConfig, chunk, arena, block_table,
+                  start, chunk_len):
+    """Ragged-chunk prefill: attention K/V through the block tables,
+    conv/SSM state threaded through the arena's per-slot rows.  Same
+    contract as `transformer.paged_prefill`; b must equal the arena's
+    max_batch (batch row i == engine slot i)."""
+    tokens = chunk["tokens"]
+    b, c = tokens.shape
+    scfg = _shared_cfg(cfg)
+    x = L.embed_tokens(params["embed"], cfg, tokens)
+    x0 = x
+    positions = start[:, None] + jnp.arange(c)[None, :]
+    valid = jnp.arange(c)[None, :] < chunk_len[:, None]
+    mp = block_table.shape[1]
+    # rows whose chunk starts the prompt run from zero state; continuing
+    # rows pick up the state their previous chunk wrote back
+    live = (start > 0).astype(arena["conv"].dtype)
+    conv0 = arena["conv"] * live[None, None, :, None, None]
+    ssm0 = arena["ssm"] * live[None, None, :, None, None, None]
+
+    def inner(h, xs):
+        p, conv_c, ssm_c = xs
+        hn = L.rmsnorm_apply(p["ln"], h, cfg.norm_eps)
+        y, conv_c, ssm_c = M.block_prefill_chunk(p["mixer"], cfg, hn,
+                                                 conv_c, ssm_c, valid)
+        return h + y, (conv_c.astype(arena["conv"].dtype),
+                       ssm_c.astype(arena["ssm"].dtype))
+
+    def group(carry, xs):
+        h, g = carry
+        mamba_g, proj_g, conv_g, ssm_g, k_g, v_g = xs
+        h, (conv_new, ssm_new) = jax.lax.scan(inner, h, (mamba_g, conv_g,
+                                                         ssm_g))
+        sp = _select_shared(params, cfg, g)
+        cat = jnp.concatenate([h, x0], axis=-1)
+        hn = L.rmsnorm_apply(sp["ln1"], cat, cfg.norm_eps)
+        q, k, v = L.attention_qkv(sp["attn"], scfg, hn, positions)
+        k_g = T._paged_write(k_g, k, block_table, start, valid)
+        v_g = T._paged_write(v_g, v, block_table, start, valid)
+        page = k_g.shape[1]
+        k_view = k_g[block_table].reshape(b, mp * page, *k_g.shape[2:])
+        v_view = v_g[block_table].reshape(b, mp * page, *v_g.shape[2:])
+        o = L.chunk_attention_over_pages(q, k_view, v_view, positions)
+        cat = cat + o @ sp["attn"]["wo"]
+        h2 = L.rmsnorm_apply(sp["ln2"], cat, cfg.norm_eps)
+        cat = cat + L.mlp_apply(sp["mlp"], scfg, h2)
+        h = h + cat @ proj_g
+        return (h, g + 1), (conv_new, ssm_new, k_g, v_g)
+
+    (x, _), (conv, ssm, k, v) = jax.lax.scan(
+        group, (x, jnp.int32(0)),
+        (params["mamba"], params["group_proj"], conv0, ssm0,
+         arena["k"], arena["v"]))
+    # state writeback only where the row actually advanced this call
+    adv = chunk_len > 0
+    conv = jnp.where(adv[None, None, :, None, None], conv, arena["conv"])
+    ssm = jnp.where(adv[None, None, :, None, None, None], ssm, arena["ssm"])
+    arena = {"k": k, "v": v, "conv": conv, "ssm": ssm}
+    h = L.rmsnorm_apply(params["ln_f"], T._last_valid(x, chunk_len),
+                        cfg.norm_eps)
+    logits = L.logits_from_hidden(T.head_weights(params, cfg), cfg, h)
+    return arena, logits[:, 0]
+
+
+def paged_decode_step(params, cfg: ModelConfig, arena, block_table,
+                      positions, tokens):
+    """One fused decode step: paged attention over the arena per group,
+    single-token SSM recurrence on the per-slot state rows.  Inactive
+    rows (position 0, null block tables) neither advance their state nor
+    write real pages."""
+    b = tokens.shape[0]
+    scfg = _shared_cfg(cfg)
+    x = L.embed_tokens(params["embed"], cfg, tokens[:, None])[:, 0]   # (b, d)
+    x0 = x
+
+    def inner(h, xs):
+        p, conv_c, ssm_c = xs
+        hn = L.rmsnorm_apply(p["ln"], h, cfg.norm_eps)
+        y, conv_c, ssm_c = M.block_step(p["mixer"], cfg, hn, conv_c, ssm_c)
+        return h + y, (conv_c.astype(arena["conv"].dtype),
+                       ssm_c.astype(arena["ssm"].dtype))
+
+    def group(carry, xs):
+        h, g = carry
+        mamba_g, proj_g, conv_g, ssm_g, k_g, v_g = xs
+        h, (conv_new, ssm_new) = jax.lax.scan(inner, h, (mamba_g, conv_g,
+                                                         ssm_g))
+        sp = _select_shared(params, cfg, g)
+        cat = jnp.concatenate([h, x0], axis=-1)[:, None, :]           # (b,1,2d)
+        hn = L.rmsnorm_apply(sp["ln1"], cat, cfg.norm_eps)
+        q, k, v = L.attention_qkv(sp["attn"], scfg, hn, positions[:, None])
+        k_g = T._paged_write(k_g, k, block_table, positions)
+        v_g = T._paged_write(v_g, v, block_table, positions)
+        o = L.run_paged_decode_attention(scfg, q[:, 0], k_g, v_g,
+                                         block_table, positions)
+        cat = cat[:, 0] + o @ sp["attn"]["wo"]
+        h2 = L.rmsnorm_apply(sp["ln2"], cat, cfg.norm_eps)
+        cat = cat + L.mlp_apply(sp["mlp"], scfg, h2[:, None, :])[:, 0]
+        h = h + cat @ proj_g
+        return (h, g + 1), (conv_new, ssm_new, k_g, v_g)
+
+    (x, _), (conv, ssm, k, v) = jax.lax.scan(
+        group, (x, jnp.int32(0)),
+        (params["mamba"], params["group_proj"], arena["conv"],
+         arena["ssm"], arena["k"], arena["v"]))
+    act = positions > 0          # inactive rows keep their stored state
+    conv = jnp.where(act[None, None, :, None, None], conv, arena["conv"])
+    ssm = jnp.where(act[None, None, :, None, None, None], ssm, arena["ssm"])
+    arena = {"k": k, "v": v, "conv": conv, "ssm": ssm}
+    h = L.rmsnorm_apply(params["ln_f"], x[:, None], cfg.norm_eps)
+    logits = L.logits_from_hidden(T.head_weights(params, cfg), cfg, h)
+    return arena, logits[:, 0]

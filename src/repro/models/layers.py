@@ -222,7 +222,8 @@ def run_attention(cfg: ModelConfig, q, k, v, *, q_offset=0):
     if cfg.attention_impl == "flash_pallas":
         from repro.kernels.flash_attention import ops as fa_ops
         return fa_ops.flash_attention(q, k, v, causal=cfg.causal,
-                                      block_kv=cfg.attn_chunk)
+                                      block_kv=cfg.attn_chunk,
+                                      q_offset=q_offset)
     raise ValueError(f"unknown attention_impl {cfg.attention_impl!r}")
 
 

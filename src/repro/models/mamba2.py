@@ -238,6 +238,50 @@ def _conv_tail(cfg: ModelConfig, u, p):
     return xBC
 
 
+def block_prefill_chunk(p, cfg: ModelConfig, u, conv_cache, ssm_state,
+                        valid):
+    """Stateful RAGGED-chunk prefill: continue each row mid-prompt.
+
+    u: (b, c, d) chunk inputs; conv_cache: (b, width-1, conv_channels)
+    pre-activation xBC tail carried from the previous chunk (zeros at a
+    prompt's first chunk); ssm_state: (b, h, p, n); valid: (b, c) bool —
+    rows may be ragged.  Invalid positions carry no state update (their
+    dt is forced to 0, which the SSD recurrence treats as identity — the
+    same trick `ssd_chunked` uses for its pad rows), so the returned
+    state and conv tail are exactly those after each row's LAST VALID
+    token.  Returns (y (b, c, d), new_conv_cache, new_ssm_state)."""
+    b, c, _ = u.shape
+    h, pdim = cfg.ssm_heads, cfg.ssm_head_dim
+    w = cfg.conv_width
+    zxbcdt = u @ p["in_proj"]
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    window = jnp.concatenate([conv_cache, xBC], axis=1)    # (b, w-1+c, ch)
+    y_conv = jax.lax.conv_general_dilated(
+        window, p["conv_w"][:, None, :], window_strides=(1,),
+        padding="VALID", dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=window.shape[-1]) + p["conv_b"]
+    xBC = jax.nn.silu(y_conv)                              # (b, c, ch)
+    x, B, C = _split_xbc(cfg, xBC)
+    x = x.reshape(b, c, h, pdim)
+    B = _expand_groups(cfg, B)
+    C = _expand_groups(cfg, C)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    dt = dt * valid[:, :, None].astype(jnp.float32)        # ragged tail: no-op
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, S = ssd_chunked(x, dt, A, B, C, cfg.ssm_chunk, ssm_state,
+                       impl=cfg.ssd_impl)
+    y = y + p["D"].astype(y.dtype)[:, None] * x
+    y = y.reshape(b, c, cfg.ssm_inner)
+    y = L.rmsnorm_apply(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    # conv tail = last (w-1) VALID window rows: window[clen : clen+w-1]
+    # covers tokens clen-w+1..clen-1 (cache rows fill in when clen < w-1)
+    clen = valid.sum(axis=1).astype(jnp.int32)
+    new_conv = jax.vmap(
+        lambda win, n: jax.lax.dynamic_slice_in_dim(win, n, w - 1, axis=0)
+    )(window, clen)
+    return y @ p["out_proj"], new_conv, S
+
+
 def block_step(p, cfg: ModelConfig, u, conv_cache, ssm_state):
     """Single token.  u: (b, d).  Returns (y (b, d), conv_cache, ssm_state)."""
     b = u.shape[0]

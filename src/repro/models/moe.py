@@ -1,6 +1,6 @@
 """Mixture-of-Experts transformer (qwen3-moe / moonshot-moonlight families).
 
-Top-k token-choice routing with capacity-based dispatch.  Two dispatch
+Top-k token-choice routing with capacity-based dispatch.  Dispatch
 paths (cfg.moe_dispatch):
 
   * "dense"   — one-hot einsum dispatch; O(T*E*C) memory.  Oracle for
@@ -10,9 +10,14 @@ paths (cfg.moe_dispatch):
                 mesh ("expert" -> model axis, capacity rows -> data axis).
                 This is the paper's "vectors as the basic computational
                 unit" realized as expert-parallel vector dispatch.
+  * "grouped" — scatter dispatch with the per-expert matmul stack run
+                through the grouped-matmul Pallas kernel
+                (kernels/grouped_matmul) instead of its einsum twin —
+                the serving path's expert dispatch on the MXU.
+  * "ep"      — expert-parallel shard_map (resident experts per model
+                shard); falls back to scatter off-mesh.
 
-Both are differentiable; tests assert they agree.  The per-expert matmul
-stack is the grouped-matmul Pallas kernel's XLA twin (kernels/grouped_matmul).
+All are differentiable; tests assert they agree.
 """
 from __future__ import annotations
 
@@ -57,6 +62,35 @@ def experts_apply(p, buf):
     h = with_logical_constraint(h, "act_expert", "act_cap", "act_mlp")
     out = jnp.einsum("ecf,efd->ecd", h, p["wo"])
     return with_logical_constraint(out, "act_expert", "act_cap", None)
+
+
+def _pad_tile(a, axes, tile=128):
+    """Zero-pad `axes` of a up to a tile multiple where they exceed one
+    tile (the kernel requires dim % min(tile, dim) == 0; zero rows/cols
+    compute zeros and cannot perturb real outputs)."""
+    pads = [(0, 0)] * a.ndim
+    for ax in axes:
+        n = a.shape[ax]
+        if n > tile:
+            pads[ax] = (0, (-n) % tile)
+    return jnp.pad(a, pads) if any(p != (0, 0) for p in pads) else a
+
+
+def experts_apply_grouped(p, buf):
+    """`experts_apply` through the grouped-matmul Pallas kernel — the
+    per-expert weight-stationary MXU stack (interpret mode off-TPU).
+    Capacity, d_model and d_ff are zero-padded to the kernel's 128
+    tiling where needed."""
+    from repro.kernels.grouped_matmul.ops import grouped_matmul
+
+    e, c, d = buf.shape
+    x = _pad_tile(buf, (1, 2))
+    wg = _pad_tile(p["wg"], (1, 2))
+    wi = _pad_tile(p["wi"], (1, 2))
+    wo = _pad_tile(p["wo"], (1, 2))
+    h = jax.nn.silu(grouped_matmul(x, wg)) * grouped_matmul(x, wi)
+    out = grouped_matmul(h.astype(buf.dtype), wo).astype(buf.dtype)
+    return out[:, :c, :d]
 
 
 # ----------------------------------------------------------------- routing
@@ -112,12 +146,21 @@ def _moe_dense(p, cfg: ModelConfig, xf):
 
 # ------------------------------------------------------ dispatch: scatter
 
-def _moe_scatter(p, cfg: ModelConfig, xf):
-    """Sort-based capacity dispatch.  xf: (T, d)."""
+def _moe_scatter(p, cfg: ModelConfig, xf, experts_fn=experts_apply,
+                 dropless=False):
+    """Sort-based dispatch.  xf: (T, d).  `experts_fn` is the per-expert
+    MLP stack: the einsum twin by default, the grouped-matmul Pallas
+    kernel under moe_dispatch="grouped".  `dropless=True` (the SERVING
+    mode) sizes capacity at the worst case T*k so no assignment is ever
+    dropped: every token's output is then a pure per-token function,
+    independent of what else shares the batch — which is what makes
+    paged serving exact (padded rows can't evict real tokens; identical
+    prompts compute bitwise-identical K/V in any batch, so prefix
+    sharing and co-prefill page writes are safe)."""
     T_, d = xf.shape
     k = cfg.experts_per_token
     E = cfg.num_experts
-    C = _capacity(cfg, T_)
+    C = T_ * k if dropless else _capacity(cfg, T_)
     w, e, aux = _route(p["router"], cfg, xf)
 
     e_flat = e.reshape(-1)                                         # (T*k,)
@@ -138,7 +181,7 @@ def _moe_scatter(p, cfg: ModelConfig, xf):
     buf = buf.at[e_sorted, pos_c].add(rows, mode="drop")
     buf = with_logical_constraint(buf, "act_expert", "act_cap", None)
 
-    out_buf = experts_apply(p["experts"], buf)
+    out_buf = experts_fn(p["experts"], buf)
 
     y_rows = out_buf[e_sorted, pos_c]                              # (T*k, d)
     y_rows = y_rows * keep[:, None].astype(xf.dtype)
@@ -249,19 +292,29 @@ def moe_block_axes(cfg: ModelConfig):
     return ax
 
 
-def moe_apply(p, cfg: ModelConfig, x):
-    """x: (b, s, d) -> (y, aux_loss)."""
+def moe_apply(p, cfg: ModelConfig, x, dropless=False):
+    """x: (b, s, d) -> (y, aux_loss).  `dropless=True` is the SERVING
+    mode: worst-case expert capacity, no token ever dropped, outputs a
+    pure per-token function independent of batch composition (see
+    `_moe_scatter`).  Training keeps the capacity-limited dispatch."""
+    if cfg.moe_dispatch not in ("dense", "scatter", "grouped", "ep"):
+        raise ValueError(cfg.moe_dispatch)
     b, s, d = x.shape
     xf = x.reshape(b * s, d)
     xf = with_logical_constraint(xf, "act_batch", None)
-    if cfg.moe_dispatch == "dense":
+    if cfg.moe_dispatch == "grouped":
+        y, aux = _moe_scatter(p, cfg, xf, experts_fn=experts_apply_grouped,
+                              dropless=dropless)
+    elif dropless:
+        # dense/ep are training dataplanes; dropless serving takes the
+        # equivalent global scatter
+        y, aux = _moe_scatter(p, cfg, xf, dropless=True)
+    elif cfg.moe_dispatch == "dense":
         y, aux = _moe_dense(p, cfg, xf)
     elif cfg.moe_dispatch == "scatter":
         y, aux = _moe_scatter(p, cfg, xf)
-    elif cfg.moe_dispatch == "ep":
-        y, aux = _moe_ep(p, cfg, xf)
     else:
-        raise ValueError(cfg.moe_dispatch)
+        y, aux = _moe_ep(p, cfg, xf)
     y = y.reshape(b, s, d)
     if cfg.num_shared_experts:
         y = y + L.mlp_apply(p["shared"], cfg, x)
@@ -357,12 +410,6 @@ def loss_fn(params, cfg: ModelConfig, batch):
 init_cache = T.init_cache
 cache_axes = T.cache_axes
 
-# MoE decode routes per token through expert dispatch; wiring that into
-# the paged dataplane is an open item — contiguous fallback for now.
-init_paged_cache = None
-paged_prefill = None
-paged_decode_step = None
-
 
 def prefill(params, cfg: ModelConfig, batch, cache):
     tokens = batch["tokens"]
@@ -377,7 +424,7 @@ def prefill(params, cfg: ModelConfig, batch, cache):
         o = L.run_attention(cfg, q, k, v).reshape(b, s, cfg.q_dim)
         h = h + o @ p["attn"]["wo"]
         hn = L.rmsnorm_apply(p["ln2"], h, cfg.norm_eps)
-        y, _ = moe_apply(p["moe"], cfg, hn)
+        y, _ = moe_apply(p["moe"], cfg, hn, dropless=True)
         h = h + y
         k_l = jax.lax.dynamic_update_slice(k_l, k.astype(k_l.dtype), (0, 0, 0, 0))
         v_l = jax.lax.dynamic_update_slice(v_l, v.astype(v_l.dtype), (0, 0, 0, 0))
@@ -404,7 +451,7 @@ def decode_step(params, cfg: ModelConfig, cache, tokens):
         o = L.run_decode_attention(cfg, q[:, 0], k_l, v_l, pos)
         h = h + (o @ p["attn"]["wo"])[:, None, :]
         hn = L.rmsnorm_apply(p["ln2"], h, cfg.norm_eps)
-        y, _ = moe_apply(p["moe"], cfg, hn)
+        y, _ = moe_apply(p["moe"], cfg, hn, dropless=True)
         return h + y, (k_l, v_l)
 
     x, (k_new, v_new) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
@@ -412,3 +459,43 @@ def decode_step(params, cfg: ModelConfig, cache, tokens):
     h = L.rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
     logits = L.logits_from_hidden(T.head_weights(params, cfg), cfg, h)
     return cache, logits[:, 0]
+
+
+# ------------------------------------------------- paged serving (UniMem)
+#
+# Same page arena as the dense transformer (the attention geometry is
+# identical); the MoE block runs INSIDE the paged dataplane — per decode
+# step every row's token vector is routed and dispatched through the
+# expert stack (grouped_matmul under moe_dispatch="grouped"), i.e. the
+# paper's vector-unit sparsity on the serving path.
+
+init_paged_cache = T.init_paged_cache
+paged_cache_axes = T.paged_cache_axes
+
+
+def _moe_ffn(p, cfg: ModelConfig, hn, valid):
+    """Per-layer FFN for the paged bodies: DROPLESS expert dispatch —
+    outputs are a pure per-token function, so inert batch rows and
+    ragged chunk tails cannot perturb real tokens, and identical
+    prompts produce identical K/V in any batch (prefix sharing and
+    co-prefill page writes stay exact)."""
+    del valid                      # dropless: no capacity to compete for
+    y, _ = moe_apply(p["moe"], cfg, hn, dropless=True)
+    return y
+
+
+def paged_prefill(params, cfg: ModelConfig, chunk, arena, block_table,
+                  start, chunk_len):
+    """Ragged-chunk MoE prefill — `transformer.paged_prefill`'s contract
+    with expert dispatch in place of the MLP."""
+    x = L.embed_tokens(params["embed"], cfg, chunk["tokens"])
+    return T.paged_prefill_embeds(params, cfg, x, arena, block_table,
+                                  start, chunk_len, ffn_fn=_moe_ffn)
+
+
+def paged_decode_step(params, cfg: ModelConfig, arena, block_table,
+                      positions, tokens):
+    """One fused decode step over the arena with expert dispatch per
+    token.  Same contract as `transformer.paged_decode_step`."""
+    return T.paged_decode_step(params, cfg, arena, block_table,
+                               positions, tokens, ffn_fn=_moe_ffn)

@@ -9,10 +9,14 @@ Each family module exposes:
       (None for encoder-only families)
 
 Families that serve from the UniMem paged arena additionally expose the
-paged-cache hooks (None elsewhere — the engine falls back to the
-contiguous layout for them):
-    init_paged_cache(cfg, num_slots, page_size) -> {"k","v"} page arena
-    paged_prefill(params, cfg, tokens, arena, block_table, start)
+paged-cache hooks (dense, moe, hybrid, vlm; None for ssm, whose cache is
+pure O(1) state with nothing to page — the engine falls back to the
+contiguous layout there):
+    init_paged_cache(cfg, num_slots, page_size, max_batch) -> page arena
+        {"k","v"} pages (+ per-slot contiguous state leaves for hybrid)
+    paged_prefill(params, cfg, chunk, arena, block_table, start, chunk_len)
+        one BATCHED ragged chunk: chunk = {"tokens": (b, c), ...},
+        row i valid for chunk_len[i] tokens from start[i]
     paged_decode_step(params, cfg, arena, block_table, positions, tokens)
 """
 from __future__ import annotations

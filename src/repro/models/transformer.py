@@ -221,11 +221,20 @@ def _scatter_kv(cache_l, kv_new, pos):
 # tables, and memory scales with tokens in flight.  The engine owns the
 # host-side page allocator (core/unimem.py); these functions are the
 # device-side dataplane it jits through serve_step.make_paged_serve_fns.
+#
+# Prefill is BATCHED and RAGGED: one call advances every admitting
+# sequence by up to `chunk_len[i]` tokens of a shared (b, c) chunk.
+# Rows whose chunk_len is 0 (decode-active or empty slots) are inert:
+# their writes are redirected to the null page and their logits are
+# garbage the engine ignores.
 
 def init_paged_cache(cfg: ModelConfig, num_slots: int, page_size: int,
-                     dtype=None):
+                     max_batch: int = 0, dtype=None):
     """Physical page arena: `num_slots` includes any null/trash slots the
-    caller reserves (the serving arena keeps one for inactive rows)."""
+    caller reserves (the serving arena keeps one for inactive rows).
+    `max_batch` is unused here — attention-only families carry no
+    per-slot contiguous state (hybrid does)."""
+    del max_batch
     dtype = dtype or cfg.compute_dtype
     shape = (cfg.num_layers, num_slots, page_size,
              cfg.num_kv_heads, cfg.head_dim)
@@ -239,68 +248,104 @@ def paged_cache_axes():
     return {"k": kv, "v": kv}
 
 
-def _paged_write(arena_l, kv, block_table, start):
+def _paged_write(arena_l, kv, block_table, start, valid=None):
     """Scatter a chunk's K or V into arena pages through the block table.
 
     arena_l: (slots, page, hkv, d); kv: (b, c, hkv, d); start: (b,) first
-    absolute position of the chunk.  Rows whose block-table entries point
-    at the null slot scatter harmlessly into it."""
+    absolute position of the chunk; valid: optional (b, c) bool — invalid
+    positions (ragged chunk tails, inert rows) are redirected to the null
+    slot (the LAST physical slot, never allocated).  Rows whose
+    block-table entries point at the null slot scatter harmlessly into
+    it either way."""
     page = arena_l.shape[1]
     b, c = kv.shape[0], kv.shape[1]
     pos = start[:, None] + jnp.arange(c)[None, :]              # (b, c)
     phys = jnp.take_along_axis(block_table, pos // page, axis=1)
+    if valid is not None:
+        phys = jnp.where(valid, phys, arena_l.shape[0] - 1)
     off = pos % page
     return arena_l.at[phys.reshape(-1), off.reshape(-1)].set(
         kv.reshape(b * c, *kv.shape[2:]).astype(arena_l.dtype))
 
 
-def paged_prefill(params, cfg: ModelConfig, tokens, arena, block_table,
-                  start):
-    """Prefill one chunk of each sequence's prompt through the arena.
+def _last_valid(x, chunk_len):
+    """x: (b, c, d) -> (b, 1, d) row at index chunk_len-1 (clamped)."""
+    idx = jnp.maximum(chunk_len - 1, 0)[:, None, None]
+    return jnp.take_along_axis(x, jnp.broadcast_to(
+        idx, (x.shape[0], 1, x.shape[2])), axis=1)
 
-    tokens: (b, c) chunk tokens at absolute positions start..start+c-1
-    (start: (b,) int32); arena: {"k","v"} (L, slots, page, hkv, hd);
-    block_table: (b, max_pages).  Writes the chunk's K/V into the
-    sequences' pages, attends causally against everything already in the
-    pages (shared prefix included — that is how a forked prompt skips
-    recompute), and returns (arena, last-token logits (b, vocab)).
-    Chunking long prompts = calling this repeatedly with advancing
-    `start` while decode steps interleave."""
-    b, c = tokens.shape
+
+def _mlp_ffn(p, cfg: ModelConfig, hn, valid):
+    """Default per-layer FFN for the paged bodies.  `valid`: (b, s) row
+    mask — ignored by the dense MLP (row-local), consumed by the MoE
+    override (inert rows must not compete for expert capacity)."""
+    del valid
+    return L.mlp_apply(p["mlp"], cfg, hn)
+
+
+def paged_prefill_embeds(params, cfg: ModelConfig, x, arena, block_table,
+                         start, chunk_len, ffn_fn=_mlp_ffn):
+    """Shared prefill body over already-embedded chunk inputs x: (b,c,d)
+    (the transformer embeds tokens; the VLM fuses patch projections in;
+    MoE swaps `ffn_fn` for expert dispatch).  See `paged_prefill` for
+    the contract."""
+    b, c, _ = x.shape
     positions = start[:, None] + jnp.arange(c)[None, :]
-    x = L.embed_tokens(params["embed"], cfg, tokens)
+    valid = jnp.arange(c)[None, :] < chunk_len[:, None]        # (b, c)
     mp = block_table.shape[1]
 
     def body(h, xs):
         p, k_l, v_l = xs
         hn = L.rmsnorm_apply(p["ln1"], h, cfg.norm_eps)
         q, k, v = L.attention_qkv(p["attn"], cfg, hn, positions)
-        k_l = _paged_write(k_l, k, block_table, start)
-        v_l = _paged_write(v_l, v, block_table, start)
+        k_l = _paged_write(k_l, k, block_table, start, valid)
+        v_l = _paged_write(v_l, v, block_table, start, valid)
         page = k_l.shape[1]
         k_view = k_l[block_table].reshape(b, mp * page, *k_l.shape[2:])
         v_view = v_l[block_table].reshape(b, mp * page, *v_l.shape[2:])
         o = L.chunk_attention_over_pages(q, k_view, v_view, positions)
         h = h + o @ p["attn"]["wo"]
         hn = L.rmsnorm_apply(p["ln2"], h, cfg.norm_eps)
-        h = h + L.mlp_apply(p["mlp"], cfg, hn)
+        h = h + ffn_fn(p, cfg, hn, valid)
         return h, (k_l, v_l)
 
     x, (k_new, v_new) = jax.lax.scan(
         body, x, (params["layers"], arena["k"], arena["v"]))
     arena = {"k": k_new, "v": v_new}
-    h = L.rmsnorm_apply(params["ln_f"], x[:, -1:], cfg.norm_eps)
+    h = L.rmsnorm_apply(params["ln_f"], _last_valid(x, chunk_len),
+                        cfg.norm_eps)
     logits = L.logits_from_hidden(head_weights(params, cfg), cfg, h)
     return arena, logits[:, 0]
 
 
+def paged_prefill(params, cfg: ModelConfig, chunk, arena, block_table,
+                  start, chunk_len):
+    """Prefill one RAGGED chunk of every admitting sequence's prompt.
+
+    chunk: {"tokens": (b, c)} — a shared bucketed chunk width c; row i
+    holds chunk_len[i] <= c valid tokens at absolute positions
+    start[i]..start[i]+chunk_len[i]-1; arena: {"k","v"}
+    (L, slots, page, hkv, hd); block_table: (b, max_pages).  Writes each
+    row's valid K/V into its pages (invalid tails go to the null slot),
+    attends causally against everything already in the pages (shared
+    prefix included — that is how a forked prompt skips recompute), and
+    returns (arena, logits at each row's LAST VALID position
+    (b, vocab)).  Chunking long prompts = calling this repeatedly with
+    advancing `start` while decode steps interleave."""
+    x = L.embed_tokens(params["embed"], cfg, chunk["tokens"])
+    return paged_prefill_embeds(params, cfg, x, arena, block_table,
+                                start, chunk_len)
+
+
 def paged_decode_step(params, cfg: ModelConfig, arena, block_table,
-                      positions, tokens):
+                      positions, tokens, ffn_fn=_mlp_ffn):
     """One fused decode step over the arena.  tokens: (b,) int32;
     positions: (b,) index each new token is written at (== current
     length); block_table: (b, max_pages).  Inactive rows point at the
-    null slot.  Returns (arena, logits (b, vocab))."""
+    null slot (position 0 marks a row inactive for `ffn_fn` masking).
+    Returns (arena, logits (b, vocab))."""
     x = L.embed_tokens(params["embed"], cfg, tokens[:, None])   # (b, 1, d)
+    valid = (positions > 0)[:, None]                            # (b, 1)
 
     def body(h, xs):
         p, k_l, v_l = xs
@@ -312,7 +357,7 @@ def paged_decode_step(params, cfg: ModelConfig, arena, block_table,
                                          block_table, positions)
         h = h + (o @ p["attn"]["wo"])[:, None, :]
         hn = L.rmsnorm_apply(p["ln2"], h, cfg.norm_eps)
-        h = h + L.mlp_apply(p["mlp"], cfg, hn)
+        h = h + ffn_fn(p, cfg, hn, valid)
         return h, (k_l, v_l)
 
     x, (k_new, v_new) = jax.lax.scan(

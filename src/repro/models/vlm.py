@@ -75,11 +75,32 @@ init_cache = T.init_cache
 cache_axes = T.cache_axes
 decode_step = T.decode_step     # params tree is a transformer superset
 
-# VLM prefill interleaves patch embeddings with tokens; the paged prefill
-# hook only understands token chunks — contiguous fallback for now.
-init_paged_cache = None
-paged_prefill = None
-paged_decode_step = None
+# Paged serving: after prefill the cache is modality-agnostic, so decode
+# and the arena layout are the transformer's verbatim.  Prefill chunks
+# are multimodal: each (b, c) chunk carries tokens AND a patch-embedding
+# plane; virtual positions < num_patches take the projected patch row,
+# the rest take the token embedding — patch chunks feed the same paged
+# text cache.
+init_paged_cache = T.init_paged_cache
+paged_cache_axes = T.paged_cache_axes
+paged_decode_step = T.paged_decode_step
+
+
+def paged_prefill(params, cfg: ModelConfig, chunk, arena, block_table,
+                  start, chunk_len):
+    """Ragged multimodal chunk prefill.  chunk: {"tokens": (b, c),
+    "patches": (b, c, frontend_dim)} — row i's virtual prompt is
+    [num_patches image rows | text tokens]; positions below
+    cfg.num_patches read the projected patch plane, the rest the token
+    embedding.  Contract otherwise as `transformer.paged_prefill`."""
+    tokens = chunk["tokens"]
+    b, c = tokens.shape
+    positions = start[:, None] + jnp.arange(c)[None, :]
+    img = _project_patches(params, cfg, chunk["patches"])       # (b, c, d)
+    txt = L.embed_tokens(params["embed"], cfg, tokens)
+    x = jnp.where((positions < cfg.num_patches)[..., None], img, txt)
+    return T.paged_prefill_embeds(params, cfg, x, arena, block_table,
+                                  start, chunk_len)
 
 
 def prefill(params, cfg: ModelConfig, batch, cache):

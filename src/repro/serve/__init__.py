@@ -12,10 +12,12 @@ Architecture (one pooled memory, the paper's form):
     serve/engine.py          continuous batching: lazy allocation,
                              chunked prefill, prefix sharing, preemption
 
-Transformer-family models serve entirely from the paged arena (KV bytes
-scale with tokens in flight); families with state caches (ssm/hybrid)
-or family-specific decode structure (moe/vlm, pending) use the
-contiguous per-slot fallback behind the same engine API.
+Every decode family except pure-SSM serves from the paged arena (KV
+bytes scale with tokens in flight): dense, moe (expert dispatch inside
+the paged decode step), vlm (patch-embedding chunks feed the paged text
+cache), hybrid (attention KV share paged, conv/SSM state contiguous per
+slot).  The ssm family's O(1) state cache uses the contiguous per-slot
+fallback behind the same engine API.
 """
 from repro.serve.kv_cache import (
     PagedKVArena,

@@ -18,15 +18,29 @@ families with paged hooks (transformer) the engine is **paged-native**:
     preempted back to the queue (recompute-on-readmit), which turns
     OOM into backpressure.
 
-Families without paged hooks (ssm/hybrid state caches; moe/vlm pending)
-fall back to the contiguous layout: per-slot `max_seq` caches with the
-pool used as an admission counter over max footprints.
+Prefill is BATCHED and BUCKETED.  One jit call per engine tick advances
+EVERY admitting slot: the tick builds a single (max_batch, c) chunk
+where row i belongs to slot i, non-admitting rows are inert
+(chunk_len 0, null block tables), and each admitting row carries its own
+ragged chunk_len.  The shared width c is snapped UP to a small fixed
+bucket set — powers of two from 8 to `prefill_chunk` — so a ragged
+prompt mix compiles at most `len(prefill_buckets)` prefill variants
+instead of one per distinct prompt length (the jit cache stays bounded
+no matter the workload; `prefill_shapes` records what was dispatched).
+
+Every decode family except pure-SSM serves paged-native: dense, moe
+(expert dispatch inside the paged decode step), vlm (patch-embedding
+chunks feed the paged text cache) and hybrid (attention KV share paged;
+conv/SSM state contiguous per slot inside the arena).  The ssm family's
+cache is O(1) state with nothing to page — it uses the contiguous
+layout: per-slot caches with the pool as an admission counter over max
+footprints.
 
 Loop shape (classic continuous batching):
 
     while work:
         admit: free slot + admissible request -> slot enters PREFILL
-        prefill: one chunk per prefilling slot (paged) / whole prompt
+        prefill: ONE bucketed jit call advancing all prefilling slots
         step:  one fused decode step over ALL active slots
         retire: eos / token-budget slots -> emit result, free pages
 """
@@ -55,10 +69,30 @@ class Request:
     prompt: np.ndarray                 # (prompt_len,) int32
     max_new_tokens: int = 32
     eos_token: int = -1                # -1 = never (synthetic serving)
+    patch_embeds: np.ndarray | None = None   # vlm: (num_patches, frontend_dim)
+
+    @property
+    def num_patch_tokens(self) -> int:
+        return 0 if self.patch_embeds is None else len(self.patch_embeds)
+
+    @property
+    def virtual_len(self) -> int:
+        """Prompt positions the cache must hold: image rows + tokens."""
+        return self.num_patch_tokens + len(self.prompt)
 
     @property
     def max_footprint(self) -> int:
-        return len(self.prompt) + self.max_new_tokens
+        return self.virtual_len + self.max_new_tokens
+
+    def virtual_bytes(self, lo: int, hi: int) -> bytes:
+        """Content of virtual positions [lo, hi) for page hashing."""
+        p = self.num_patch_tokens
+        parts = []
+        if lo < p:
+            parts.append(self.patch_embeds[lo:min(hi, p)].tobytes())
+        if hi > p:
+            parts.append(self.prompt[max(lo - p, 0):hi - p].tobytes())
+        return b"".join(parts)
 
 
 @dataclass
@@ -88,13 +122,28 @@ class _Slot:
 
     @property
     def prefilling(self) -> bool:
-        return self.prefill_pos < len(self.request.prompt)
+        return self.prefill_pos < self.request.virtual_len
 
 
 class ServingEngine:
     """`layout="paged"` (default where the family supports it) serves
     from the UniMem arena; `layout="contiguous"` is the per-slot
-    fallback.  Both run the same continuous-batching loop."""
+    fallback.  Both run the same continuous-batching loop.
+
+    Chunk bucketing
+    ---------------
+    Paged prefill advances all admitting slots in ONE jit call per tick:
+    a (max_batch, c) token chunk where row i is slot i and each row
+    carries its own ragged `chunk_len`.  The shared width c is snapped
+    UP to `prefill_buckets` — powers of two from 8 up to
+    `prefill_chunk`, plus `prefill_chunk` itself (e.g. chunk 32 ->
+    [8, 16, 32]).  Because batch and width are the only shape-bearing
+    dims, the engine compiles at most len(prefill_buckets) prefill
+    variants for ANY workload, instead of one per distinct prompt
+    length; `prefill_shapes` records the (batch, width) pairs actually
+    dispatched.  Rows with fewer remaining tokens than the bucket mask
+    their tails (writes to the null page, logits at the last valid
+    position), so bucketing never changes emitted tokens."""
 
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
                  max_seq: int = 1024, page_size: int = 16,
@@ -109,6 +158,7 @@ class ServingEngine:
         if fam.decode_step is None:
             raise ValueError(f"family {cfg.family!r} cannot serve (no decode)")
         self.fam = fam
+        self._patch_frontend = cfg.frontend == "patch"
         if layout is None:
             layout = "paged" if registry.has_paged(cfg) else "contiguous"
         if layout == "paged" and not registry.has_paged(cfg):
@@ -119,11 +169,24 @@ class ServingEngine:
         pool_pages = pool_pages or (max_batch * max_seq) // page_size
         self.max_pages = -(-max_seq // page_size)     # block-table width
         self.prefill_chunk = prefill_chunk or max(page_size * 4, 32)
+        # chunk widths snap UP to this fixed set: powers of two from 8 to
+        # prefill_chunk (plus prefill_chunk itself) — the jit cache for
+        # prefill is bounded by len(prefill_buckets), not by the number
+        # of distinct prompt lengths in the workload.
+        self.prefill_buckets = sorted(
+            {1 << b for b in range(3, self.prefill_chunk.bit_length())
+             if (1 << b) < self.prefill_chunk} | {self.prefill_chunk})
+        self.prefill_shapes: set[tuple[int, int]] = set()
 
         if layout == "paged":
             self.arena = PagedKVArena(cfg, num_pages=pool_pages,
-                                      page_size=page_size)
+                                      page_size=page_size,
+                                      max_batch=max_batch)
             self.pool = self.arena.pool
+            # families with contiguous per-slot state (hybrid conv/SSM)
+            # can share page MEMORY but never skip prefill COMPUTE: the
+            # skipped tokens' state would not exist for the new slot
+            self._slot_state = self.arena.state_bytes > 0
             self.prefill_fn, self.decode_fn = make_paged_serve_fns(
                 cfg, temperature=temperature)
             self.cache = None
@@ -153,6 +216,12 @@ class ServingEngine:
             raise ValueError(
                 f"request {request.uid}: footprint {request.max_footprint} "
                 f"> max_seq {self.max_seq}")
+        if self._patch_frontend and (request.num_patch_tokens
+                                     != self.cfg.num_patches):
+            raise ValueError(
+                f"request {request.uid}: {self.cfg.family} requests need "
+                f"patch_embeds with {self.cfg.num_patches} rows, got "
+                f"{request.num_patch_tokens}")
         self.pending.append(request)
 
     def _free_slots(self) -> list[int]:
@@ -160,36 +229,57 @@ class ServingEngine:
 
     # ------------------------------------------------- prefix page cache
 
-    def _page_hashes(self, prompt: np.ndarray) -> list[int]:
-        """Chained content hashes of the prompt's FULL pages (vLLM-style:
-        each page's identity includes everything before it)."""
+    def _page_hashes(self, req: Request) -> list[int]:
+        """Chained content hashes of the virtual prompt's FULL pages
+        (vLLM-style: each page's identity includes everything before it;
+        vlm patch-embedding rows hash like tokens)."""
         ps = self.page_size
         out, h = [], 0
-        for i in range(len(prompt) // ps):
-            h = hash((h, prompt[i * ps:(i + 1) * ps].tobytes()))
+        for i in range(req.virtual_len // ps):
+            h = hash((h, req.virtual_bytes(i * ps, (i + 1) * ps)))
             out.append(h)
         return out
 
-    def _match_prefix(self, prompt: np.ndarray) -> tuple[list[int], list[int]]:
-        """Longest run of cached full pages for this prompt, capped so at
-        least one prompt token is always re-prefilled (it produces the
-        first-token logits).  Returns (page_ids, their hashes)."""
-        hashes = self._page_hashes(prompt)
-        limit = (len(prompt) - 1) // self.page_size
-        pages = []
-        for h in hashes[:limit]:
+    def _match_prefix(self, req: Request) -> tuple[list[int], list[int],
+                                                   list[int]]:
+        """Longest run of shareable full pages for this prompt, capped so
+        at least one prompt position is always re-prefilled (it produces
+        the first-token logits).  Returns (written, adopted, hashes):
+        `written` pages hold published K/V the new sequence can skip;
+        `adopted` pages extend the run with pages a PREFILLING slot has
+        allocated for identical content — not yet (fully) written, so
+        the new sequence still prefills through them, but both rows
+        write the same values into the same physical pages (batched
+        co-prefill is pure memory dedup; once the leader publishes a
+        page the follower's `_absorb_shared` skips the recompute)."""
+        hashes = self._page_hashes(req)
+        limit = (req.virtual_len - 1) // self.page_size
+        written, adopted = [], []
+        for i, h in enumerate(hashes[:limit]):
             page = self._prefix_cache.get(h)
-            if page is None or not self.pool.is_allocated(page):
+            if page is not None and self.pool.is_allocated(page):
+                # per-slot-state families (hybrid) must recompute every
+                # prompt token — published pages are adopted, not skipped
+                if not adopted and not self._slot_state:
+                    written.append(page)
+                else:                      # keep the run contiguous
+                    adopted.append(page)
+                continue
+            page = next((s.pages.pages[i] for s in self.slots.values()
+                         if s.prefilling and i < len(s.page_hashes)
+                         and s.page_hashes[i] == h
+                         and i < len(s.pages.pages)), None)
+            if page is None:
                 break
-            pages.append(page)
-        return pages, hashes
+            adopted.append(page)
+        return written, adopted, hashes
 
     def _register_prefix(self, slot: _Slot):
         """Publish the slot's prompt pages for future sharing — only the
         pages whose K/V the prefill has fully WRITTEN (registering at
         admission would let a second request attend to still-empty
         pages)."""
-        full = min(len(slot.request.prompt), slot.prefill_pos) // self.page_size
+        full = min(slot.request.virtual_len, slot.prefill_pos) // self.page_size
         for i, h in enumerate(slot.page_hashes[:full]):
             if h not in self._prefix_cache:
                 page = slot.pages.pages[i]
@@ -200,17 +290,27 @@ class ServingEngine:
         """Late-binding prefix sharing: a slot that was admitted before a
         matching prompt finished prefilling can still adopt the published
         pages — swap its own (not yet written) pages for the shared ones
-        and skip those chunks.  Only at page-aligned prefill positions."""
+        and skip those chunks.  Only at page-aligned prefill positions.
+        Never for per-slot-state families: skipping tokens would leave
+        the slot's conv/SSM state behind its page contents."""
+        if self._slot_state:
+            return
         ps = self.page_size
-        limit = (len(s.request.prompt) - 1) // ps
+        limit = (s.request.virtual_len - 1) // ps
         while s.prefill_pos % ps == 0:
             i = s.prefill_pos // ps
             if i >= limit or i >= len(s.page_hashes):
                 break
             page = self._prefix_cache.get(s.page_hashes[i])
-            if (page is None or not self.pool.is_allocated(page)
-                    or page == s.pages.pages[i]):
+            if page is None or not self.pool.is_allocated(page):
                 break
+            if page == s.pages.pages[i]:
+                # co-prefill adoption: the page is already ours and the
+                # donor has now fully written it — skip the recompute,
+                # keep the ref we took at admission
+                s.prefill_pos += ps
+                s.shared_tokens += ps
+                continue
             self.pool.share([page])
             self.pool.free([s.pages.pages[i]])   # ours was never written
             s.pages.pages[i] = page
@@ -241,19 +341,22 @@ class ServingEngine:
         free = self._free_slots()
         while free and self.pending:
             req = self.pending[0]
-            plen = len(req.prompt)
-            shared_pages, hashes = self._match_prefix(req.prompt)
-            shared_tokens = len(shared_pages) * self.page_size
-            need = self.pool.pages_for(plen) - len(shared_pages)
+            plen = req.virtual_len
+            written, adopted, hashes = self._match_prefix(req)
+            shared_tokens = len(written) * self.page_size
+            need = self.pool.pages_for(plen) - len(written) - len(adopted)
             if need > self.pool.free_pages:
                 break                            # UniMem backpressure
             self.pending.pop(0)
             slot = free.pop(0)
-            if shared_pages:
-                self.pool.share(shared_pages)
-            seq = SequencePageTable(self.pool, list(shared_pages),
-                                    shared_tokens)
-            seq.append_tokens(plen - shared_tokens)
+            if written or adopted:
+                self.pool.share(written + adopted)
+            # adopted pages are held but still prefilled through (their
+            # content lands when this row — or the co-prefilling donor —
+            # writes them); only `written` tokens are skipped outright
+            held = shared_tokens + len(adopted) * self.page_size
+            seq = SequencePageTable(self.pool, written + adopted, held)
+            seq.append_tokens(plen - held)
             s = _Slot(request=req, pages=seq, admitted_at=time.perf_counter(),
                       order=self._admitted, prefill_pos=shared_tokens,
                       shared_tokens=shared_tokens, page_hashes=hashes)
@@ -274,39 +377,76 @@ class ServingEngine:
             # batch=1 prefill, then insert into the shared cache at `slot`
             one_cache = self.fam.init_cache(self.cfg, 1, self.max_seq)
             batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None, :]}
+            if req.patch_embeds is not None:
+                batch["patch_embeds"] = jnp.asarray(req.patch_embeds)[None]
             one_cache, logits = self.prefill_fn(self.params, batch, one_cache)
             first = int(jnp.argmax(logits[0]))
             self.cache = insert_slot(self.cache, one_cache, slot, self.cache_ax)
             self.slots[slot] = _Slot(
                 request=req, pages=pages, generated=[first],
                 last_token=first, admitted_at=time.perf_counter(),
-                order=self._admitted, prefill_pos=len(req.prompt))
+                order=self._admitted, prefill_pos=req.virtual_len)
             self._admitted += 1
 
     # ----------------------------------------------------------- prefill
 
+    def _bucket_width(self, n: int) -> int:
+        """Smallest fixed bucket >= n (n <= prefill_chunk by construction)."""
+        return next(b for b in self.prefill_buckets if b >= n)
+
     def _prefill_tick(self):
-        """Advance every prefilling slot by ONE chunk (paged layout).
-        Decode over already-active slots proceeds in the same engine
-        step, so long prompts never freeze token emission."""
+        """Advance EVERY prefilling slot by one ragged chunk in a SINGLE
+        jit call (paged layout).  Row i of the (max_batch, c) chunk
+        belongs to slot i; rows that are decoding or empty are inert
+        (chunk_len 0, null block tables).  The shared width c is the
+        smallest bucket covering the longest pending chunk, so the
+        number of distinct compiled prefill shapes is bounded by
+        `prefill_buckets` however ragged the prompt mix.  Decode over
+        already-active slots proceeds in the same engine step, so long
+        prompts never freeze token emission."""
         if self.layout != "paged":
             return
-        for s in self.slots.values():
-            if not s.prefilling:
-                continue
+        pre = [(i, s) for i, s in self.slots.items() if s.prefilling]
+        for _, s in pre:
             self._absorb_shared(s)
-            prompt = s.request.prompt
-            c = min(self.prefill_chunk, len(prompt) - s.prefill_pos)
-            chunk = jnp.asarray(
-                prompt[s.prefill_pos:s.prefill_pos + c], jnp.int32)[None, :]
-            bt = jnp.asarray(self.arena.block_table([s.pages], self.max_pages))
-            start = jnp.asarray([s.prefill_pos], jnp.int32)
-            self.arena.kv, logits = self.prefill_fn(
-                self.params, chunk, self.arena.kv, bt, start)
-            s.prefill_pos += c
+        pre = [(i, s) for i, s in pre if s.prefilling]
+        if not pre:
+            return
+        lens = {i: min(self.prefill_chunk,
+                       s.request.virtual_len - s.prefill_pos)
+                for i, s in pre}
+        b, c = self.max_batch, self._bucket_width(max(lens.values()))
+        tokens = np.zeros((b, c), np.int32)
+        start = np.zeros((b,), np.int32)
+        clen = np.zeros((b,), np.int32)
+        bt = np.full((b, self.max_pages), self.arena.null_page, np.int32)
+        patches = (np.zeros((b, c, self.cfg.frontend_dim), np.float32)
+                   if self._patch_frontend else None)
+        for i, s in pre:
+            req, n, pos = s.request, lens[i], s.prefill_pos
+            p = req.num_patch_tokens
+            lo = max(pos, p)                 # first text position in chunk
+            if lo < pos + n:
+                tokens[i, lo - pos:n] = req.prompt[lo - p:pos + n - p]
+            if patches is not None and pos < p:
+                hi = min(pos + n, p)
+                patches[i, :hi - pos] = req.patch_embeds[pos:hi]
+            start[i] = pos
+            clen[i] = n
+            bt[i, :len(s.pages.pages)] = s.pages.pages
+        chunk = {"tokens": jnp.asarray(tokens)}
+        if patches is not None:
+            chunk["patches"] = jnp.asarray(patches)
+        self.arena.kv, logits = self.prefill_fn(
+            self.params, chunk, self.arena.kv, jnp.asarray(bt),
+            jnp.asarray(start), jnp.asarray(clen))
+        self.prefill_shapes.add((b, c))
+        logits = np.asarray(logits)
+        for i, s in pre:
+            s.prefill_pos += int(clen[i])
             self._register_prefix(s)             # newly-written full pages
             if not s.prefilling:                 # prompt complete
-                first = int(jnp.argmax(logits[0]))
+                first = int(np.argmax(logits[i]))
                 s.generated = [first]
                 s.last_token = first
 
@@ -448,30 +588,35 @@ class ServingEngine:
         free = self._free_slots()
         if not free:
             raise RuntimeError("no free slot to fork into")
-        src = next((s for s in self.slots.values()
-                    if s.request.uid == uid), None)
+        src_i, src = next(((i, s) for i, s in self.slots.items()
+                           if s.request.uid == uid), (None, None))
         if src is None or src.prefilling:
             raise ValueError(f"uid {uid} is not active")
         child_req = Request(uid=new_uid, prompt=src.request.prompt,
                             max_new_tokens=src.request.max_new_tokens,
-                            eos_token=src.request.eos_token)
+                            eos_token=src.request.eos_token,
+                            patch_embeds=src.request.patch_embeds)
         child = _Slot(request=child_req, pages=src.pages.fork(),
                       generated=list(src.generated),
                       last_token=src.last_token,
                       admitted_at=time.perf_counter(), order=self._admitted,
-                      prefill_pos=len(child_req.prompt),
+                      prefill_pos=child_req.virtual_len,
                       shared_tokens=src.pages.num_tokens)
         self._admitted += 1
         self.slots[free[0]] = child
+        # state that cannot share pages (hybrid conv/SSM rows) is copied
+        self.arena.copy_slot_state(src_i, free[0])
 
     # ------------------------------------------------------------- stats
 
     def peak_kv_bytes(self) -> int:
-        """Device bytes the KV layout actually ties down: the contiguous
-        cache reserves its full footprint up front; the paged arena's
-        cost is the page high-water mark."""
+        """Device bytes the cache layout actually ties down: the
+        contiguous cache reserves its full footprint up front; the paged
+        arena's cost is the page high-water mark plus any contiguous
+        per-slot state (hybrid conv/SSM rows, zero elsewhere)."""
         if self.layout == "paged":
-            return self.pool.stats().peak_allocated_pages * self.arena.page_bytes
+            return (self.pool.stats().peak_allocated_pages
+                    * self.arena.page_bytes + self.arena.state_bytes)
         return sum(int(a.size) * a.dtype.itemsize
                    for a in jax.tree.leaves(self.cache))
 
@@ -483,5 +628,7 @@ class ServingEngine:
             "active_slots": len(self.slots),
             "pending": len(self.pending),
             "peak_kv_bytes": self.peak_kv_bytes(),
+            "prefill_buckets": list(self.prefill_buckets),
+            "prefill_shapes": sorted(self.prefill_shapes),
             "pool": self.pool.stats().__dict__,
         }

@@ -5,8 +5,9 @@ Two layouts:
 * **Contiguous** — the family cache (`init_cache`): per-slot (batch-row)
   K/V of fixed max_seq.  Simple, works for every family; memory is
   `max_batch * max_seq` whether or not sequences are that long.  This is
-  the fallback for families without paged hooks (ssm/hybrid state
-  caches, moe/vlm pending).
+  the fallback for the ssm family (pure O(1) state, nothing to page) and
+  the explicit `layout="contiguous"` oracle the paged path is tested
+  against.
 
 * **Paged (UniMem)** — ONE device arena of KV pages shared by every
   sequence (the paper's single pooled memory form): K/V shaped
@@ -39,17 +40,28 @@ NEG_INF = -1e30
 
 # ------------------------------------------------------------ paged arena
 
+# Arena leaves holding physical KV pages (page-slot axis 1).  Any OTHER
+# leaf a family puts in its paged cache (hybrid: "conv"/"ssm") is
+# contiguous per-ENGINE-SLOT state with the slot axis at position
+# STATE_SLOT_AXIS — pages COW-copy, state rows copy on fork.
+PAGED_KV_KEYS = ("k", "v")
+STATE_SLOT_AXIS = 2
+
+
 @dataclass
 class PagedKVArena:
     """Device-side UniMem arena + host-side page allocator.
 
     `num_pages` is the POOL size; the device arrays carry one extra
     physical slot (`null_page == num_pages`) that is never allocated —
-    the write/gather target for inactive rows and padding.
+    the write/gather target for inactive rows and padding.  `max_batch`
+    sizes the per-slot contiguous state some families keep beside the
+    pages (hybrid SSM/conv rows; batch row i == engine slot i).
     """
     cfg: ModelConfig
     num_pages: int
     page_size: int
+    max_batch: int = 0
     kv: dict = field(default=None, repr=False)       # {"k","v"}: (L, P+1, page, hkv, hd)
     pool: UniMemPool = field(default=None, repr=False)
 
@@ -59,7 +71,8 @@ class PagedKVArena:
             fam = registry.get_family(self.cfg)
             if getattr(fam, "init_paged_cache", None) is not None:
                 self.kv = fam.init_paged_cache(
-                    self.cfg, self.num_pages + 1, self.page_size)
+                    self.cfg, self.num_pages + 1, self.page_size,
+                    self.max_batch)
             else:                        # raw arena (tests, tools)
                 c = self.cfg
                 shape = (c.num_layers, self.num_pages + 1, self.page_size,
@@ -90,7 +103,16 @@ class PagedKVArena:
     @property
     def page_bytes(self) -> int:
         """Device bytes of ONE page across all layers and both of K/V."""
-        return self.bytes // (self.num_pages + 1)
+        kv = sum(int(self.kv[n].size) * self.kv[n].dtype.itemsize
+                 for n in PAGED_KV_KEYS)
+        return kv // (self.num_pages + 1)
+
+    @property
+    def state_bytes(self) -> int:
+        """Bytes of the contiguous per-slot state (non-page leaves) —
+        zero for attention-only families, SSM/conv rows for hybrid."""
+        return sum(int(a.size) * a.dtype.itemsize
+                   for n, a in self.kv.items() if n not in PAGED_KV_KEYS)
 
     def new_sequence(self) -> SequencePageTable:
         return SequencePageTable(self.pool)
@@ -105,9 +127,24 @@ class PagedKVArena:
 
     def copy_page(self, src: int, dst: int) -> None:
         """Device-side page copy (the COW fixup after
-        `SequencePageTable.cow_last_page`)."""
-        self.kv = {name: a.at[:, dst].set(a[:, src])
+        `SequencePageTable.cow_last_page`).  Only the page leaves move;
+        per-slot state is not page-structured."""
+        self.kv = {name: (a.at[:, dst].set(a[:, src])
+                          if name in PAGED_KV_KEYS else a)
                    for name, a in self.kv.items()}
+
+    def copy_slot_state(self, src_slot: int, dst_slot: int) -> None:
+        """Copy the contiguous per-slot state rows (hybrid SSM/conv)
+        from one engine slot to another — the fork() analogue of page
+        sharing for state that cannot be paged."""
+        out = {}
+        for name, a in self.kv.items():
+            if name in PAGED_KV_KEYS:
+                out[name] = a
+            else:
+                idx = (slice(None),) * STATE_SLOT_AXIS
+                out[name] = a.at[idx + (dst_slot,)].set(a[idx + (src_slot,)])
+        self.kv = out
 
     def cow_for_write(self, seq: SequencePageTable) -> bool:
         """Make `seq`'s last page privately owned before a write lands in

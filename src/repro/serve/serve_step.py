@@ -70,8 +70,11 @@ def make_serve_fns(cfg: ModelConfig, *, temperature: float = 0.0):
 def make_paged_serve_fns(cfg: ModelConfig, *, temperature: float = 0.0):
     """Jitted closures over the family's paged-cache hooks.
 
-    prefill_chunk(params, tokens (b,c), arena, block_table, start (b,))
-        -> (arena, last_logits (b, vocab))
+    prefill_chunk(params, chunk, arena, block_table, start (b,),
+                  chunk_len (b,)) -> (arena, last_valid_logits (b, vocab))
+        `chunk` is {"tokens": (b, c)[, "patches": (b, c, frontend_dim)]}
+        — ONE bucketed width c serves every admitting row; chunk_len
+        ragged-masks each row (0 = inert).
     decode(params, arena, block_table, positions, tokens, key)
         -> (arena, next_tokens, key)
     """
@@ -86,9 +89,9 @@ def make_paged_serve_fns(cfg: ModelConfig, *, temperature: float = 0.0):
     cpu = jax.default_backend() == "cpu"
 
     @partial(jax.jit, donate_argnums=() if cpu else (2,))
-    def prefill_chunk(params, tokens, arena, block_table, start):
-        return fam.paged_prefill(params, cfg, tokens, arena,
-                                 block_table, start)
+    def prefill_chunk(params, chunk, arena, block_table, start, chunk_len):
+        return fam.paged_prefill(params, cfg, chunk, arena,
+                                 block_table, start, chunk_len)
 
     @partial(jax.jit, donate_argnums=() if cpu else (1,))
     def decode(params, arena, block_table, positions, tokens, key):

@@ -70,20 +70,22 @@ def test_ws_traffic_model_prefers_ws_when_weights_dominate():
 
 @pytest.mark.parametrize("b,sq,skv,hq,hkv,d", [
     (1, 128, 128, 4, 4, 64),      # MHA square
-    (2, 128, 256, 4, 2, 64),      # GQA, kv longer (non-causal only)
+    (2, 128, 256, 4, 2, 64),      # GQA, kv longer (chunked-prefill tail)
     (1, 256, 256, 8, 1, 32),      # MQA
 ])
 @pytest.mark.parametrize("causal", [True, False])
 def test_flash_attention_matches_ref(b, sq, skv, hq, hkv, d, causal):
-    if causal and sq != skv:
-        pytest.skip("causal ref assumes aligned positions")
+    # causal with kv longer than q = the chunked-prefill geometry: the
+    # query block sits at the TAIL of the cached context (q_offset)
+    q_offset = skv - sq if causal else 0
     ks = jax.random.split(jax.random.key(2), 3)
     q = _rand(ks[0], (b, sq, hq, d), jnp.float32)
     k = _rand(ks[1], (b, skv, hkv, d), jnp.float32)
     v = _rand(ks[2], (b, skv, hkv, d), jnp.float32)
     got = fa_ops.flash_attention(q, k, v, causal=causal, block_q=64,
-                                 block_kv=64, interpret=True)
-    want = attention_ref(q, k, v, causal=causal)
+                                 block_kv=64, q_offset=q_offset,
+                                 interpret=True)
+    want = attention_ref(q, k, v, causal=causal, q_offset=q_offset)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-4, atol=2e-4)
 
@@ -149,6 +151,22 @@ def test_grouped_matmul_matches_ref(e, c, k, f, dtype):
     want = grouped_matmul_ref(x, w)
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32), **TOL[dtype])
+
+
+def test_experts_apply_grouped_pads_non_tile_dims():
+    """The serving expert stack must handle capacity/d_model/d_ff that
+    are not 128-tile multiples (zero-padded into the kernel)."""
+    from repro.models.moe import experts_apply, experts_apply_grouped
+    ks = jax.random.split(jax.random.key(7), 4)
+    e, c, d, f = 2, 136, 192, 192        # all > 128, none a multiple
+    p = {"wg": _rand(ks[0], (e, d, f), jnp.float32) * 0.05,
+         "wi": _rand(ks[1], (e, d, f), jnp.float32) * 0.05,
+         "wo": _rand(ks[2], (e, f, d), jnp.float32) * 0.05}
+    buf = _rand(ks[3], (e, c, d), jnp.float32)
+    want = experts_apply(p, buf)
+    got = experts_apply_grouped(p, buf)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-4)
 
 
 # -------------------------------------------------------- decode_attention

@@ -195,6 +195,210 @@ def test_engine_rejects_oversized_request():
                            max_new_tokens=8))
 
 
+# ------------------------------------- cross-family parity matrix (paged)
+
+def _family_requests(cfg, n=4, seed=7, max_new=5, plen_hi=26):
+    """Mixed-length request stream; vlm rows carry patch embeddings."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(3, plen_hi))
+        pe = (rng.standard_normal((cfg.num_patches, cfg.frontend_dim))
+              .astype(np.float32) if cfg.frontend == "patch" else None)
+        reqs.append(dict(uid=i,
+                         prompt=rng.integers(0, cfg.vocab_size, plen)
+                         .astype(np.int32),
+                         max_new_tokens=max_new, patch_embeds=pe))
+    return reqs
+
+
+@pytest.mark.parametrize("family", ["dense", "moe", "hybrid", "vlm"])
+def test_paged_matches_contiguous_across_families(family):
+    """The whole model zoo is paged-native: for every serving family the
+    UniMem arena emits the same greedy tokens as the contiguous oracle,
+    with prefill chunked AND batched (chunk 8 crosses page, prompt and
+    patch/text boundaries)."""
+    cfg = TINY[family]
+    params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+    assert registry.has_paged(cfg)
+
+    def run(layout, **kw):
+        eng = ServingEngine(cfg, params, max_batch=2, max_seq=64,
+                            page_size=8, layout=layout, **kw)
+        for r in _family_requests(cfg):
+            eng.submit(Request(**r))
+        toks = {r.uid: tuple(r.tokens) for r in eng.run()}
+        return eng, toks
+
+    ep, paged = run("paged", prefill_chunk=8)
+    _, contig = run("contiguous")
+    assert sorted(paged) == list(range(4))
+    assert paged == contig
+    assert ep.pool.stats().allocated_pages == 0     # pages fully drained
+
+
+def test_no_family_has_a_contiguous_fallback_branch():
+    """Every decode family except pure-SSM state (nothing to page) must
+    expose the paged hooks — the fallback branches are gone."""
+    for fam in ("dense", "moe", "hybrid", "vlm"):
+        assert registry.has_paged(TINY[fam]), fam
+    assert not registry.has_paged(TINY["ssm"])
+
+
+def test_moe_grouped_kernel_dispatch_matches_scatter():
+    """Expert dispatch through the grouped_matmul Pallas kernel
+    (interpret mode on CPU) serves the same greedy tokens as the einsum
+    scatter path — the kernel runs INSIDE the paged decode step."""
+    rng = np.random.default_rng(11)
+    reqs = [dict(uid=i, prompt=rng.integers(0, 128, int(rng.integers(3, 12)))
+                 .astype(np.int32), max_new_tokens=3) for i in range(2)]
+
+    def run(cfg):
+        params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+        eng = ServingEngine(cfg, params, max_batch=2, max_seq=32,
+                            page_size=8, layout="paged")
+        for r in reqs:
+            eng.submit(Request(**r))
+        return {r.uid: tuple(r.tokens) for r in eng.run()}
+
+    assert run(TINY["moe"]) == run(TINY["moe"].replace(moe_dispatch="grouped"))
+
+
+def test_hybrid_shared_prefix_recomputes_slot_state():
+    """Regression: a hybrid request whose prompt matches a published
+    prefix must NOT skip prefill — the skipped tokens' per-slot conv/SSM
+    state would never exist.  Pages are shared (memory dedup) but every
+    token is recomputed; greedy tokens must match the contiguous oracle
+    for both the staggered and same-tick submission patterns."""
+    cfg = TINY["hybrid"]
+    params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+    prompt = (np.arange(17, dtype=np.int32) * 3) % cfg.vocab_size
+
+    def run(layout, stagger):
+        eng = ServingEngine(cfg, params, max_batch=2, max_seq=64,
+                            page_size=8, layout=layout)
+        eng.submit(Request(uid=0, prompt=prompt.copy(), max_new_tokens=8))
+        if stagger:     # second request arrives while the first decodes
+            while not any(s.generated for s in eng.slots.values()):
+                eng.step()
+        eng.submit(Request(uid=1, prompt=prompt.copy(), max_new_tokens=8))
+        return {r.uid: tuple(r.tokens) for r in eng.run()}
+
+    contig = run("contiguous", False)
+    assert run("paged", True) == contig
+    assert run("paged", False) == contig
+
+
+def test_moe_inert_rows_never_evict_real_tokens():
+    """Regression: padded bucket tails and inert batch rows must not
+    compete for expert capacity — a long ragged prompt in the LAST slot
+    used to lose expert assignments to garbage rows ahead of it in flat
+    token order, breaking paged-vs-contiguous greedy parity."""
+    cfg = TINY["moe"]
+    params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+    rng = np.random.default_rng(42)
+    reqs = [dict(uid=i, prompt=rng.integers(0, cfg.vocab_size, pl)
+                 .astype(np.int32), max_new_tokens=6)
+            for i, pl in enumerate([5, 4, 6, 3, 5, 4, 6, 90])]
+
+    def run(layout):
+        eng = ServingEngine(cfg, params, max_batch=8, max_seq=128,
+                            page_size=8, layout=layout, prefill_chunk=32)
+        for r in reqs:
+            eng.submit(Request(**r))
+        return {r.uid: tuple(r.tokens) for r in eng.run()}
+
+    assert run("paged") == run("contiguous")
+
+
+def test_moe_identical_prompts_share_pages_with_parity():
+    """Serving dispatch is DROPLESS, so moe outputs are a pure per-token
+    function — identical same-tick prompts compute identical K/V, may
+    safely co-write shared physical pages (memory dedup), and must still
+    match the contiguous oracle."""
+    cfg = TINY["moe"]
+    params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+    prompt = (np.arange(17, dtype=np.int32) * 5) % cfg.vocab_size
+
+    eng = ServingEngine(cfg, params, max_batch=2, max_seq=64, page_size=8)
+    for uid in range(2):
+        eng.submit(Request(uid=uid, prompt=prompt.copy(), max_new_tokens=6))
+    eng._admit()
+    tables = [s.pages.pages for s in eng.slots.values()]
+    # the (17-1)//8 = 2 full prefix pages are adopted, not duplicated
+    assert tables[0][:2] == tables[1][:2]
+    assert tables[0][2] != tables[1][2]           # private partial pages
+    res = {r.uid: tuple(r.tokens) for r in eng.run()}
+
+    ec = ServingEngine(cfg, params, max_batch=2, max_seq=64, page_size=8,
+                       layout="contiguous")
+    for uid in range(2):
+        ec.submit(Request(uid=uid, prompt=prompt.copy(), max_new_tokens=6))
+    contig = {r.uid: tuple(r.tokens) for r in ec.run()}
+    assert res == contig
+
+
+def test_vlm_requests_require_patch_embeds():
+    cfg = TINY["vlm"]
+    params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+    eng = ServingEngine(cfg, params, max_batch=1, max_seq=64, page_size=8)
+    with pytest.raises(ValueError):
+        eng.submit(Request(uid=0, prompt=np.arange(4, dtype=np.int32)))
+
+
+# --------------------------------------------- prefill recompile budget
+
+def test_ragged_prompts_stay_within_prefill_bucket_budget():
+    """A ragged-prompt workload (many distinct lengths) must compile at
+    most len(prefill_buckets) prefill variants: chunk widths snap up to
+    the fixed bucket set and all admitting slots share ONE jit call per
+    tick.  Checked against the engine's dispatch record AND the jit
+    cache itself."""
+    cfg = TINY["dense"]
+    params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+    eng = ServingEngine(cfg, params, max_batch=4, max_seq=128, page_size=8,
+                        prefill_chunk=32)
+    rng = np.random.default_rng(5)
+    lengths = list(range(3, 90, 7)) + [1, 2, 97]     # 16 distinct lengths
+    for i, plen in enumerate(lengths):
+        eng.submit(Request(uid=i, prompt=rng.integers(
+            0, cfg.vocab_size, plen).astype(np.int32), max_new_tokens=4))
+    results = eng.run()
+    assert len(results) == len(lengths)
+    assert eng.prefill_buckets == [8, 16, 32]
+    # one batch row count, bucketed widths only
+    assert {s[0] for s in eng.prefill_shapes} == {4}
+    assert {s[1] for s in eng.prefill_shapes} <= set(eng.prefill_buckets)
+    assert len(eng.prefill_shapes) <= len(eng.prefill_buckets)
+    # the compile-counter: the jitted closure's cache holds at most one
+    # entry per bucket (jax >= 0.4 exposes the pjit cache size)
+    cache_size = getattr(eng.prefill_fn, "_cache_size", None)
+    if callable(cache_size):
+        assert cache_size() <= len(eng.prefill_buckets)
+
+
+def test_prefill_tick_is_one_call_for_all_admitting_slots(monkeypatch):
+    """Two slots admitting simultaneously must share a single prefill
+    dispatch per tick (batched), not one call per slot."""
+    cfg = TINY["dense"]
+    params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+    eng = ServingEngine(cfg, params, max_batch=2, max_seq=64, page_size=8,
+                        prefill_chunk=8)
+    rng = np.random.default_rng(6)
+    for i in range(2):
+        eng.submit(Request(uid=i, prompt=rng.integers(
+            0, cfg.vocab_size, 20 + i).astype(np.int32), max_new_tokens=2))
+    calls = []
+    inner = eng.prefill_fn
+    def counting(params, chunk, arena, bt, start, clen):
+        calls.append(np.asarray(clen).copy())
+        return inner(params, chunk, arena, bt, start, clen)
+    monkeypatch.setattr(eng, "prefill_fn", counting)
+    eng.step()
+    assert len(calls) == 1                       # ONE jit call per tick
+    assert (calls[0] > 0).sum() == 2             # both slots advanced in it
+
+
 def test_engine_decode_matches_batch_decode_many():
     """Greedy engine output == fused decode_many on the same prompt."""
     from repro.serve.serve_step import make_serve_fns
