@@ -1,0 +1,102 @@
+"""Beyond-paper: fused paged-attention kernel microbenchmark.
+
+Times the fused single-pass Pallas kernels (decode + chunked prefill,
+interpret mode on CPU — this container is not the serving hardware, so
+wall-clock is a structural sanity signal, not TPU truth) against their
+XLA ref formulations, and checks bitwise-close parity on every
+geometry.  PASS is parity; the timings ride along for the perf
+trajectory.
+
+    PYTHONPATH=src python benchmarks/paged_kernel_bench.py
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.ops import paged_decode_attention
+from repro.kernels.paged_attention.ref import paged_decode_attention_ref
+from repro.kernels.paged_prefill.ops import paged_prefill_attention
+from repro.kernels.paged_prefill.ref import paged_prefill_attention_ref
+
+# (hq, hkv, hd, page, max_pages, pages_per_block) — one sub-tile GQA
+# geometry, one multi-page-block, one exact-MXU-tile
+GEOMS = [
+    (4, 2, 16, 8, 4, 1),
+    (8, 2, 64, 8, 4, 2),
+    (8, 8, 128, 8, 2, 2),
+]
+B, CHUNK, REPS = 2, 8, 3
+
+
+def _time(fn, *args) -> float:
+    jax.block_until_ready(fn(*args))            # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(REPS):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / REPS * 1e3
+
+
+def _setup(rng, hkv, hd, page, mp):
+    P = B * mp + 1
+    k = jnp.asarray(rng.standard_normal((P, page, hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((P, page, hkv, hd)), jnp.float32)
+    bt = jnp.asarray(rng.permutation(P - 1)[:B * mp].reshape(B, mp), jnp.int32)
+    return k, v, bt
+
+
+def run() -> dict:
+    rows, ok = [], True
+    rng = np.random.default_rng(0)
+    for hq, hkv, hd, page, mp, ppb in GEOMS:
+        k, v, bt = _setup(rng, hkv, hd, page, mp)
+        geom = f"hq{hq}/hkv{hkv}/hd{hd}/page{page}x{mp}/ppb{ppb}"
+
+        q = jnp.asarray(rng.standard_normal((B, hq, hd)), jnp.float32)
+        pos = jnp.asarray(rng.integers(0, mp * page, B), jnp.int32)
+        kern = lambda: paged_decode_attention(q, k, v, bt, pos,
+                                              pages_per_block=ppb,
+                                              interpret=True)
+        ref = lambda: paged_decode_attention_ref(q, k, v, bt, pos)
+        match = bool(np.allclose(np.asarray(kern()), np.asarray(ref()),
+                                 rtol=1e-5, atol=1e-5))
+        ok &= match
+        rows.append(dict(kernel="decode", geom=geom, match=match,
+                         kernel_ms=_time(kern), ref_ms=_time(ref)))
+
+        qc = jnp.asarray(rng.standard_normal((B, CHUNK, hq, hd)), jnp.float32)
+        start = jnp.asarray(rng.integers(0, mp * page - CHUNK, B), jnp.int32)
+        clen = jnp.asarray([CHUNK - 3, CHUNK], jnp.int32)   # ragged tail
+        kern = lambda: paged_prefill_attention(qc, k, v, bt, start, clen,
+                                               pages_per_block=ppb,
+                                               interpret=True)
+        ref = lambda: paged_prefill_attention_ref(qc, k, v, bt, start, clen)
+        match = bool(np.allclose(np.asarray(kern()), np.asarray(ref()),
+                                 rtol=1e-5, atol=1e-5))
+        ok &= match
+        rows.append(dict(kernel="prefill", geom=geom, match=match,
+                         kernel_ms=_time(kern), ref_ms=_time(ref)))
+    return {"name": "paged_kernel_bench", "ok": ok, "rows": rows}
+
+
+def pretty(result: dict):
+    print("== Fused paged kernels vs XLA refs "
+          "(interpret mode — parity gate, CPU ms) ==")
+    print(f"{'kernel':>8}  {'geometry':<28}{'kernel ms':>11}{'ref ms':>9}"
+          "  parity")
+    for r in result["rows"]:
+        print(f"{r['kernel']:>8}  {r['geom']:<28}{r['kernel_ms']:>11.1f}"
+              f"{r['ref_ms']:>9.1f}  {'==' if r['match'] else 'DIFFER'}")
+    print(f"-> {'PASS' if result['ok'] else 'FAIL'} "
+          "(kernel == ref on every geometry)\n")
+
+
+if __name__ == "__main__":
+    res = run()
+    pretty(res)
+    sys.exit(0 if res["ok"] else 1)

@@ -20,11 +20,12 @@ from benchmarks import (
     resnet50_throughput,
     ws_dataflow,
     serve_throughput,
+    paged_kernel_bench,
 )
 
 MODULES = [table1_datapath, table23_diebench, table4_cost,
            table57_projection, resnet50_throughput, ws_dataflow,
-           serve_throughput]
+           serve_throughput, paged_kernel_bench]
 
 
 def main() -> int:

@@ -12,12 +12,23 @@ layouts emit identical greedy tokens on every row and (b) paged peak KV
 bytes never exceed contiguous (CPU wall-clock is reported, not judged —
 this container is not the serving hardware).
 
+`--impl flash_pallas --ppb N` reruns the paged side through the FUSED
+single-pass kernels (`kernels/paged_attention` + `kernels/paged_prefill`,
+interpret mode off-TPU) with N pages per grid cell — the CI smoke for
+the TPU-tiled hot path.  `--json PATH` additionally writes a
+machine-readable `BENCH_serve.json` (tokens/s, peak KV bytes, and the
+compiled-HLO attention traffic of the jitted steps before/after the
+kernel fusion: the oracle formulation's gathered-KV/partials bytes vs
+the fused kernels' zero).
+
     PYTHONPATH=src python benchmarks/serve_throughput.py \
-        [--family dense,moe,hybrid,vlm]
+        [--family dense,moe,hybrid,vlm] [--impl flash_pallas] [--ppb 2] \
+        [--json BENCH_serve.json]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -94,8 +105,12 @@ def _run(cfg, params, layout, reqs, mb, ms):
                 prefill_shapes=len(eng.prefill_shapes))
 
 
-def _row(cfg, params, reqs, mb, ms):
-    contig = _run(cfg, params, "contiguous", reqs, mb, ms)
+def _row(cfg, params, reqs, mb, ms, oracle_cfg=None):
+    """paged side runs `cfg` (possibly --impl/--ppb overridden); the
+    contiguous reference stays on `oracle_cfg` (the default XLA impl),
+    so the parity gate is fused-kernels-vs-oracle, never
+    fused-vs-fused."""
+    contig = _run(oracle_cfg or cfg, params, "contiguous", reqs, mb, ms)
     paged = _run(cfg, params, "paged", reqs, mb, ms)
     same = contig["tokens"] == paged["tokens"]
     return dict(
@@ -110,37 +125,92 @@ def _row(cfg, params, reqs, mb, ms):
     )
 
 
-def run(families=None) -> dict:
+def _attention_hlo_stats(cfg) -> dict:
+    """Compiled-HLO attention traffic of the jitted paged steps, before
+    (XLA oracle formulation: per-layer gathered KV copies) vs after
+    (fused Pallas kernels: block-table walk in VMEM).  Bytes come from
+    `launch/hlo_analysis` shape accounting over the ACTUAL serving
+    closures; the gathered/partials keys are the bulk buffers the
+    fusion exists to kill."""
+    from repro.launch.hlo_analysis import summarize
+    from repro.serve.serve_step import (
+        HLO_PROBE_GEOM, bulk_attn_shapes, lowered_paged_hlo)
+
+    bulk_shapes = bulk_attn_shapes(cfg, **HLO_PROBE_GEOM)
+    params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+    out = {"bulk_attn_shapes": bulk_shapes,
+           "backend": jax.default_backend(),
+           # off-TPU the flash_pallas steps lower through the Pallas
+           # INTERPRETER, whose emulation buffers inflate whole-step
+           # totals ~10x — only the bulk_attn_bytes keys are
+           # layout-meaningful there; hbm_bytes are backend proxies
+           "hbm_bytes_note": ("whole-step totals are backend-lowering "
+                              "proxies; off-TPU only bulk_attn_bytes_* "
+                              "compare before/after meaningfully")}
+    for tag, c in (("before", cfg),
+                   ("after", cfg.replace(attention_impl="flash_pallas"))):
+        for which in ("decode", "prefill"):
+            s = summarize(lowered_paged_hlo(c, which, params=params,
+                                            **HLO_PROBE_GEOM))
+            bulk = sum(s.bytes_by_shape.get(k, 0.0) for k in bulk_shapes)
+            out[f"{which}_bulk_attn_bytes_{tag}"] = bulk
+            out[f"{which}_hbm_bytes_{tag}"] = s.hbm_bytes
+    return out
+
+
+def run(families=None, impl=None, ppb=1, attn_hlo=False) -> dict:
     families = families or list(FAMILY_CFGS)
+
+    def cfg_of(fam):
+        cfg = FAMILY_CFGS[fam]
+        if impl:
+            cfg = cfg.replace(attention_impl=impl)
+        return cfg.replace(attn_pages_per_block=ppb)
+
     rows, ok = [], True
     # dense batch/seq scaling sweep (covers the dense family point too)
     if "dense" in families:
-        params = registry.get_family(CFG).init(jax.random.key(0), CFG)
+        cfg = cfg_of("dense")
+        params = registry.get_family(cfg).init(jax.random.key(0), cfg)
         for mb, ms, n, phi, mnew in SWEEP:
             rng = np.random.default_rng(hash((mb, ms)) % 2**32)
-            r = _row(CFG, params, _stream(rng, CFG, n, phi, mnew), mb, ms)
+            r = _row(cfg, params, _stream(rng, cfg, n, phi, mnew), mb, ms,
+                     oracle_cfg=FAMILY_CFGS["dense"])
             ok &= r["ok"]
             rows.append(r)
     # family sweep: the rest of the zoo paged-native at one tiny point
     for fam in families:
         if fam == "dense":
             continue
-        cfg = FAMILY_CFGS[fam]
+        cfg = cfg_of(fam)
         params = registry.get_family(cfg).init(jax.random.key(0), cfg)
         # str hash() is salted per process — seed deterministically so
         # the CI smoke workload is reproducible run to run
         rng = np.random.default_rng(1000 + sum(map(ord, fam)))
         p = FAM_POINT
         r = _row(cfg, params, _stream(rng, cfg, p["n"], p["phi"], p["mnew"]),
-                 p["mb"], p["ms"])
+                 p["mb"], p["ms"], oracle_cfg=FAMILY_CFGS[fam])
         ok &= r["ok"]
         rows.append(r)
-    return {"name": "serve_throughput", "ok": ok, "rows": rows}
+    result = {"name": "serve_throughput", "ok": ok, "rows": rows,
+              "attention_impl": impl or CFG.attention_impl,
+              "pages_per_block": ppb}
+    if attn_hlo:
+        result["attention_hlo"] = _attention_hlo_stats(FAMILY_CFGS["dense"])
+        # the fused steps must ship ZERO bulk attention bytes
+        h = result["attention_hlo"]
+        result["ok"] = ok = (ok and h["decode_bulk_attn_bytes_after"] == 0
+                             and h["prefill_bulk_attn_bytes_after"] == 0
+                             and h["decode_bulk_attn_bytes_before"] > 0
+                             and h["prefill_bulk_attn_bytes_before"] > 0)
+    return result
 
 
 def pretty(result: dict):
     print("== Serving: contiguous slots vs UniMem paged arena "
           "(--family sweep: dense,moe,hybrid,vlm) ==")
+    print(f"   attention_impl={result['attention_impl']} "
+          f"pages_per_block={result['pages_per_block']}")
     print(f"{'family':>8}{'batch':>6}{'max_seq':>8}{'reqs':>6}"
           f"{'contig tok/s':>14}{'paged tok/s':>13}{'contig KV MB':>14}"
           f"{'paged KV MB':>13}{'KV ratio':>10}  tokens")
@@ -151,6 +221,13 @@ def pretty(result: dict):
               f"{r['contig_kv_mb']:>14.3f}{r['paged_kv_mb']:>13.3f}"
               f"{r['kv_ratio']:>10.2f}  "
               f"{'==' if r['tokens_match'] else 'DIFFER'}")
+    h = result.get("attention_hlo")
+    if h:
+        print("   jitted-step attention traffic (compiled HLO, dense): "
+              f"decode bulk {h['decode_bulk_attn_bytes_before']/1e3:.0f}kB"
+              f" -> {h['decode_bulk_attn_bytes_after']/1e3:.0f}kB, "
+              f"prefill bulk {h['prefill_bulk_attn_bytes_before']/1e3:.0f}kB"
+              f" -> {h['prefill_bulk_attn_bytes_after']/1e3:.0f}kB")
     print(f"-> {'PASS' if result['ok'] else 'FAIL'} "
           "(identical greedy tokens; paged KV high-water <= contiguous "
           "on every family)\n")
@@ -161,12 +238,35 @@ if __name__ == "__main__":
     ap.add_argument("--family", default=",".join(FAMILY_CFGS),
                     help="comma-separated subset of "
                          f"{','.join(FAMILY_CFGS)} to sweep")
+    ap.add_argument("--impl", default=None,
+                    choices=("dense", "flash_xla", "flash_pallas"),
+                    help="attention_impl override (flash_pallas = fused "
+                         "paged kernels, interpret mode off-TPU)")
+    ap.add_argument("--ppb", type=int, default=1,
+                    help="pages per paged-kernel grid cell "
+                         "(attn_pages_per_block)")
+    ap.add_argument("--json", nargs="?", const="BENCH_serve.json",
+                    default=None, metavar="PATH",
+                    help="write machine-readable results (tokens/s, peak "
+                         "KV bytes, attention HBM bytes before/after the "
+                         "kernel fusion) to PATH")
     args = ap.parse_args()
     fams = [f.strip() for f in args.family.split(",") if f.strip()]
     unknown = [f for f in fams if f not in FAMILY_CFGS]
     if unknown:
         raise SystemExit(f"unknown families {unknown}; "
                          f"choose from {list(FAMILY_CFGS)}")
-    res = run(fams)
-    pretty(res)
+    res = {"name": "serve_throughput", "ok": False,
+           "error": "run() raised before completing"}
+    try:
+        res = run(fams, impl=args.impl, ppb=args.ppb,
+                  attn_hlo=bool(args.json))
+        pretty(res)
+    finally:
+        # write even when run() raises: the (partial) record is exactly
+        # what a failing CI run needs uploaded
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(res, f, indent=1, default=str)
+            print(f"wrote {args.json}")
     sys.exit(0 if res["ok"] else 1)

@@ -1,4 +1,4 @@
-"""Paged split-KV flash-decoding over the UniMem arena, as a Pallas TPU
+"""Paged flash-decoding over the UniMem arena — fused, TPU-tiled Pallas
 kernel.
 
 This generalizes `kernels/decode_attention` from a contiguous per-slot
@@ -7,20 +7,42 @@ KV cache to the pooled page arena of `serve/kv_cache.py`: K/V live in ONE
 sequence reaches its tokens through a (b, max_pages) block table.  That
 is the paper's single pooled memory applied to serving — pages stay
 RESIDENT in their arena slots (the localized DRAM arrays), the one query
-is broadcast, and only tiny per-page softmax summaries (m, l, acc)
-travel back to be merged.
+is broadcast, and nothing bulkier than the final (b, hq, hd) output ever
+travels back through HBM.
 
-Grid (b, kv_heads, max_pages): each cell DMAs exactly one physical page
-into VMEM — the page id comes from the scalar-prefetched block table, so
-the index map itself walks the UniMem page table and the gather never
-materializes a contiguous copy of the sequence.  Each cell reduces its
-page for the whole GQA query group; the combine over pages is the same
-log-sum-exp merge as the contiguous flash-decoding kernel
-(`decode_attention.kernel.combine_splits`).
+Kernel geometry
+---------------
+* **Grid (b, kv_heads, page_blocks)** — the first two dims are
+  `parallel` (the megacore split: Mosaic distributes independent
+  (batch, head) cells across the two TensorCores), the last is
+  `arbitrary`, i.e. SEQUENTIAL: it walks the block table in order while
+  the online-softmax carry persists in VMEM scratch.  This is the fused
+  single-pass form — the old two-pass formulation (per-page f32
+  partials (b, hkv, max_pages, group, hd) written to HBM, then a
+  `combine_pages` merge) no longer exists in the hot path.
+* **VMEM carry** — running (m, l, acc) live in `scratch_shapes` VMEM
+  (`(g_pad, 1)`, `(g_pad, 1)`, `(g_pad, d_pad)` f32), initialized at
+  page-block 0 and folded log-sum-exp-style each block; the output
+  block is written once, at the LAST page block.
+* **Tiling** — the query group is padded to `g_pad` (8 f32 sublanes)
+  and the head dim to `d_pad` (128 lanes), so every VMEM tile the MXU
+  sees is (8k, 128k)-aligned.  q is padded host-side (tiny); K/V page
+  tiles are lane-padded in-register inside the kernel so the ARENA is
+  never copied.
+* **pages_per_block** — each sequential grid cell DMAs `ppb` physical
+  pages (one scalar-prefetched BlockSpec per page slot, so their copies
+  pipeline) and reduces all of them in one (g_pad, ppb*page) score
+  tile.  Block tables whose width is not a ppb multiple are padded with
+  a repeat of the last column; the position mask zeroes the surplus.
+* **Scalar prefetch** — the block table and positions arrive via
+  `PrefetchScalarGridSpec`, so the K/V index maps themselves walk the
+  UniMem page table and the gather never materializes a contiguous
+  copy of the sequence.
 
 Pages past a sequence's length may point at the arena's null slot; the
-position mask zeroes their contribution (m = -inf, l = 0), so the merge
-ignores them.
+position mask zeroes their contribution, and a fully masked block
+leaves the carry untouched (p is masked to 0 before it ever reaches l
+or acc).
 """
 from __future__ import annotations
 
@@ -32,89 +54,178 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# Shared log-sum-exp combine (module-level, not deferred): the fused
+# kernel no longer needs it per-step, but the split/two-pass ORACLE in
+# ref.py and the microbenchmarks still merge partials through it.
+from repro.kernels.decode_attention.kernel import combine_splits
+
 NEG_INF = -1e30
 
+SUBLANE = 8      # f32 sublane tile (second-to-last dim)
+LANE = 128       # lane tile (last dim)
 
-def _paged_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref,
-                  m_ref, l_ref, acc_ref, *, page_size: int):
+
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def _pad_block_table(block_table, ppb: int):
+    """Pad (b, max_pages) to a pages_per_block multiple by repeating the
+    last column — surplus entries sit past every sequence's length, so
+    the position mask zeroes them regardless of which page they name."""
+    b, mp = block_table.shape
+    nb = -(-mp // ppb)
+    pad = nb * ppb - mp
+    bt = block_table.astype(jnp.int32)
+    if pad:
+        bt = jnp.concatenate(
+            [bt, jnp.broadcast_to(bt[:, -1:], (b, pad))], axis=1)
+    return bt, nb
+
+
+# --------------------------------------------------- shared kernel parts
+#
+# The decode and chunk-prefill kernels are the same machine — decode is
+# the c=1 case with a simpler validity mask — so the carry machinery
+# lives here ONCE and both kernel bodies compose it around their masks.
+
+def reset_carry(m_scr, l_scr, acc_scr):
+    """Zero the online-softmax VMEM carry (call at page-block 0)."""
+    m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+    l_scr[...] = jnp.zeros_like(l_scr)
+    acc_scr[...] = jnp.zeros_like(acc_scr)
+
+
+def load_kv_block(kv_refs, ppb: int, d: int, d_pad: int):
+    """Concatenate a grid cell's ppb page tiles into one (ppb*page, d_pad)
+    K and V, lane-padding in-register (the arena is never copied)."""
+    k = jnp.concatenate([kv_refs[j][0, :, 0, :] for j in range(ppb)], axis=0)
+    v = jnp.concatenate([kv_refs[ppb + j][0, :, 0, :] for j in range(ppb)],
+                        axis=0)
+    if d_pad != d:
+        k = jnp.pad(k, ((0, 0), (0, d_pad - d)))
+        v = jnp.pad(v, ((0, 0), (0, d_pad - d)))
+    return k, v
+
+
+def accumulate_block(s, valid, v, m_scr, l_scr, acc_scr):
+    """Fold one (rows, ppb*page) score block into the (m, l, acc) carry.
+    p is masked explicitly: a fully-invalid block keeps m at NEG_INF,
+    where exp(s - m) would otherwise be exp(0) = 1 per masked entry —
+    so invalid rows/blocks leave the carry at exact zero."""
+    s = jnp.where(valid, s, NEG_INF)
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new) * valid.astype(jnp.float32)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1, keepdims=True)
+    m_scr[...] = m_new
+    acc_scr[...] = acc_scr[...] * corr + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+
+
+def emit_output(o_ref, l_scr, acc_scr):
+    """Normalize the carry into the output block (call at the LAST
+    page block); zero-l rows (fully masked) emit exact zeros."""
+    o_ref[0, 0] = (acc_scr[...] /
+                   jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def kv_block_specs(page: int, d: int, ppb: int):
+    """One K and one V BlockSpec per page slot of a grid cell, indexed
+    through the scalar-prefetched block table (first prefetch ref);
+    their DMAs are independent and pipeline across the sequential walk."""
+    def spec(j):
+        return pl.BlockSpec(
+            (1, page, 1, d),
+            lambda bi, h, pi, bt, *rest, j=j: (bt[bi, pi * ppb + j], 0, h, 0))
+    return [spec(j) for j in range(ppb)] * 2
+
+
+def _paged_kernel(bt_ref, pos_ref, q_ref, *refs,
+                  page_size: int, ppb: int, nb: int, d: int, d_pad: int):
+    kv_refs, (o_ref, m_scr, l_scr, acc_scr) = refs[:2 * ppb], refs[2 * ppb:]
     bi = pl.program_id(0)
     pi = pl.program_id(2)
-    q = q_ref[0, 0]                                # (group, d)
-    k = k_ref[0, :, 0, :]                          # (page, d)
-    v = v_ref[0, :, 0, :]
-    pos = pos_ref[bi]                              # newest valid index
 
-    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)   # (group, page)
-    s = s / math.sqrt(q.shape[-1])
-    kv_pos = pi * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    s = jnp.where(kv_pos <= pos, s, NEG_INF)
+    @pl.when(pi == 0)
+    def _init():
+        reset_carry(m_scr, l_scr, acc_scr)
 
-    m = s.max(axis=-1)                             # (group,)
-    p = jnp.exp(s - m[:, None])
-    l = p.sum(axis=-1)
-    acc = jnp.dot(p.astype(v.dtype), v,
-                  preferred_element_type=jnp.float32)         # (group, d)
-    m_ref[0, 0, 0] = m
-    l_ref[0, 0, 0] = l
-    acc_ref[0, 0, 0] = acc
+    q = q_ref[0, 0]                                        # (g_pad, d_pad)
+    k, v = load_kv_block(kv_refs, ppb, d, d_pad)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+    s = s / math.sqrt(d)                                   # (g_pad, ppb*page)
+    kv_pos = (pi * ppb * page_size
+              + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1))
+    accumulate_block(s, kv_pos <= pos_ref[bi], v, m_scr, l_scr, acc_scr)
+
+    @pl.when(pi == nb - 1)
+    def _emit():
+        emit_output(o_ref, l_scr, acc_scr)
 
 
 def paged_decode_attention_pallas(q, k_pages, v_pages, block_table,
-                                  positions, *, interpret: bool = False):
+                                  positions, *, pages_per_block: int = 1,
+                                  interpret: bool = False):
     """q: (b, hq, d); k_pages/v_pages: (P, page, hkv, d) physical arena
     for ONE layer; block_table: (b, max_pages) int32 physical page ids
     (entries past the sequence may be any valid slot, e.g. the null
-    page); positions: (b,) inclusive newest token index.  Returns the
-    per-page partials (m, l, acc) for `combine_pages`.
-    """
+    page); positions: (b,) inclusive newest token index.  Returns
+    (b, hq, d) directly — no per-page partials touch HBM."""
     b, hq, d = q.shape
     page = k_pages.shape[1]
     hkv = k_pages.shape[2]
     group = hq // hkv
-    max_pages = block_table.shape[1]
+    mp = block_table.shape[1]
+    ppb = max(1, min(pages_per_block, mp))
+    bt, nb = _pad_block_table(block_table, ppb)
 
+    g_pad = _round_up(max(group, SUBLANE), SUBLANE)
+    d_pad = _round_up(d, LANE)
     qg = q.reshape(b, hkv, group, d)
+    if (g_pad, d_pad) != (group, d):
+        qg = jnp.pad(qg, ((0, 0), (0, 0),
+                          (0, g_pad - group), (0, d_pad - d)))
+
     # NOTE jax 0.4.x index-map convention: grid indices first, then the
     # scalar-prefetch refs.
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(b, hkv, max_pages),
-        in_specs=[
-            pl.BlockSpec((1, 1, group, d),
-                         lambda bi, h, pi, bt, ps: (bi, h, 0, 0)),
-            pl.BlockSpec((1, page, 1, d),
-                         lambda bi, h, pi, bt, ps: (bt[bi, pi], 0, h, 0)),
-            pl.BlockSpec((1, page, 1, d),
-                         lambda bi, h, pi, bt, ps: (bt[bi, pi], 0, h, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, 1, 1, group),
-                         lambda bi, h, pi, bt, ps: (bi, h, pi, 0)),
-            pl.BlockSpec((1, 1, 1, group),
-                         lambda bi, h, pi, bt, ps: (bi, h, pi, 0)),
-            pl.BlockSpec((1, 1, 1, group, d),
-                         lambda bi, h, pi, bt, ps: (bi, h, pi, 0, 0)),
+        grid=(b, hkv, nb),
+        in_specs=[pl.BlockSpec((1, 1, g_pad, d_pad),
+                               lambda bi, h, pi, bt, ps: (bi, h, 0, 0))]
+                 + kv_block_specs(page, d, ppb),
+        out_specs=[pl.BlockSpec((1, 1, g_pad, d_pad),
+                                lambda bi, h, pi, bt, ps: (bi, h, 0, 0))],
+        scratch_shapes=[
+            pltpu.VMEM((g_pad, 1), jnp.float32),       # running max
+            pltpu.VMEM((g_pad, 1), jnp.float32),       # running normalizer
+            pltpu.VMEM((g_pad, d_pad), jnp.float32),   # running accumulator
         ],
     )
-    m, l, acc = pl.pallas_call(
-        functools.partial(_paged_kernel, page_size=page),
+    (out,) = pl.pallas_call(
+        functools.partial(_paged_kernel, page_size=page, ppb=ppb, nb=nb,
+                          d=d, d_pad=d_pad),
         grid_spec=grid_spec,
-        out_shape=[
-            jax.ShapeDtypeStruct((b, hkv, max_pages, group), jnp.float32),
-            jax.ShapeDtypeStruct((b, hkv, max_pages, group), jnp.float32),
-            jax.ShapeDtypeStruct((b, hkv, max_pages, group, d), jnp.float32),
-        ],
+        out_shape=[jax.ShapeDtypeStruct((b, hkv, g_pad, d_pad), q.dtype)],
+        compiler_params=pltpu.TPUCompilerParams(
+            # megacore split: (b, hkv) cells are independent and spread
+            # across both TensorCores; the page walk must stay in-order
+            # (VMEM carry), hence "arbitrary".
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(block_table.astype(jnp.int32), positions.astype(jnp.int32),
-      qg, k_pages, v_pages)
-    return m, l, acc
+    )(bt, positions.astype(jnp.int32), qg,
+      *([k_pages] * ppb), *([v_pages] * ppb))
+    return out[:, :, :group, :d].reshape(b, hq, d)
 
 
 def combine_pages(m, l, acc, b: int, hq: int, d: int, out_dtype):
-    """Log-sum-exp merge of per-page partials -> (b, hq, d).  Reuses the
-    split-KV combine: a page is just a split whose offset came from the
-    block table."""
-    from repro.kernels.decode_attention.kernel import combine_splits
+    """Log-sum-exp merge of per-page partials -> (b, hq, d).  The fused
+    kernel no longer produces partials; this stays as the merge step of
+    the two-pass ORACLE (`ref.paged_decode_attention_split_ref`) the
+    kernel is tested against — a page is just a split whose offset came
+    from the block table."""
     hkv, mp = m.shape[1], m.shape[2]
     group = hq // hkv
     m2 = m.reshape(b * hkv, mp, group)

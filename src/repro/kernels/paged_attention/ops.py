@@ -1,4 +1,5 @@
-"""Jit'd wrapper for paged flash-decoding (interpret-mode path off-TPU)."""
+"""Jit'd wrapper for fused paged flash-decoding (interpret-mode path
+off-TPU)."""
 from __future__ import annotations
 
 from functools import partial
@@ -12,14 +13,15 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-@partial(jax.jit, static_argnames=("interpret",))
+@partial(jax.jit, static_argnames=("pages_per_block", "interpret"))
 def paged_decode_attention(q, k_pages, v_pages, block_table, positions,
-                           interpret=None):
+                           pages_per_block=1, interpret=None):
     """q: (b, hq, d); k_pages/v_pages: (P, page, hkv, d) one layer's
     arena; block_table: (b, max_pages); positions: (b,) inclusive newest
-    index.  Returns (b, hq, d)."""
+    index.  Single pass — the kernel carries the online softmax in VMEM
+    and emits (b, hq, d) directly; `pages_per_block` physical pages are
+    reduced per sequential grid cell."""
     interpret = (not _on_tpu()) if interpret is None else interpret
-    b, hq, d = q.shape
-    m, l, acc = K.paged_decode_attention_pallas(
-        q, k_pages, v_pages, block_table, positions, interpret=interpret)
-    return K.combine_pages(m, l, acc, b, hq, d, q.dtype)
+    return K.paged_decode_attention_pallas(
+        q, k_pages, v_pages, block_table, positions,
+        pages_per_block=pages_per_block, interpret=interpret)

@@ -1,10 +1,21 @@
-"""Pure-jnp oracle: masked single-token GQA attention through a block
-table into the paged arena (the XLA-gather formulation the kernel
-replaces — dynamic-slices into the single arena, no pool copy)."""
+"""Pure-jnp oracles for the fused paged-decode kernel.
+
+Two formulations, both of which the kernel must match exactly:
+
+* `paged_decode_attention_ref` — masked single-token GQA attention
+  through a block table into the paged arena: the XLA-gather
+  formulation (dynamic-slices into the single arena, no pool copy).
+* `paged_decode_attention_split_ref` — the TWO-PASS form the fused
+  kernel replaced: per-page partial softmax summaries (m, l, acc)
+  merged by `kernel.combine_pages`.  Kept as the oracle for the online
+  log-sum-exp algebra (and to keep the shared combine util honest).
+"""
 import math
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.paged_attention.kernel import combine_pages
 
 NEG_INF = -1e30
 
@@ -28,3 +39,28 @@ def paged_decode_attention_ref(q, k_pages, v_pages, block_table, positions):
     p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
     o = jnp.einsum("bhgs,bshd->bhgd", p, v)
     return o.reshape(b, hq, d)
+
+
+def paged_decode_attention_split_ref(q, k_pages, v_pages, block_table,
+                                     positions):
+    """Two-pass reference: per-page (m, l, acc) partials + the shared
+    log-sum-exp combine — exactly what the pre-fusion kernel shipped
+    through HBM, computed in plain jnp."""
+    b, hq, d = q.shape
+    page, hkv = k_pages.shape[1], k_pages.shape[2]
+    mp = block_table.shape[1]
+    g = hq // hkv
+    k = k_pages[block_table]                           # (b, mp, page, hkv, d)
+    v = v_pages[block_table]
+    qg = q.reshape(b, hkv, g, d)
+    s = jnp.einsum("bhgd,bpshd->bhpgs", qg, k).astype(jnp.float32)
+    s = s / math.sqrt(d)
+    kv_pos = (jnp.arange(mp)[:, None] * page
+              + jnp.arange(page)[None, :])             # (mp, page)
+    mask = kv_pos[None] <= positions[:, None, None]    # (b, mp, page)
+    s = jnp.where(mask[:, None, :, None, :], s, NEG_INF)
+    m = s.max(axis=-1)                                 # (b, hkv, mp, g)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(axis=-1)
+    acc = jnp.einsum("bhpgs,bpshd->bhpgd", p.astype(v.dtype), v)
+    return combine_pages(m, l, acc.astype(jnp.float32), b, hq, d, q.dtype)

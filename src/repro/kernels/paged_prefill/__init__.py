@@ -1,0 +1,1 @@
+"""Fused paged chunk-prefill attention over the UniMem arena."""

@@ -1,0 +1,137 @@
+"""Paged chunk-prefill attention — fused, TPU-tiled Pallas kernel.
+
+The batched-prefill analogue of `kernels/paged_attention`: a ragged
+(b, c) prompt chunk attends causally against everything already written
+into each row's pages (shared prefix included).  The pre-kernel
+formulation gathered a full contiguous KV copy per layer
+(`k_l[block_table] -> (b, max_pages*page, hkv, hd)`) and ran a dense
+masked softmax over it; here the chunk queries walk the
+scalar-prefetched block table directly — pages stay RESIDENT in the
+arena, and only the (b, c, hq, hd) chunk output leaves the kernel.
+
+Kernel geometry
+---------------
+* **Grid (b, kv_heads, page_blocks)** — (b, hkv) are `parallel` (the
+  megacore split across the two TensorCores); the page-block dim is
+  `arbitrary` (SEQUENTIAL), walking each row's block table in order
+  while the online-softmax carry persists in VMEM scratch.
+* **Query tile** — the whole chunk rides in one (R, d_pad) VMEM tile
+  with chunk rows packed DENSELY along sublanes: row r of the score
+  tile is chunk position r // group, query-group member r % group, and
+  R = c*group rounds up to the 8-sublane f32 tile ONCE for the whole
+  chunk (not per row — a group-2 chunk costs 2 rows per position, not
+  8); the head dim pads to `d_pad` (128 lanes).
+* **VMEM carry** — running (m, l, acc) scratch of shapes `(R, 1)`,
+  `(R, 1)`, `(R, d_pad)` f32, initialized at page-block 0; the output
+  block is written once, at the LAST block.
+* **Masking** — `start`-offset causal (kv_pos <= start[b] + chunk_row)
+  AND ragged `chunk_len` (rows past chunk_len[b] are fully masked and
+  emit exact zeros — inert bucket-tail rows are deterministic, never
+  garbage).
+* **pages_per_block** — as in the decode kernel: `ppb` physical pages
+  per sequential cell via one scalar-prefetched BlockSpec per page
+  slot; non-multiple table widths pad with the last column (masked).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.paged_attention.kernel import (
+    LANE, SUBLANE, _pad_block_table, _round_up, accumulate_block,
+    emit_output, kv_block_specs, load_kv_block, reset_carry)
+
+
+def _prefill_kernel(bt_ref, start_ref, clen_ref, q_ref, *refs,
+                    page_size: int, ppb: int, nb: int, group: int,
+                    d: int, d_pad: int):
+    kv_refs, (o_ref, m_scr, l_scr, acc_scr) = refs[:2 * ppb], refs[2 * ppb:]
+    bi = pl.program_id(0)
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        reset_carry(m_scr, l_scr, acc_scr)
+
+    q = q_ref[0, 0]                                        # (R, d_pad)
+    k, v = load_kv_block(kv_refs, ppb, d, d_pad)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+    s = s / math.sqrt(d)                                   # (R, ppb*page)
+    # the decode kernel's machine with the chunk mask: start-offset
+    # causal over absolute positions AND ragged chunk_len row validity
+    # (tail rows and the sublane-padding rows past c*group get
+    # ci >= chunk_len and end up exact zeros via the masked carry)
+    ci = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // group
+    q_pos = start_ref[bi] + ci                             # absolute position
+    kv_pos = (pi * ppb * page_size
+              + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1))
+    valid = (kv_pos <= q_pos) & (ci < clen_ref[bi])
+    accumulate_block(s, valid, v, m_scr, l_scr, acc_scr)
+
+    @pl.when(pi == nb - 1)
+    def _emit():
+        emit_output(o_ref, l_scr, acc_scr)
+
+
+def paged_prefill_attention_pallas(q, k_pages, v_pages, block_table, start,
+                                   chunk_len, *, pages_per_block: int = 1,
+                                   interpret: bool = False):
+    """q: (b, c, hq, d) chunk queries at absolute positions
+    start[i]..start[i]+c-1; k_pages/v_pages: (P, page, hkv, d) ONE
+    layer's arena (the chunk's own K/V already written); block_table:
+    (b, max_pages) int32; chunk_len: (b,) valid rows per chunk (rows
+    past it emit zeros).  Returns (b, c, hq, d) — the gathered
+    (b, max_pages*page, hkv, hd) KV copy never exists."""
+    b, c, hq, d = q.shape
+    page = k_pages.shape[1]
+    hkv = k_pages.shape[2]
+    group = hq // hkv
+    mp = block_table.shape[1]
+    ppb = max(1, min(pages_per_block, mp))
+    bt, nb = _pad_block_table(block_table, ppb)
+
+    d_pad = _round_up(d, LANE)
+    qg = jnp.moveaxis(q.reshape(b, c, hkv, group, d), 2, 1)
+    if d_pad != d:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, 0), (0, 0), (0, d_pad - d)))
+    # dense row packing: row ci*group + gi; ONE sublane round-up for
+    # the whole chunk (padding rows mask out via ci >= chunk_len)
+    rows = c * group
+    R = _round_up(rows, SUBLANE)
+    qg = qg.reshape(b, hkv, rows, d_pad)
+    if R != rows:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, R - rows), (0, 0)))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, hkv, nb),
+        in_specs=[pl.BlockSpec((1, 1, R, d_pad),
+                               lambda bi, h, pi, bt, st, cl: (bi, h, 0, 0))]
+                 + kv_block_specs(page, d, ppb),
+        out_specs=[pl.BlockSpec((1, 1, R, d_pad),
+                                lambda bi, h, pi, bt, st, cl: (bi, h, 0, 0))],
+        scratch_shapes=[
+            pltpu.VMEM((R, 1), jnp.float32),       # running max
+            pltpu.VMEM((R, 1), jnp.float32),       # running normalizer
+            pltpu.VMEM((R, d_pad), jnp.float32),   # running accumulator
+        ],
+    )
+    (out,) = pl.pallas_call(
+        functools.partial(_prefill_kernel, page_size=page, ppb=ppb, nb=nb,
+                          group=group, d=d, d_pad=d_pad),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((b, hkv, R, d_pad), q.dtype)],
+        compiler_params=pltpu.TPUCompilerParams(
+            # megacore split over (b, hkv); the page walk carries VMEM
+            # state and must stay sequential.
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(bt, start.astype(jnp.int32), chunk_len.astype(jnp.int32), qg,
+      *([k_pages] * ppb), *([v_pages] * ppb))
+    out = out[:, :, :rows, :d].reshape(b, hkv, c, group, d)
+    return jnp.moveaxis(out, 1, 2).reshape(b, c, hq, d)

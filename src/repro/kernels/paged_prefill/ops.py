@@ -1,0 +1,26 @@
+"""Jit'd wrapper for fused paged chunk-prefill attention (interpret-mode
+path off-TPU)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.paged_prefill import kernel as K
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("pages_per_block", "interpret"))
+def paged_prefill_attention(q, k_pages, v_pages, block_table, start,
+                            chunk_len, pages_per_block=1, interpret=None):
+    """q: (b, c, hq, d) chunk queries; k_pages/v_pages: (P, page, hkv, d)
+    one layer's arena; block_table: (b, max_pages); start/chunk_len: (b,)
+    chunk geometry.  Returns (b, c, hq, d); rows past chunk_len are
+    exact zeros."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return K.paged_prefill_attention_pallas(
+        q, k_pages, v_pages, block_table, start, chunk_len,
+        pages_per_block=pages_per_block, interpret=interpret)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle: causal ragged-chunk GQA attention through a block
+table into the paged arena — the XLA-gather formulation the kernel
+replaces (it materializes the (b, max_pages*page, hkv, hd) contiguous
+KV view the fused kernel exists to avoid)."""
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_prefill_attention_ref(q, k_pages, v_pages, block_table, start,
+                                chunk_len):
+    """q: (b, c, hq, d) chunk queries at absolute positions
+    start[i]..start[i]+c-1; k_pages/v_pages: (P, page, hkv, d) one
+    layer's arena; block_table: (b, max_pages) int32; chunk_len: (b,)
+    valid rows (rows past it return zeros).  Returns (b, c, hq, d)."""
+    b, c, hq, d = q.shape
+    page, hkv = k_pages.shape[1], k_pages.shape[2]
+    mp = block_table.shape[1]
+    S = mp * page
+    g = hq // hkv
+    k = k_pages[block_table].reshape(b, S, hkv, d)
+    v = v_pages[block_table].reshape(b, S, hkv, d)
+    positions = start[:, None] + jnp.arange(c)[None, :]        # (b, c)
+    qg = q.reshape(b, c, hkv, g, d)
+    s = jnp.einsum("bchgd,bshd->bhgcs", qg, k).astype(jnp.float32)
+    s = s / math.sqrt(d)
+    mask = jnp.arange(S)[None, None, :] <= positions[:, :, None]   # (b,c,S)
+    s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bhgcs,bshd->bchgd", p, v).reshape(b, c, hq, d)
+    q_valid = (jnp.arange(c)[None, :] < chunk_len[:, None])    # (b, c)
+    return jnp.where(q_valid[..., None, None], o, jnp.zeros((), o.dtype))

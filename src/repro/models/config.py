@@ -25,6 +25,7 @@ class ModelConfig:
     causal: bool = True
     attention_impl: str = "flash_xla"    # dense | flash_xla | flash_pallas
     attn_chunk: int = 1024               # KV block for online-softmax attention
+    attn_pages_per_block: int = 1        # arena pages per paged-kernel grid cell
 
     # mlp
     d_ff: int = 0

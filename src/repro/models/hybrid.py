@@ -303,7 +303,6 @@ def paged_prefill(params, cfg: ModelConfig, chunk, arena, block_table,
     x0 = x
     positions = start[:, None] + jnp.arange(c)[None, :]
     valid = jnp.arange(c)[None, :] < chunk_len[:, None]
-    mp = block_table.shape[1]
     # rows whose chunk starts the prompt run from zero state; continuing
     # rows pick up the state their previous chunk wrote back
     live = (start > 0).astype(arena["conv"].dtype)
@@ -329,10 +328,9 @@ def paged_prefill(params, cfg: ModelConfig, chunk, arena, block_table,
         q, k, v = L.attention_qkv(sp["attn"], scfg, hn, positions)
         k_g = T._paged_write(k_g, k, block_table, start, valid)
         v_g = T._paged_write(v_g, v, block_table, start, valid)
-        page = k_g.shape[1]
-        k_view = k_g[block_table].reshape(b, mp * page, *k_g.shape[2:])
-        v_view = v_g[block_table].reshape(b, mp * page, *v_g.shape[2:])
-        o = L.chunk_attention_over_pages(q, k_view, v_view, positions)
+        # block-table walk inside the kernel — no gathered page copy
+        o = L.run_paged_prefill_attention(scfg, q, k_g, v_g, block_table,
+                                          start, chunk_len)
         cat = cat + o @ sp["attn"]["wo"]
         h2 = L.rmsnorm_apply(sp["ln2"], cat, cfg.norm_eps)
         cat = cat + L.mlp_apply(sp["mlp"], scfg, h2)

@@ -179,12 +179,15 @@ def run_paged_decode_attention(cfg: ModelConfig, q, k_pages, v_pages,
     q: (b, hq, d); k_pages/v_pages: (P, page, hkv, d) ONE layer's
     physical page arena; block_table: (b, max_pages) page-table rows;
     positions: (b,) inclusive newest index.  flash_pallas routes to the
-    Pallas block-table kernel (resident pages, travelling query); other
+    fused single-pass Pallas block-table kernel (resident pages,
+    travelling query, VMEM online-softmax carry —
+    `cfg.attn_pages_per_block` pages per sequential grid cell); other
     impls use the XLA gather oracle.  Returns (b, hq*d)."""
     b, hq, d = q.shape
     if cfg.attention_impl == "flash_pallas":
         from repro.kernels.paged_attention.ops import paged_decode_attention
-        o = paged_decode_attention(q, k_pages, v_pages, block_table, positions)
+        o = paged_decode_attention(q, k_pages, v_pages, block_table, positions,
+                                   pages_per_block=cfg.attn_pages_per_block)
     else:
         from repro.kernels.paged_attention.ref import paged_decode_attention_ref
         o = paged_decode_attention_ref(q, k_pages, v_pages, block_table,
@@ -192,24 +195,28 @@ def run_paged_decode_attention(cfg: ModelConfig, q, k_pages, v_pages,
     return o.reshape(b, hq * d)
 
 
-def chunk_attention_over_pages(q, k_view, v_view, positions):
-    """Causal attention of a prefill chunk against a gathered page view.
+def run_paged_prefill_attention(cfg: ModelConfig, q, k_pages, v_pages,
+                                block_table, start, chunk_len):
+    """Config-dispatched causal chunk-prefill attention over the arena.
 
-    q: (b, c, hq, d) chunk queries; k_view/v_view: (b, S, hkv, d) the
-    sequence's pages gathered contiguous (prefix + just-written chunk);
-    positions: (b, c) absolute position of each query token.  Returns
-    (b, c, hq*d).  Dense per-chunk — chunks are small; the quadratic
-    term is c*S, not prompt^2."""
+    q: (b, c, hq, d) chunk queries at absolute positions
+    start[i]..start[i]+c-1; k_pages/v_pages: (P, page, hkv, d) ONE
+    layer's arena (the chunk's own K/V already written); chunk_len: (b,)
+    ragged valid rows (rows past it come back as zeros).  flash_pallas
+    walks the block table inside the fused Pallas kernel — the
+    (b, max_pages*page, hkv, hd) gathered KV copy of the old
+    formulation never exists; other impls use the XLA gather oracle.
+    Returns (b, c, hq*d).  Per-chunk cost is c*S, not prompt^2."""
     b, c, hq, d = q.shape
-    S, hkv = k_view.shape[1], k_view.shape[2]
-    g = hq // hkv
-    qg = q.reshape(b, c, hkv, g, d)
-    s = jnp.einsum("bchgd,bshd->bhgcs", qg, k_view).astype(jnp.float32)
-    s = s / math.sqrt(d)
-    mask = jnp.arange(S)[None, None, :] <= positions[:, :, None]   # (b,c,S)
-    s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1).astype(v_view.dtype)
-    o = jnp.einsum("bhgcs,bshd->bchgd", p, v_view)
+    if cfg.attention_impl == "flash_pallas":
+        from repro.kernels.paged_prefill.ops import paged_prefill_attention
+        o = paged_prefill_attention(q, k_pages, v_pages, block_table,
+                                    start, chunk_len,
+                                    pages_per_block=cfg.attn_pages_per_block)
+    else:
+        from repro.kernels.paged_prefill.ref import paged_prefill_attention_ref
+        o = paged_prefill_attention_ref(q, k_pages, v_pages, block_table,
+                                        start, chunk_len)
     return o.reshape(b, c, hq * d)
 
 

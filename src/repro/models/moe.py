@@ -464,10 +464,12 @@ def decode_step(params, cfg: ModelConfig, cache, tokens):
 # ------------------------------------------------- paged serving (UniMem)
 #
 # Same page arena as the dense transformer (the attention geometry is
-# identical); the MoE block runs INSIDE the paged dataplane — per decode
-# step every row's token vector is routed and dispatched through the
-# expert stack (grouped_matmul under moe_dispatch="grouped"), i.e. the
-# paper's vector-unit sparsity on the serving path.
+# identical, including the fused paged decode/prefill kernels under
+# attention_impl="flash_pallas"); the MoE block runs INSIDE the paged
+# dataplane — per decode step every row's token vector is routed and
+# dispatched through the expert stack (grouped_matmul under
+# moe_dispatch="grouped"), i.e. the paper's vector-unit sparsity on the
+# serving path.
 
 init_paged_cache = T.init_paged_cache
 paged_cache_axes = T.paged_cache_axes

@@ -292,7 +292,6 @@ def paged_prefill_embeds(params, cfg: ModelConfig, x, arena, block_table,
     b, c, _ = x.shape
     positions = start[:, None] + jnp.arange(c)[None, :]
     valid = jnp.arange(c)[None, :] < chunk_len[:, None]        # (b, c)
-    mp = block_table.shape[1]
 
     def body(h, xs):
         p, k_l, v_l = xs
@@ -300,10 +299,10 @@ def paged_prefill_embeds(params, cfg: ModelConfig, x, arena, block_table,
         q, k, v = L.attention_qkv(p["attn"], cfg, hn, positions)
         k_l = _paged_write(k_l, k, block_table, start, valid)
         v_l = _paged_write(v_l, v, block_table, start, valid)
-        page = k_l.shape[1]
-        k_view = k_l[block_table].reshape(b, mp * page, *k_l.shape[2:])
-        v_view = v_l[block_table].reshape(b, mp * page, *v_l.shape[2:])
-        o = L.chunk_attention_over_pages(q, k_view, v_view, positions)
+        # chunk queries attend through the block table IN PLACE — no
+        # contiguous (b, max_pages*page, hkv, hd) copy of the pages
+        o = L.run_paged_prefill_attention(cfg, q, k_l, v_l, block_table,
+                                          start, chunk_len)
         h = h + o @ p["attn"]["wo"]
         hn = L.rmsnorm_apply(p["ln2"], h, cfg.norm_eps)
         h = h + ffn_fn(p, cfg, hn, valid)

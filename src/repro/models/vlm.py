@@ -80,7 +80,9 @@ decode_step = T.decode_step     # params tree is a transformer superset
 # are multimodal: each (b, c) chunk carries tokens AND a patch-embedding
 # plane; virtual positions < num_patches take the projected patch row,
 # the rest take the token embedding — patch chunks feed the same paged
-# text cache.
+# text cache.  Attention rides `transformer.paged_prefill_embeds`, so
+# patch chunks too walk the block table inside the fused paged-prefill
+# kernel (no gathered KV copy) under attention_impl="flash_pallas".
 init_paged_cache = T.init_paged_cache
 paged_cache_axes = T.paged_cache_axes
 paged_decode_step = T.paged_decode_step

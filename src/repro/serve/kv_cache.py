@@ -19,7 +19,9 @@ Two layouts:
   past-the-end block-table entries point at it, so fused steps over a
   ragged batch scatter/gather harmlessly.  `core/unimem.py` is the
   host-side allocator; this module owns the device arrays; the
-  family's paged hooks + `kernels/paged_attention` are the dataplane.
+  family's paged hooks + the fused single-pass kernels under
+  `kernels/paged_attention` (decode) and `kernels/paged_prefill`
+  (ragged chunk prefill) are the dataplane.
 
 Tests assert paged decode attention == contiguous decode attention.
 """
@@ -198,7 +200,8 @@ def paged_decode_attention(q, k_arena, v_arena, block_table, positions, layer):
     the newest token (inclusive).  Returns (b, hq*hd).
 
     Thin multi-layer-arena wrapper over the `kernels/paged_attention`
-    oracle (the Pallas kernel's ops path is what serving jits): the
+    oracle (serving jits the FUSED single-pass Pallas kernel through
+    the ops path instead; this is the test/tool entry point): the
     gather keeps pages in place (near-memory: pages are the resident
     DRAM arrays; the query is what travels) — XLA lowers the page gather
     to dynamic-slices into the single arena, never copying the pool.

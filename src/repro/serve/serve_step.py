@@ -107,3 +107,57 @@ def make_paged_serve_fns(cfg: ModelConfig, *, temperature: float = 0.0):
 def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
     fam = registry.get_family(cfg)
     return fam.init_cache(cfg, batch, max_seq)
+
+
+# one probe geometry shared by the HLO-structure tests and the
+# serve_throughput --json gate (prefill_chunk != max_pages keeps the
+# query tile shape from colliding with the decode-partials shape)
+HLO_PROBE_GEOM = dict(max_batch=2, max_seq=64, page_size=8, prefill_chunk=4)
+
+
+def bulk_attn_shapes(cfg: ModelConfig, *, max_batch: int, max_seq: int,
+                     page_size: int, **_ignored) -> list[str]:
+    """HLO result-type strings of the bulk attention buffers the fused
+    paged kernels must never materialize: the gathered contiguous KV
+    copy (its (b, mp, page, hkv, hd) gather form and the flat
+    (b, mp*page, hkv, hd) bitcast view) and the (b, hkv, mp, group, hd)
+    f32 per-page decode partials of the pre-fusion two-pass kernel."""
+    mp = max_seq // page_size
+    hkv, g, hd = cfg.num_kv_heads, cfg.group_size, cfg.head_dim
+    return [f"f32[{max_batch},{mp},{page_size},{hkv},{hd}]",
+            f"f32[{max_batch},{max_seq},{hkv},{hd}]",
+            f"f32[{max_batch},{hkv},{mp},{g},{hd}]"]
+
+
+def lowered_paged_hlo(cfg: ModelConfig, which: str = "decode", *,
+                      max_batch: int = 2, max_seq: int = 64,
+                      page_size: int = 8, prefill_chunk: int = 8,
+                      params=None) -> str:
+    """Compile the jitted paged serving step (`which` in {"decode",
+    "prefill"}) on the current backend and return the optimized HLO
+    text, for shape-structure analysis via `launch/hlo_analysis`.
+
+    The fused-kernel acceptance checks and `benchmarks/serve_throughput
+    --json` grep this text: the single-pass kernels must not write the
+    (b, hkv, max_pages, group, hd) f32 decode partials nor materialize
+    the (b, max_pages*page, hkv, hd) gathered prefill KV copy."""
+    fam = registry.get_family(cfg)
+    if params is None:
+        params = fam.init(jax.random.key(0), cfg)
+    num_pages = max_batch * max_seq // page_size
+    arena = fam.init_paged_cache(cfg, num_pages + 1, page_size, max_batch)
+    bt = jnp.zeros((max_batch, max_seq // page_size), jnp.int32)
+    zeros_b = jnp.zeros((max_batch,), jnp.int32)
+    prefill_fn, decode_fn = make_paged_serve_fns(cfg)
+    if which == "decode":
+        lowered = decode_fn.lower(params, arena, bt, zeros_b, zeros_b,
+                                  jax.random.key(0))
+    elif which == "prefill":
+        chunk = {"tokens": jnp.zeros((max_batch, prefill_chunk), jnp.int32)}
+        if cfg.frontend == "patch":
+            chunk["patches"] = jnp.zeros(
+                (max_batch, prefill_chunk, cfg.frontend_dim), jnp.float32)
+        lowered = prefill_fn.lower(params, chunk, arena, bt, zeros_b, zeros_b)
+    else:
+        raise ValueError(which)
+    return lowered.compile().as_text()

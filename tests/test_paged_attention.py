@@ -1,8 +1,12 @@
-"""Paged-native serving: the Pallas block-table flash-decoding kernel
-against its oracles, and the engine's UniMem behaviours — lazy
+"""Paged-native serving: the fused Pallas block-table kernels (decode +
+chunk prefill) against their oracles across tile and non-tile
+geometries, HLO structure of the jitted steps (no bulk attention
+buffers through HBM), and the engine's UniMem behaviours — lazy
 allocation, prefix sharing, copy-on-write forks, OOM backpressure, and
 tokens-in-flight memory scaling."""
 from __future__ import annotations
+
+import re
 
 import numpy as np
 import pytest
@@ -11,11 +15,17 @@ import jax.numpy as jnp
 
 from repro.core.unimem import UniMemPool, SequencePageTable, UniMemOOM
 from repro.models import registry
+from repro.models import layers as L
 from repro.kernels.paged_attention.ops import paged_decode_attention
-from repro.kernels.paged_attention.ref import paged_decode_attention_ref
+from repro.kernels.paged_attention.ref import (
+    paged_decode_attention_ref, paged_decode_attention_split_ref)
+from repro.kernels.paged_prefill.ops import paged_prefill_attention
+from repro.kernels.paged_prefill.ref import paged_prefill_attention_ref
 from repro.kernels.decode_attention.ref import decode_attention_ref
 from repro.serve import ServingEngine, Request
 from repro.serve.kv_cache import PagedKVArena
+from repro.serve.serve_step import (HLO_PROBE_GEOM, bulk_attn_shapes,
+                                    lowered_paged_hlo)
 
 from conftest import TINY
 
@@ -63,6 +73,147 @@ def test_paged_kernel_ignores_null_page_tail():
                                 interpret=True)
     np.testing.assert_allclose(np.asarray(a[1]), np.asarray(b_[1]),
                                rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------- fused kernels: geometry matrix
+#
+# Non-tile geometries the TPU tiling pass must pad around: GQA groups
+# below the 8-sublane tile, head dims off the 128-lane tile (both
+# smaller and larger), multi-page grid cells (pages_per_block > 1,
+# including widths that do not divide the block table), and ragged
+# prefill chunk tails.  All interpret-mode vs the jnp refs.
+
+GEOMETRIES = [
+    # (hq, hkv, hd, page, mp, ppb)
+    (4, 2, 16, 8, 4, 1),     # group 2 < 8 sublanes, hd 16 < 128 lanes
+    (4, 4, 16, 8, 4, 2),     # group 1, two pages per grid cell
+    (8, 2, 64, 4, 5, 2),     # ppb does not divide max_pages (padded tail)
+    (16, 2, 160, 8, 3, 3),   # hd > 128 and not a lane multiple
+    (8, 8, 128, 8, 2, 2),    # exact-tile MXU geometry (no padding path)
+]
+
+
+def _geom_setup(rng, b, hd, page, mp, hkv):
+    P = b * mp + 1
+    k_pages = jnp.asarray(rng.standard_normal((P, page, hkv, hd)), jnp.float32)
+    v_pages = jnp.asarray(rng.standard_normal((P, page, hkv, hd)), jnp.float32)
+    bt = jnp.asarray(rng.permutation(P - 1)[:b * mp].reshape(b, mp), jnp.int32)
+    return k_pages, v_pages, bt
+
+
+@pytest.mark.parametrize("hq,hkv,hd,page,mp,ppb", GEOMETRIES)
+def test_fused_decode_kernel_geometries(hq, hkv, hd, page, mp, ppb):
+    rng = np.random.default_rng(hq * 1000 + hd)
+    b = 3
+    k_pages, v_pages, bt = _geom_setup(rng, b, hd, page, mp, hkv)
+    pos = jnp.asarray(rng.integers(0, mp * page, b), jnp.int32)
+    q = jnp.asarray(rng.standard_normal((b, hq, hd)), jnp.float32)
+    got = paged_decode_attention(q, k_pages, v_pages, bt, pos,
+                                 pages_per_block=ppb, interpret=True)
+    want = paged_decode_attention_ref(q, k_pages, v_pages, bt, pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    # the two-pass split oracle (per-page partials + shared combine)
+    # must agree too — it checks the online log-sum-exp algebra
+    split = paged_decode_attention_split_ref(q, k_pages, v_pages, bt, pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(split),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("hq,hkv,hd,page,mp,ppb", GEOMETRIES)
+def test_fused_prefill_kernel_geometries(hq, hkv, hd, page, mp, ppb):
+    rng = np.random.default_rng(hq * 1000 + hd + 1)
+    b, c = 3, 8
+    k_pages, v_pages, bt = _geom_setup(rng, b, hd, page, mp, hkv)
+    start = jnp.asarray(rng.integers(0, mp * page - c, b), jnp.int32)
+    # ragged tails: one inert row (0), one partial, one full-width
+    clen = jnp.asarray([0, int(rng.integers(1, c)), c], jnp.int32)
+    q = jnp.asarray(rng.standard_normal((b, c, hq, hd)), jnp.float32)
+    got = paged_prefill_attention(q, k_pages, v_pages, bt, start, clen,
+                                  pages_per_block=ppb, interpret=True)
+    want = paged_prefill_attention_ref(q, k_pages, v_pages, bt, start, clen)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    # ragged tail rows are exact zeros, not garbage
+    assert np.all(np.asarray(got[0]) == 0.0)                 # clen 0
+    assert np.all(np.asarray(got[1, int(clen[1]):]) == 0.0)  # partial tail
+
+
+def test_fused_prefill_matches_dense_attention_oracle():
+    """A chunk at offset `start` into a contiguously-mapped single
+    sequence equals dense causal attention with a query offset — the
+    start-offset causal mask is exactly the chunked-prefill geometry."""
+    rng = np.random.default_rng(5)
+    hq, hkv, hd, page, mp, c = 4, 2, 16, 8, 4, 8
+    S = mp * page
+    k_full = jnp.asarray(rng.standard_normal((1, S, hkv, hd)), jnp.float32)
+    v_full = jnp.asarray(rng.standard_normal((1, S, hkv, hd)), jnp.float32)
+    # identity block table: page i of the arena == logical page i
+    k_pages = k_full.reshape(mp, page, hkv, hd)
+    v_pages = v_full.reshape(mp, page, hkv, hd)
+    bt = jnp.arange(mp, dtype=jnp.int32)[None, :]
+    for start in (0, 11, S - c):
+        q = jnp.asarray(rng.standard_normal((1, c, hq, hd)), jnp.float32)
+        got = paged_prefill_attention(q, k_pages, v_pages, bt,
+                                      jnp.asarray([start], jnp.int32),
+                                      jnp.asarray([c], jnp.int32),
+                                      interpret=True)
+        want = L.dense_attention(q, k_full[:, :start + c],
+                                 v_full[:, :start + c],
+                                 causal=True, q_offset=start)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# -------------------------------------------- HLO structure (hot path)
+#
+# The whole point of the fused kernels: the jitted serving steps must
+# not ship bulk attention intermediates through HBM.  Compiled-HLO
+# shape analysis (launch/hlo_analysis conventions) over the actual
+# jitted closures serving uses.
+
+_HLO_GEOM = HLO_PROBE_GEOM
+
+
+def _hlo_patterns(cfg):
+    """(partials, gathered) regexes from the SHARED shape list the
+    serve_throughput --json gate also sums bytes over: gather form +
+    flat bitcast view of the contiguous KV copy, and the two-pass
+    decode partials."""
+    gather_form, flat_form, partials = (
+        re.escape(s) for s in bulk_attn_shapes(cfg, **_HLO_GEOM))
+    return partials, f"(?:{gather_form}|{flat_form})"
+
+
+def test_jitted_paged_decode_step_ships_no_bulk_attention_buffers():
+    """The fused decode step writes neither the per-page f32 partials
+    (b, hkv, max_pages, group, hd) nor a gathered contiguous KV copy —
+    only the (8, 128)-padded output tile leaves the kernel."""
+    cfg = TINY["dense"].replace(attention_impl="flash_pallas")
+    partials, gathered = _hlo_patterns(cfg)
+    text = lowered_paged_hlo(cfg, "decode", **_HLO_GEOM)
+    assert not re.search(partials, text)
+    assert not re.search(gathered, text)
+    # non-vacuity: the kernel's padded (g_pad, d_pad) output tile IS here
+    assert re.search(rf"f32\[2,{cfg.num_kv_heads},8,128\]", text)
+    # ... and the ORACLE formulation of the same step does gather
+    oracle = lowered_paged_hlo(TINY["dense"], "decode", **_HLO_GEOM)
+    assert re.search(_hlo_patterns(TINY["dense"])[1], oracle)
+
+
+def test_jitted_paged_prefill_materializes_no_gathered_kv():
+    """Batched prefill walks the block table inside the kernel: the
+    per-layer k_l[block_table] -> (b, max_pages*page, hkv, hd) copy of
+    the pre-kernel formulation must not exist in the compiled step.
+    (prefill_chunk=4 != max_pages=8 keeps the query tile shape from
+    colliding with the partials pattern.)"""
+    cfg = TINY["dense"].replace(attention_impl="flash_pallas")
+    partials, gathered = _hlo_patterns(cfg)
+    text = lowered_paged_hlo(cfg, "prefill", **_HLO_GEOM)
+    assert not re.search(gathered, text)
+    assert not re.search(partials, text)
+    oracle = lowered_paged_hlo(TINY["dense"], "prefill", **_HLO_GEOM)
+    assert re.search(_hlo_patterns(TINY["dense"])[1], oracle)
 
 
 # ----------------------------------------------------- engine: paged-native
@@ -259,6 +410,51 @@ def test_paged_engine_with_pallas_kernel_matches_default():
     _, kernel = _run_engine(cfg_k, params, reqs, max_batch=1, max_seq=32,
                             page_size=8, layout="paged")
     assert oracle == kernel
+
+
+@pytest.mark.parametrize("family", ["dense", "moe", "hybrid", "vlm"])
+def test_fused_kernels_serve_every_family_with_multi_page_blocks(family):
+    """End-to-end across the zoo: BOTH fused kernels (decode + chunked
+    prefill) with pages_per_block=2 emit the same greedy tokens as the
+    XLA oracle path — prefill chunk 8 makes ragged tails cross page,
+    bucket and patch/text boundaries."""
+    cfg = TINY[family]
+    params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+    rng = np.random.default_rng(sum(map(ord, family)))
+    reqs = []
+    for i in range(2):
+        pe = (rng.standard_normal((cfg.num_patches, cfg.frontend_dim))
+              .astype(np.float32) if cfg.frontend == "patch" else None)
+        reqs.append(dict(uid=i, max_new_tokens=3, patch_embeds=pe,
+                         prompt=rng.integers(0, cfg.vocab_size, 7 + 9 * i)
+                         .astype(np.int32)))
+
+    def run(c):
+        eng = ServingEngine(c, params, max_batch=2, max_seq=64, page_size=8,
+                            layout="paged", prefill_chunk=8)
+        for r in reqs:
+            eng.submit(Request(**r))
+        return {r.uid: tuple(r.tokens) for r in eng.run()}
+
+    fused = run(cfg.replace(attention_impl="flash_pallas",
+                            attn_pages_per_block=2))
+    assert fused == run(cfg)
+
+
+def test_fused_prefill_ragged_tails_at_bucket_boundaries():
+    """Prompt lengths straddling the bucket widths (7/8/9 with chunk 8)
+    force ragged chunk tails exactly at bucket boundaries; the fused
+    path must match the contiguous oracle token-for-token."""
+    cfg = TINY["dense"].replace(attention_impl="flash_pallas")
+    params = _params(cfg)
+    reqs = [Request(uid=i, prompt=(np.arange(n, dtype=np.int32) * 5)
+                    % cfg.vocab_size, max_new_tokens=4)
+            for i, n in enumerate([7, 8, 9])]
+    _, fused = _run_engine(cfg, params, reqs, max_batch=3, max_seq=64,
+                           page_size=8, prefill_chunk=8, layout="paged")
+    _, contig = _run_engine(cfg, params, reqs, max_batch=3, max_seq=64,
+                            layout="contiguous")
+    assert fused == contig
 
 
 # ------------------------------------------- allocator lifecycle walks
