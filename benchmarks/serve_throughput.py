@@ -15,15 +15,19 @@ this container is not the serving hardware).
 `--impl flash_pallas --ppb N` reruns the paged side through the FUSED
 single-pass kernels (`kernels/paged_attention` + `kernels/paged_prefill`,
 interpret mode off-TPU) with N pages per grid cell — the CI smoke for
-the TPU-tiled hot path.  `--json PATH` additionally writes a
-machine-readable `BENCH_serve.json` (tokens/s, peak KV bytes, and the
-compiled-HLO attention traffic of the jitted steps before/after the
-kernel fusion: the oracle formulation's gathered-KV/partials bytes vs
-the fused kernels' zero).
+the TPU-tiled hot path.  `--shards N` serves the paged side from the
+NEAR-MEMORY SHARDED arena (`serve/sharded/`) on an N-device "mem" mesh
+(CI forces host devices via XLA_FLAGS) — same token-parity and KV
+gates, plus per-shard page high-water in the report.  `--json PATH`
+additionally writes a machine-readable `BENCH_serve.json`
+(`"schema": 2` — tokens/s, peak KV bytes, shard topology + per-shard
+KV high-water, and the compiled-HLO attention traffic of the jitted
+steps before/after the kernel fusion: the oracle formulation's
+gathered-KV/partials bytes vs the fused kernels' zero).
 
     PYTHONPATH=src python benchmarks/serve_throughput.py \
         [--family dense,moe,hybrid,vlm] [--impl flash_pallas] [--ppb 2] \
-        [--json BENCH_serve.json]
+        [--shards 8] [--json BENCH_serve.json]
 """
 from __future__ import annotations
 
@@ -38,6 +42,10 @@ import jax
 from repro.models.config import ModelConfig
 from repro.models import registry
 from repro.serve import ServingEngine, Request
+
+# machine-readable result schema, versioned so trajectory tooling can
+# evolve: 2 added shard topology + per-shard KV high-water
+SCHEMA = 2
 
 CFG = ModelConfig(
     name="bench-dense", family="dense", num_layers=2, d_model=64,
@@ -88,9 +96,10 @@ def _stream(rng, cfg, n, prompt_hi, max_new):
     return reqs
 
 
-def _run(cfg, params, layout, reqs, mb, ms):
+def _run(cfg, params, layout, reqs, mb, ms, mesh=None):
     eng = ServingEngine(cfg, params, max_batch=mb, max_seq=ms,
-                        page_size=16, layout=layout)
+                        page_size=16, layout=layout,
+                        mesh=mesh if layout == "paged" else None)
     for r in reqs:
         eng.submit(Request(uid=r.uid, prompt=r.prompt,
                            max_new_tokens=r.max_new_tokens,
@@ -99,21 +108,26 @@ def _run(cfg, params, layout, reqs, mb, ms):
     results = eng.run()
     dt = time.perf_counter() - t0
     toks = {r.uid: tuple(r.tokens) for r in results}
-    return dict(tok_s=sum(len(t) for t in toks.values()) / dt,
-                peak_kv_bytes=eng.peak_kv_bytes(), tokens=toks,
-                shared=eng.pool.stats().shared_pages,
-                prefill_shapes=len(eng.prefill_shapes))
+    out = dict(tok_s=sum(len(t) for t in toks.values()) / dt,
+               peak_kv_bytes=eng.peak_kv_bytes(), tokens=toks,
+               shared=eng.pool.stats().shared_pages,
+               prefill_shapes=len(eng.prefill_shapes))
+    if eng.mesh is not None:
+        out["per_shard_peak_pages"] = [
+            s["peak_allocated_pages"] for s in eng.pool.shard_stats()]
+        out["per_shard_kv_bytes"] = eng.arena.shard_kv_bytes()
+    return out
 
 
-def _row(cfg, params, reqs, mb, ms, oracle_cfg=None):
-    """paged side runs `cfg` (possibly --impl/--ppb overridden); the
-    contiguous reference stays on `oracle_cfg` (the default XLA impl),
-    so the parity gate is fused-kernels-vs-oracle, never
-    fused-vs-fused."""
+def _row(cfg, params, reqs, mb, ms, oracle_cfg=None, mesh=None):
+    """paged side runs `cfg` (possibly --impl/--ppb/--shards overridden);
+    the contiguous reference stays on `oracle_cfg` (the default XLA
+    impl, single device), so the parity gate is
+    fused-kernels/sharded-arena-vs-oracle, never fused-vs-fused."""
     contig = _run(oracle_cfg or cfg, params, "contiguous", reqs, mb, ms)
-    paged = _run(cfg, params, "paged", reqs, mb, ms)
+    paged = _run(cfg, params, "paged", reqs, mb, ms, mesh=mesh)
     same = contig["tokens"] == paged["tokens"]
-    return dict(
+    row = dict(
         family=cfg.family, batch=mb, max_seq=ms, requests=len(reqs),
         contig_tok_s=contig["tok_s"], paged_tok_s=paged["tok_s"],
         contig_kv_mb=contig["peak_kv_bytes"] / 1e6,
@@ -123,6 +137,10 @@ def _row(cfg, params, reqs, mb, ms, oracle_cfg=None):
         tokens_match=same,
         ok=same and paged["peak_kv_bytes"] <= contig["peak_kv_bytes"],
     )
+    for k in ("per_shard_peak_pages", "per_shard_kv_bytes"):
+        if k in paged:
+            row[k] = paged[k]
+    return row
 
 
 def _attention_hlo_stats(cfg) -> dict:
@@ -158,8 +176,18 @@ def _attention_hlo_stats(cfg) -> dict:
     return out
 
 
-def run(families=None, impl=None, ppb=1, attn_hlo=False) -> dict:
+def run(families=None, impl=None, ppb=1, attn_hlo=False,
+        shards: int = 1) -> dict:
     families = families or list(FAMILY_CFGS)
+    mesh = None
+    if shards > 1:
+        from repro.launch.mesh import make_mem_mesh
+        if jax.device_count() < shards:
+            raise SystemExit(
+                f"--shards {shards} needs {shards} devices, have "
+                f"{jax.device_count()} (set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={shards})")
+        mesh = make_mem_mesh(shards)
 
     def cfg_of(fam):
         cfg = FAMILY_CFGS[fam]
@@ -175,7 +203,7 @@ def run(families=None, impl=None, ppb=1, attn_hlo=False) -> dict:
         for mb, ms, n, phi, mnew in SWEEP:
             rng = np.random.default_rng(hash((mb, ms)) % 2**32)
             r = _row(cfg, params, _stream(rng, cfg, n, phi, mnew), mb, ms,
-                     oracle_cfg=FAMILY_CFGS["dense"])
+                     oracle_cfg=FAMILY_CFGS["dense"], mesh=mesh)
             ok &= r["ok"]
             rows.append(r)
     # family sweep: the rest of the zoo paged-native at one tiny point
@@ -189,12 +217,18 @@ def run(families=None, impl=None, ppb=1, attn_hlo=False) -> dict:
         rng = np.random.default_rng(1000 + sum(map(ord, fam)))
         p = FAM_POINT
         r = _row(cfg, params, _stream(rng, cfg, p["n"], p["phi"], p["mnew"]),
-                 p["mb"], p["ms"], oracle_cfg=FAMILY_CFGS[fam])
+                 p["mb"], p["ms"], oracle_cfg=FAMILY_CFGS[fam], mesh=mesh)
         ok &= r["ok"]
         rows.append(r)
-    result = {"name": "serve_throughput", "ok": ok, "rows": rows,
+    result = {"name": "serve_throughput", "schema": SCHEMA, "ok": ok,
+              "rows": rows,
               "attention_impl": impl or CFG.attention_impl,
-              "pages_per_block": ppb}
+              "pages_per_block": ppb,
+              "shard_topology": {"shards": shards,
+                                 "mesh_axis": "mem" if mesh is not None
+                                 else None,
+                                 "devices": jax.device_count(),
+                                 "backend": jax.default_backend()}}
     if attn_hlo:
         result["attention_hlo"] = _attention_hlo_stats(FAMILY_CFGS["dense"])
         # the fused steps must ship ZERO bulk attention bytes
@@ -209,18 +243,24 @@ def run(families=None, impl=None, ppb=1, attn_hlo=False) -> dict:
 def pretty(result: dict):
     print("== Serving: contiguous slots vs UniMem paged arena "
           "(--family sweep: dense,moe,hybrid,vlm) ==")
+    topo = result["shard_topology"]
     print(f"   attention_impl={result['attention_impl']} "
-          f"pages_per_block={result['pages_per_block']}")
+          f"pages_per_block={result['pages_per_block']} "
+          f"shards={topo['shards']} ({topo['devices']} "
+          f"{topo['backend']} devices)")
     print(f"{'family':>8}{'batch':>6}{'max_seq':>8}{'reqs':>6}"
           f"{'contig tok/s':>14}{'paged tok/s':>13}{'contig KV MB':>14}"
           f"{'paged KV MB':>13}{'KV ratio':>10}  tokens")
     for r in result["rows"]:
+        shard = ""
+        if "per_shard_peak_pages" in r:
+            shard = f"  shard peaks {r['per_shard_peak_pages']}"
         print(f"{r['family']:>8}{r['batch']:>6}{r['max_seq']:>8}"
               f"{r['requests']:>6}"
               f"{r['contig_tok_s']:>14.1f}{r['paged_tok_s']:>13.1f}"
               f"{r['contig_kv_mb']:>14.3f}{r['paged_kv_mb']:>13.3f}"
               f"{r['kv_ratio']:>10.2f}  "
-              f"{'==' if r['tokens_match'] else 'DIFFER'}")
+              f"{'==' if r['tokens_match'] else 'DIFFER'}{shard}")
     h = result.get("attention_hlo")
     if h:
         print("   jitted-step attention traffic (compiled HLO, dense): "
@@ -245,22 +285,28 @@ if __name__ == "__main__":
     ap.add_argument("--ppb", type=int, default=1,
                     help="pages per paged-kernel grid cell "
                          "(attn_pages_per_block)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="serve the paged side from the near-memory "
+                         "SHARDED arena on an N-device 'mem' mesh "
+                         "(needs N devices, e.g. XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     ap.add_argument("--json", nargs="?", const="BENCH_serve.json",
                     default=None, metavar="PATH",
-                    help="write machine-readable results (tokens/s, peak "
-                         "KV bytes, attention HBM bytes before/after the "
-                         "kernel fusion) to PATH")
+                    help="write machine-readable results (schema 2: "
+                         "tokens/s, peak KV bytes, shard topology, "
+                         "attention HBM bytes before/after the kernel "
+                         "fusion) to PATH")
     args = ap.parse_args()
     fams = [f.strip() for f in args.family.split(",") if f.strip()]
     unknown = [f for f in fams if f not in FAMILY_CFGS]
     if unknown:
         raise SystemExit(f"unknown families {unknown}; "
                          f"choose from {list(FAMILY_CFGS)}")
-    res = {"name": "serve_throughput", "ok": False,
+    res = {"name": "serve_throughput", "schema": SCHEMA, "ok": False,
            "error": "run() raised before completing"}
     try:
         res = run(fams, impl=args.impl, ppb=args.ppb,
-                  attn_hlo=bool(args.json))
+                  attn_hlo=bool(args.json), shards=args.shards)
         pretty(res)
     finally:
         # write even when run() raises: the (partial) record is exactly

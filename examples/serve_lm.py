@@ -1,7 +1,7 @@
-"""Serving example: paged-native continuous batching + UniMem prefix
-sharing.
+"""Serving example (README): paged-native continuous batching + UniMem
+prefix sharing + near-memory sharded serving.
 
-    PYTHONPATH=src python examples/serve_lm.py
+    PYTHONPATH=src python examples/serve_lm.py [--devices N]
 
 Submits a bursty stream of mixed-length requests to the paged engine
 (lazy page allocation: pool memory tracks tokens in flight), prints
@@ -14,26 +14,41 @@ demonstrates the two UniMem sharing paths end-to-end on devices:
   * `engine.fork()` — branch an in-flight sequence; the child shares
     every page and the first divergent write copy-on-writes only the
     partial last page.
+
+`--devices N` (default 1) runs the same stream on an N-device "mem"
+mesh — the near-memory SHARDED arena of DESIGN.md §2: each device owns
+a bank of pages, sequences interleave their pages across all banks,
+and only softmax summaries cross the interconnect.  On a CPU-only host
+the flag forces N host devices (the XLA_FLAGS shim below), so the
+whole sharded path is demonstrable on a laptop; greedy tokens are
+byte-identical to the single-device run.
 """
 from __future__ import annotations
 
-import numpy as np
-import jax
 
-from repro.configs import get_arch
-from repro.models.config import reduced_for_smoke
-from repro.models import registry
-from repro.serve import ServingEngine, Request
+def main(devices: int = 1):
+    import numpy as np
+    import jax
 
+    from repro.configs import get_arch
+    from repro.models.config import reduced_for_smoke
+    from repro.models import registry
+    from repro.serve import ServingEngine, Request
 
-def main():
+    mesh = None
+    if devices > 1:
+        from repro.launch.mesh import make_mem_mesh
+        assert jax.device_count() >= devices, (
+            f"need {devices} devices, have {jax.device_count()}")
+        mesh = make_mem_mesh(devices)
+
     spec = get_arch("internlm2-1.8b")
     cfg = reduced_for_smoke(spec.model, max_seq=128)
     fam = registry.get_family(cfg)
     params = fam.init(jax.random.key(0), cfg)
 
     engine = ServingEngine(cfg, params, max_batch=4, max_seq=128,
-                           page_size=16)
+                           page_size=16, mesh=mesh)
     rng = np.random.default_rng(0)
     for uid in range(12):
         plen = int(rng.integers(4, 80))
@@ -44,13 +59,19 @@ def main():
     results = engine.run()
     lats = sorted(r.latency_s for r in results)
     st = engine.pool.stats()
-    print(f"[{engine.layout}] served {len(results)} requests | "
+    arena = "sharded arena" if engine.mesh is not None else "arena"
+    print(f"[{engine.layout}/{arena}] served {len(results)} requests | "
           f"p50 {lats[len(lats) // 2]:.2f}s p95 {lats[-1]:.2f}s | "
           f"{engine.tokens_out} tokens in {engine.steps} engine steps")
     print(f"pool: peak {st.peak_allocated_pages}/{st.num_pages} pages "
           f"({engine.peak_kv_bytes() / 1e6:.2f} MB KV high-water vs "
           f"{engine.max_batch * engine.max_seq // engine.page_size} pages "
           f"a contiguous layout would pin)")
+    if engine.mesh is not None:
+        shards = engine.pool.shard_stats()
+        print("near-memory banks: peak pages per shard "
+              f"{[s['peak_allocated_pages'] for s in shards]} | "
+              f"resident KV bytes per shard {engine.arena.shard_kv_bytes()}")
 
     # --- prefix sharing: same 64-token prompt, pages reused on device
     prompt = rng.integers(0, cfg.vocab_size, 64).astype(np.int32)
@@ -81,4 +102,18 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    import os
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=1,
+                    help="serve from a sharded arena on an N-device "
+                         "'mem' mesh (forces N host devices on CPU)")
+    args = ap.parse_args()
+    if args.devices > 1:
+        # host-platform shim: must land before jax initializes, which is
+        # why main() defers its imports
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.devices}")
+    main(args.devices)

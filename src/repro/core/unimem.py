@@ -46,7 +46,11 @@ class UniMemPool:
 
     # ------------------------------------------------------------- alloc
 
-    def alloc(self, n: int = 1) -> list[int]:
+    def alloc(self, n: int = 1, start: int | None = None) -> list[int]:
+        """Allocate n pages.  `start` is the LOGICAL page index the first
+        new page will serve in its sequence — ignored here, consumed by
+        the sharded pool's page→shard placement."""
+        del start
         if len(self._free) < n:
             raise UniMemOOM(
                 f"UniMem pool exhausted: want {n} pages, {len(self._free)} free "
@@ -57,6 +61,12 @@ class UniMemPool:
             self._refcount[p] = 1
         self._peak = max(self._peak, self.num_pages - len(self._free))
         return pages
+
+    def fits(self, start: int, n: int) -> bool:
+        """Would `alloc(n, start)` succeed right now?  (Admission check —
+        the sharded pool overrides this with per-shard accounting.)"""
+        del start
+        return n <= len(self._free)
 
     def share(self, pages: list[int]) -> list[int]:
         """Bump refcounts — a second sequence now references these pages
@@ -110,8 +120,119 @@ class UniMemPool:
 
 
 @dataclass
+class ShardedUniMemPool(UniMemPool):
+    """UniMem pool distributed over `num_shards` near-memory banks
+    (DESIGN.md §2): physical ids are blocked per shard (page p lives on
+    shard p // pages_per_shard) while LOGICAL placement is strided —
+    logical page j of every sequence is allocated from shard j % n, so
+    one sequence's pages interleave over all chips and both KV capacity
+    and attention bandwidth scale with the mesh.
+
+    The strided invariant is what lets each shard COMPACT its block-table
+    walk to a static width of ceil(max_pages/n) columns (the jitted step
+    never ships tables sized by data-dependent ownership).  It also makes
+    prefix sharing, co-prefill adoption and copy-on-write shard-stable:
+    a replacement or shared page always serves the same logical index,
+    hence the same shard.  Allocation raises UniMemOOM when the OWNING
+    shard is full even if others have room — that is per-bank
+    backpressure, and the engine answers it with preemption exactly as
+    for a full single pool."""
+    num_shards: int = 1
+
+    def __post_init__(self):
+        if self.num_pages % self.num_shards:
+            raise ValueError(
+                f"num_pages {self.num_pages} must divide over "
+                f"{self.num_shards} shards")
+        super().__post_init__()
+        self._shard_peak = [0] * self.num_shards
+        # incremental per-bank free counts: fits() runs every admission
+        # attempt of every tick and must not rescan the free list
+        self._free_counts = [self.pages_per_shard] * self.num_shards
+
+    @property
+    def pages_per_shard(self) -> int:
+        return self.num_pages // self.num_shards
+
+    def shard_of(self, page: int) -> int:
+        """Physical owner: blocked id layout (matches the device arena's
+        slot-axis sharding)."""
+        return page // self.pages_per_shard
+
+    def _shard_free(self) -> list[int]:
+        return list(self._free_counts)
+
+    def free(self, pages: list[int]) -> None:
+        returned = len(self._free)
+        super().free(pages)
+        for p in self._free[returned:]:       # only last-ref pages return
+            self._free_counts[self.shard_of(p)] += 1
+
+    def _demand(self, start: int | None, n: int) -> list[int]:
+        """Per-shard page demand of an alloc: strided placement from
+        logical index `start`; least-loaded spread when untracked."""
+        demand = [0] * self.num_shards
+        if start is None:               # raw callers: least-loaded spread
+            supply = self._shard_free()
+            for _ in range(n):
+                s = max(range(self.num_shards),
+                        key=lambda i: supply[i] - demand[i])
+                demand[s] += 1
+            return demand
+        for k in range(n):
+            demand[(start + k) % self.num_shards] += 1
+        return demand
+
+    def fits(self, start: int, n: int) -> bool:
+        supply = self._shard_free()
+        return all(d <= s for d, s in zip(self._demand(start, n), supply))
+
+    def alloc(self, n: int = 1, start: int | None = None) -> list[int]:
+        demand = self._demand(start, n)
+        supply = self._shard_free()
+        short = [(i, d, s) for i, (d, s) in enumerate(zip(demand, supply))
+                 if d > s]
+        if short:                       # raise BEFORE any mutation
+            i, d, s = short[0]
+            raise UniMemOOM(
+                f"UniMem shard {i} exhausted: want {d} pages, {s} free of "
+                f"{self.pages_per_shard} (pool: {len(self._free)} free of "
+                f"{self.num_pages})")
+        pages = []
+        by_shard: dict[int, list[int]] = {}
+        for idx in range(len(self._free) - 1, -1, -1):   # LIFO per shard
+            by_shard.setdefault(self.shard_of(self._free[idx]), []).append(idx)
+        if start is None:
+            order = [s for s, d in enumerate(demand) for _ in range(d)]
+        else:
+            order = [(start + k) % self.num_shards for k in range(n)]
+        for s in order:
+            pages.append(self._free[by_shard[s].pop(0)])
+        for p in pages:
+            self._free.remove(p)
+            self._refcount[p] = 1
+            s = self.shard_of(p)
+            self._free_counts[s] -= 1
+            self._shard_peak[s] = max(self._shard_peak[s],
+                                      self.pages_per_shard
+                                      - self._free_counts[s])
+        self._peak = max(self._peak, self.num_pages - len(self._free))
+        return pages
+
+    def shard_stats(self) -> list[dict]:
+        """Per-shard (free, allocated, peak) page counts."""
+        free = self._shard_free()
+        return [dict(shard=s, free_pages=free[s],
+                     allocated_pages=self.pages_per_shard - free[s],
+                     peak_allocated_pages=self._shard_peak[s])
+                for s in range(self.num_shards)]
+
+
+@dataclass
 class SequencePageTable:
-    """Per-sequence logical->physical page map, length in tokens."""
+    """Per-sequence logical->physical page map, length in tokens.
+    Allocations carry the LOGICAL index of the page they extend, so a
+    sharded pool can keep logical page j resident on shard j % n."""
     pool: UniMemPool
     pages: list[int] = field(default_factory=list)
     num_tokens: int = 0
@@ -120,7 +241,7 @@ class SequencePageTable:
         """Extend by n tokens, allocating pages as needed (copy-on-write is
         the caller's job for shared last pages)."""
         need = self.pool.pages_for(self.num_tokens + n) - len(self.pages)
-        new = self.pool.alloc(need) if need > 0 else []
+        new = self.pool.alloc(need, start=len(self.pages)) if need > 0 else []
         self.pages.extend(new)
         self.num_tokens += n
         return new
@@ -134,11 +255,12 @@ class SequencePageTable:
         """Copy-on-write: swap a SHARED last page for a private one before
         writing into it.  Returns (src, dst) physical ids so the caller
         can copy the device page, or None when the last page is already
-        exclusively owned (nothing to do)."""
+        exclusively owned (nothing to do).  The replacement serves the
+        same logical index, so it lands on the same shard."""
         if not self.pages or not self.pool.is_shared(self.pages[-1]):
             return None
         src = self.pages[-1]
-        dst = self.pool.alloc(1)[0]
+        dst = self.pool.alloc(1, start=len(self.pages) - 1)[0]
         self.pool.free([src])               # drop our ref; peers keep theirs
         self.pages[-1] = dst
         return src, dst

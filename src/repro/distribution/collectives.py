@@ -1,4 +1,5 @@
-"""Distributed-optimization collectives: gradient compression + bucketing.
+"""Distributed-optimization collectives: gradient compression + bucketing
++ the near-memory attention merge.
 
 `compressed_tree_psum` replaces XLA's automatic cross-pod gradient
 all-reduce with an int8-on-the-wire ring all-reduce (shard_map over the
@@ -8,9 +9,17 @@ cross-DCI gradient bytes 4x (bf16/f32 -> int8 + one f32 scale per tensor).
 
 `bucket_psum` groups small tensors into flat buckets before reduction —
 fewer, larger collectives (latency hiding at scale).
+
+`combine_shard_partials` is the serving-side summary merge (DESIGN.md
+§2): each chip of a `mem`-sharded page arena computes attention over its
+RESIDENT pages only and ships its online-softmax carry (m, l, acc) —
+(batch, heads(, head_dim))-sized summaries, never pages — across the
+interconnect, where the battle-tested `combine_splits` log-sum-exp
+reduction folds them into the exact global softmax.
 """
 from __future__ import annotations
 
+import math
 from functools import partial
 
 import numpy as np
@@ -19,6 +28,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.kernels.decode_attention.kernel import combine_splits
+
 
 def axis_size(axis: str) -> int:
     """Static size of a bound mesh axis (jax.lax.axis_size is >= 0.5)."""
@@ -26,6 +37,31 @@ def axis_size(axis: str) -> int:
         return jax.lax.axis_size(axis)
     frame = jax.core.axis_frame(axis)       # 0.4.x: int or frame object
     return frame if isinstance(frame, int) else frame.size
+
+
+# ------------------------------------------------- near-memory LSE merge
+
+def combine_shard_partials(m, l, acc, axis: str, out_dtype):
+    """Merge per-shard online-softmax partials across a bound mesh axis.
+
+    m, l: (..., hq) f32; acc: (..., hq, d) f32 — the partials-mode
+    output of the paged attention kernels over each shard's resident
+    pages (any number of leading batch/chunk dims).  All-gathers ONLY
+    these summary-sized tensors over `axis` (inside shard_map) and
+    reduces them with `combine_splits` — the same log-sum-exp algebra
+    the split-KV decode kernel has always used; a shard is just a split
+    whose offsets came from the page→shard mapping.  A shard with no
+    resident pages for a row contributes (m=-inf, l=0, acc=0), the
+    merge's identity.  Returns (..., hq, d) in `out_dtype`, replicated
+    across the axis."""
+    hq, d = m.shape[-1], acc.shape[-1]
+    lead = m.shape[:-1]
+    B = math.prod(lead) if lead else 1
+    mg = jax.lax.all_gather(m.reshape(B, hq), axis, axis=1)      # (B, n, hq)
+    lg = jax.lax.all_gather(l.reshape(B, hq), axis, axis=1)
+    ag = jax.lax.all_gather(acc.reshape(B, hq, d), axis, axis=1)  # (B,n,hq,d)
+    o = combine_splits(mg, lg, ag, B, hq, d, out_dtype)           # (B, hq, d)
+    return o.reshape(*lead, hq, d)
 
 
 # ------------------------------------------------------------ quantization

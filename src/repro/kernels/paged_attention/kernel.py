@@ -34,10 +34,23 @@ Kernel geometry
   pipeline) and reduces all of them in one (g_pad, ppb*page) score
   tile.  Block tables whose width is not a ppb multiple are padded with
   a repeat of the last column; the position mask zeroes the surplus.
-* **Scalar prefetch** — the block table and positions arrive via
-  `PrefetchScalarGridSpec`, so the K/V index maps themselves walk the
-  UniMem page table and the gather never materializes a contiguous
-  copy of the sequence.
+* **Scalar prefetch** — the block table, positions and per-slot page
+  position bases arrive via `PrefetchScalarGridSpec`, so the K/V index
+  maps themselves walk the UniMem page table and the gather never
+  materializes a contiguous copy of the sequence.
+* **page_positions** — each block-table slot carries the ABSOLUTE kv
+  position of its page's first token ((b, max_pages) int32, default
+  `arange(max_pages) * page`).  A sharded arena hands every chip a
+  COMPACTED table of just its resident pages with their true logical
+  positions (near-memory: the walk length scales down with the mesh);
+  slots past a table (or pages another shard owns) carry the
+  `POS_PAD` sentinel, which the position mask kills unconditionally.
+* **partials mode** — `partials=True` skips the final normalization
+  and returns the raw online-softmax carry (m, l, acc) per (b, hq)
+  instead of the output: the per-shard summary of the distributed
+  near-memory layout.  Only these (b, hq(, hd))-sized partials ever
+  cross the interconnect; `combine_splits` (or a psum-style LSE merge
+  over a mesh axis) folds them into the exact global softmax.
 
 Pages past a sequence's length may point at the arena's null slot; the
 position mask zeroes their contribution, and a fully masked block
@@ -64,23 +77,40 @@ NEG_INF = -1e30
 SUBLANE = 8      # f32 sublane tile (second-to-last dim)
 LANE = 128       # lane tile (last dim)
 
+# page-position sentinel for padded / non-resident block-table slots:
+# far past any real position (positions are int32 token indices), with
+# headroom so sentinel + page_size never overflows int32.
+POS_PAD = 2 ** 30
+
 
 def _round_up(n: int, m: int) -> int:
     return -(-n // m) * m
 
 
-def _pad_block_table(block_table, ppb: int):
-    """Pad (b, max_pages) to a pages_per_block multiple by repeating the
-    last column — surplus entries sit past every sequence's length, so
-    the position mask zeroes them regardless of which page they name."""
+def default_page_positions(block_table, page_size: int):
+    """(b, max_pages) absolute first-token position of each table slot
+    for the dense (unsharded) walk: slot i holds logical page i."""
+    b, mp = block_table.shape
+    pos = jnp.arange(mp, dtype=jnp.int32) * page_size
+    return jnp.broadcast_to(pos[None, :], (b, mp))
+
+
+def _pad_block_table(block_table, page_positions, ppb: int):
+    """Pad (b, max_pages) to a pages_per_block multiple — table entries
+    repeat the last column (a valid slot to DMA), their page positions
+    take the POS_PAD sentinel so the position mask zeroes them
+    regardless of which page they name."""
     b, mp = block_table.shape
     nb = -(-mp // ppb)
     pad = nb * ppb - mp
     bt = block_table.astype(jnp.int32)
+    ppos = page_positions.astype(jnp.int32)
     if pad:
         bt = jnp.concatenate(
             [bt, jnp.broadcast_to(bt[:, -1:], (b, pad))], axis=1)
-    return bt, nb
+        ppos = jnp.concatenate(
+            [ppos, jnp.full((b, pad), POS_PAD, jnp.int32)], axis=1)
+    return bt, ppos, nb
 
 
 # --------------------------------------------------- shared kernel parts
@@ -131,6 +161,22 @@ def emit_output(o_ref, l_scr, acc_scr):
                    jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
 
 
+def emit_partials(acc_ref, m_ref, l_ref, m_scr, l_scr, acc_scr):
+    """Write the raw carry (call at the LAST page block): the per-shard
+    online-softmax summary a later log-sum-exp merge normalizes."""
+    acc_ref[0, 0] = acc_scr[...].astype(acc_ref.dtype)
+    m_ref[0, 0] = m_scr[...]
+    l_ref[0, 0] = l_scr[...]
+
+
+def block_kv_positions(ppos_ref, bi, pi, ppb: int, page: int, rows: int):
+    """(rows, ppb*page) absolute kv position of every score column in a
+    grid cell, from the scalar-prefetched per-slot position bases."""
+    within = jax.lax.broadcasted_iota(jnp.int32, (rows, page), 1)
+    return jnp.concatenate(
+        [ppos_ref[bi, pi * ppb + j] + within for j in range(ppb)], axis=1)
+
+
 def kv_block_specs(page: int, d: int, ppb: int):
     """One K and one V BlockSpec per page slot of a grid cell, indexed
     through the scalar-prefetched block table (first prefetch ref);
@@ -142,9 +188,14 @@ def kv_block_specs(page: int, d: int, ppb: int):
     return [spec(j) for j in range(ppb)] * 2
 
 
-def _paged_kernel(bt_ref, pos_ref, q_ref, *refs,
-                  page_size: int, ppb: int, nb: int, d: int, d_pad: int):
-    kv_refs, (o_ref, m_scr, l_scr, acc_scr) = refs[:2 * ppb], refs[2 * ppb:]
+def _paged_kernel(bt_ref, pos_ref, ppos_ref, q_ref, *refs,
+                  page_size: int, ppb: int, nb: int, d: int, d_pad: int,
+                  partials: bool):
+    kv_refs, rest = refs[:2 * ppb], refs[2 * ppb:]
+    if partials:
+        acc_ref, m_ref, l_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        o_ref, m_scr, l_scr, acc_scr = rest
     bi = pl.program_id(0)
     pi = pl.program_id(2)
 
@@ -156,30 +207,41 @@ def _paged_kernel(bt_ref, pos_ref, q_ref, *refs,
     k, v = load_kv_block(kv_refs, ppb, d, d_pad)
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
     s = s / math.sqrt(d)                                   # (g_pad, ppb*page)
-    kv_pos = (pi * ppb * page_size
-              + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1))
+    kv_pos = block_kv_positions(ppos_ref, bi, pi, ppb, page_size, s.shape[0])
     accumulate_block(s, kv_pos <= pos_ref[bi], v, m_scr, l_scr, acc_scr)
 
     @pl.when(pi == nb - 1)
     def _emit():
-        emit_output(o_ref, l_scr, acc_scr)
+        if partials:
+            emit_partials(acc_ref, m_ref, l_ref, m_scr, l_scr, acc_scr)
+        else:
+            emit_output(o_ref, l_scr, acc_scr)
 
 
 def paged_decode_attention_pallas(q, k_pages, v_pages, block_table,
                                   positions, *, pages_per_block: int = 1,
+                                  page_positions=None, partials: bool = False,
                                   interpret: bool = False):
     """q: (b, hq, d); k_pages/v_pages: (P, page, hkv, d) physical arena
     for ONE layer; block_table: (b, max_pages) int32 physical page ids
     (entries past the sequence may be any valid slot, e.g. the null
-    page); positions: (b,) inclusive newest token index.  Returns
-    (b, hq, d) directly — no per-page partials touch HBM."""
+    page); positions: (b,) inclusive newest token index;
+    page_positions: optional (b, max_pages) absolute first-token
+    position per table slot (default: slot i == logical page i — a
+    sharded walk passes its resident pages' true positions, POS_PAD for
+    holes).  Returns (b, hq, d) directly — no per-page partials touch
+    HBM — or, with `partials=True`, the raw carry as
+    (m (b, hq), l (b, hq), acc (b, hq, d)) f32 for a cross-shard
+    log-sum-exp merge."""
     b, hq, d = q.shape
     page = k_pages.shape[1]
     hkv = k_pages.shape[2]
     group = hq // hkv
     mp = block_table.shape[1]
     ppb = max(1, min(pages_per_block, mp))
-    bt, nb = _pad_block_table(block_table, ppb)
+    if page_positions is None:
+        page_positions = default_page_positions(block_table, page)
+    bt, ppos, nb = _pad_block_table(block_table, page_positions, ppb)
 
     g_pad = _round_up(max(group, SUBLANE), SUBLANE)
     d_pad = _round_up(d, LANE)
@@ -188,36 +250,55 @@ def paged_decode_attention_pallas(q, k_pages, v_pages, block_table,
         qg = jnp.pad(qg, ((0, 0), (0, 0),
                           (0, g_pad - group), (0, d_pad - d)))
 
+    if partials:
+        out_shape = [jax.ShapeDtypeStruct((b, hkv, g_pad, d_pad), jnp.float32),
+                     jax.ShapeDtypeStruct((b, hkv, g_pad, 1), jnp.float32),
+                     jax.ShapeDtypeStruct((b, hkv, g_pad, 1), jnp.float32)]
+        out_specs = [pl.BlockSpec((1, 1, g_pad, d_pad),
+                                  lambda bi, h, pi, *pref: (bi, h, 0, 0)),
+                     pl.BlockSpec((1, 1, g_pad, 1),
+                                  lambda bi, h, pi, *pref: (bi, h, 0, 0)),
+                     pl.BlockSpec((1, 1, g_pad, 1),
+                                  lambda bi, h, pi, *pref: (bi, h, 0, 0))]
+    else:
+        out_shape = [jax.ShapeDtypeStruct((b, hkv, g_pad, d_pad), q.dtype)]
+        out_specs = [pl.BlockSpec((1, 1, g_pad, d_pad),
+                                  lambda bi, h, pi, *pref: (bi, h, 0, 0))]
+
     # NOTE jax 0.4.x index-map convention: grid indices first, then the
     # scalar-prefetch refs.
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=(b, hkv, nb),
         in_specs=[pl.BlockSpec((1, 1, g_pad, d_pad),
-                               lambda bi, h, pi, bt, ps: (bi, h, 0, 0))]
+                               lambda bi, h, pi, *pref: (bi, h, 0, 0))]
                  + kv_block_specs(page, d, ppb),
-        out_specs=[pl.BlockSpec((1, 1, g_pad, d_pad),
-                                lambda bi, h, pi, bt, ps: (bi, h, 0, 0))],
+        out_specs=out_specs,
         scratch_shapes=[
             pltpu.VMEM((g_pad, 1), jnp.float32),       # running max
             pltpu.VMEM((g_pad, 1), jnp.float32),       # running normalizer
             pltpu.VMEM((g_pad, d_pad), jnp.float32),   # running accumulator
         ],
     )
-    (out,) = pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(_paged_kernel, page_size=page, ppb=ppb, nb=nb,
-                          d=d, d_pad=d_pad),
+                          d=d, d_pad=d_pad, partials=partials),
         grid_spec=grid_spec,
-        out_shape=[jax.ShapeDtypeStruct((b, hkv, g_pad, d_pad), q.dtype)],
+        out_shape=out_shape,
         compiler_params=pltpu.TPUCompilerParams(
             # megacore split: (b, hkv) cells are independent and spread
             # across both TensorCores; the page walk must stay in-order
             # (VMEM carry), hence "arbitrary".
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(bt, positions.astype(jnp.int32), qg,
+    )(bt, positions.astype(jnp.int32), ppos, qg,
       *([k_pages] * ppb), *([v_pages] * ppb))
-    return out[:, :, :group, :d].reshape(b, hq, d)
+    if partials:
+        acc, m, l = out
+        return (m[:, :, :group, 0].reshape(b, hq),
+                l[:, :, :group, 0].reshape(b, hq),
+                acc[:, :, :group, :d].reshape(b, hq, d))
+    return out[0][:, :, :group, :d].reshape(b, hq, d)
 
 
 def combine_pages(m, l, acc, b: int, hq: int, d: int, out_dtype):

@@ -15,27 +15,49 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.paged_attention.kernel import combine_pages
+from repro.kernels.paged_attention.kernel import (combine_pages,
+                                                  default_page_positions)
 
 NEG_INF = -1e30
 
 
-def paged_decode_attention_ref(q, k_pages, v_pages, block_table, positions):
+def paged_decode_attention_ref(q, k_pages, v_pages, block_table, positions,
+                               page_positions=None, partials=False):
     """q: (b, hq, d); k_pages/v_pages: (P, page, hkv, d) one layer's
     physical arena; block_table: (b, max_pages) int32; positions: (b,)
-    inclusive newest index.  Returns (b, hq, d)."""
+    inclusive newest index.  Returns (b, hq, d).
+
+    `page_positions` ((b, max_pages), default slot i == logical page i)
+    gives each table slot's absolute first-token position, so a shard
+    can attend over a compacted table of just its resident pages.
+    `partials=True` returns the unnormalized softmax summary
+    (m (b, hq), l (b, hq), acc (b, hq, d)) f32 instead — the per-shard
+    state of the distributed log-sum-exp merge."""
     b, hq, d = q.shape
     page, hkv = k_pages.shape[1], k_pages.shape[2]
     mp = block_table.shape[1]
     S = mp * page
     g = hq // hkv
+    if page_positions is None:
+        page_positions = default_page_positions(block_table, page)
     k = k_pages[block_table].reshape(b, S, hkv, d)     # (b, mp, page,..) view
     v = v_pages[block_table].reshape(b, S, hkv, d)
     qg = q.reshape(b, hkv, g, d)
     s = jnp.einsum("bhgd,bshd->bhgs", qg, k).astype(jnp.float32)
     s = s / math.sqrt(d)
-    mask = jnp.arange(S)[None, :] <= positions[:, None]
+    kv_pos = (page_positions[:, :, None]
+              + jnp.arange(page)[None, None, :]).reshape(b, S)
+    mask = kv_pos <= positions[:, None]                # (b, S)
     s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    if partials:
+        # explicit masked accumulation: fully-masked rows keep l == 0
+        # and acc == 0 (softmax would emit exp(0) per masked entry)
+        m = s.max(axis=-1)                             # (b, hkv, g)
+        p = jnp.where(mask[:, None, None, :], jnp.exp(s - m[..., None]), 0.0)
+        l = p.sum(axis=-1)
+        acc = jnp.einsum("bhgs,bshd->bhgd", p.astype(jnp.float32),
+                         v.astype(jnp.float32))
+        return (m.reshape(b, hq), l.reshape(b, hq), acc.reshape(b, hq, d))
     p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
     o = jnp.einsum("bhgs,bshd->bhgd", p, v)
     return o.reshape(b, hq, d)

@@ -44,13 +44,18 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.paged_attention.kernel import (
     LANE, SUBLANE, _pad_block_table, _round_up, accumulate_block,
-    emit_output, kv_block_specs, load_kv_block, reset_carry)
+    block_kv_positions, emit_output, emit_partials, kv_block_specs,
+    load_kv_block, reset_carry, default_page_positions)
 
 
-def _prefill_kernel(bt_ref, start_ref, clen_ref, q_ref, *refs,
+def _prefill_kernel(bt_ref, start_ref, clen_ref, ppos_ref, q_ref, *refs,
                     page_size: int, ppb: int, nb: int, group: int,
-                    d: int, d_pad: int):
-    kv_refs, (o_ref, m_scr, l_scr, acc_scr) = refs[:2 * ppb], refs[2 * ppb:]
+                    d: int, d_pad: int, partials: bool):
+    kv_refs, rest = refs[:2 * ppb], refs[2 * ppb:]
+    if partials:
+        acc_ref, m_ref, l_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        o_ref, m_scr, l_scr, acc_scr = rest
     bi = pl.program_id(0)
     pi = pl.program_id(2)
 
@@ -68,32 +73,42 @@ def _prefill_kernel(bt_ref, start_ref, clen_ref, q_ref, *refs,
     # ci >= chunk_len and end up exact zeros via the masked carry)
     ci = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // group
     q_pos = start_ref[bi] + ci                             # absolute position
-    kv_pos = (pi * ppb * page_size
-              + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1))
+    kv_pos = block_kv_positions(ppos_ref, bi, pi, ppb, page_size, s.shape[0])
     valid = (kv_pos <= q_pos) & (ci < clen_ref[bi])
     accumulate_block(s, valid, v, m_scr, l_scr, acc_scr)
 
     @pl.when(pi == nb - 1)
     def _emit():
-        emit_output(o_ref, l_scr, acc_scr)
+        if partials:
+            emit_partials(acc_ref, m_ref, l_ref, m_scr, l_scr, acc_scr)
+        else:
+            emit_output(o_ref, l_scr, acc_scr)
 
 
 def paged_prefill_attention_pallas(q, k_pages, v_pages, block_table, start,
                                    chunk_len, *, pages_per_block: int = 1,
+                                   page_positions=None, partials: bool = False,
                                    interpret: bool = False):
     """q: (b, c, hq, d) chunk queries at absolute positions
     start[i]..start[i]+c-1; k_pages/v_pages: (P, page, hkv, d) ONE
     layer's arena (the chunk's own K/V already written); block_table:
     (b, max_pages) int32; chunk_len: (b,) valid rows per chunk (rows
     past it emit zeros).  Returns (b, c, hq, d) — the gathered
-    (b, max_pages*page, hkv, hd) KV copy never exists."""
+    (b, max_pages*page, hkv, hd) KV copy never exists.
+
+    `page_positions` maps table slots to absolute positions (sharded
+    walks pass a compacted table of resident pages, POS_PAD for holes);
+    `partials=True` returns the carry (m (b, c, hq), l (b, c, hq),
+    acc (b, c, hq, d)) f32 for the cross-shard log-sum-exp merge."""
     b, c, hq, d = q.shape
     page = k_pages.shape[1]
     hkv = k_pages.shape[2]
     group = hq // hkv
     mp = block_table.shape[1]
     ppb = max(1, min(pages_per_block, mp))
-    bt, nb = _pad_block_table(block_table, ppb)
+    if page_positions is None:
+        page_positions = default_page_positions(block_table, page)
+    bt, ppos, nb = _pad_block_table(block_table, page_positions, ppb)
 
     d_pad = _round_up(d, LANE)
     qg = jnp.moveaxis(q.reshape(b, c, hkv, group, d), 2, 1)
@@ -107,31 +122,52 @@ def paged_prefill_attention_pallas(q, k_pages, v_pages, block_table, start,
     if R != rows:
         qg = jnp.pad(qg, ((0, 0), (0, 0), (0, R - rows), (0, 0)))
 
+    if partials:
+        out_shape = [jax.ShapeDtypeStruct((b, hkv, R, d_pad), jnp.float32),
+                     jax.ShapeDtypeStruct((b, hkv, R, 1), jnp.float32),
+                     jax.ShapeDtypeStruct((b, hkv, R, 1), jnp.float32)]
+        out_specs = [pl.BlockSpec((1, 1, R, d_pad),
+                                  lambda bi, h, pi, *pref: (bi, h, 0, 0)),
+                     pl.BlockSpec((1, 1, R, 1),
+                                  lambda bi, h, pi, *pref: (bi, h, 0, 0)),
+                     pl.BlockSpec((1, 1, R, 1),
+                                  lambda bi, h, pi, *pref: (bi, h, 0, 0))]
+    else:
+        out_shape = [jax.ShapeDtypeStruct((b, hkv, R, d_pad), q.dtype)]
+        out_specs = [pl.BlockSpec((1, 1, R, d_pad),
+                                  lambda bi, h, pi, *pref: (bi, h, 0, 0))]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
+        num_scalar_prefetch=4,
         grid=(b, hkv, nb),
         in_specs=[pl.BlockSpec((1, 1, R, d_pad),
-                               lambda bi, h, pi, bt, st, cl: (bi, h, 0, 0))]
+                               lambda bi, h, pi, *pref: (bi, h, 0, 0))]
                  + kv_block_specs(page, d, ppb),
-        out_specs=[pl.BlockSpec((1, 1, R, d_pad),
-                                lambda bi, h, pi, bt, st, cl: (bi, h, 0, 0))],
+        out_specs=out_specs,
         scratch_shapes=[
             pltpu.VMEM((R, 1), jnp.float32),       # running max
             pltpu.VMEM((R, 1), jnp.float32),       # running normalizer
             pltpu.VMEM((R, d_pad), jnp.float32),   # running accumulator
         ],
     )
-    (out,) = pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(_prefill_kernel, page_size=page, ppb=ppb, nb=nb,
-                          group=group, d=d, d_pad=d_pad),
+                          group=group, d=d, d_pad=d_pad, partials=partials),
         grid_spec=grid_spec,
-        out_shape=[jax.ShapeDtypeStruct((b, hkv, R, d_pad), q.dtype)],
+        out_shape=out_shape,
         compiler_params=pltpu.TPUCompilerParams(
             # megacore split over (b, hkv); the page walk carries VMEM
             # state and must stay sequential.
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(bt, start.astype(jnp.int32), chunk_len.astype(jnp.int32), qg,
+    )(bt, start.astype(jnp.int32), chunk_len.astype(jnp.int32), ppos, qg,
       *([k_pages] * ppb), *([v_pages] * ppb))
-    out = out[:, :, :rows, :d].reshape(b, hkv, c, group, d)
-    return jnp.moveaxis(out, 1, 2).reshape(b, c, hq, d)
+
+    def unpack(x, dd):
+        x = x[:, :, :rows, :dd].reshape(b, hkv, c, group, dd)
+        return jnp.moveaxis(x, 1, 2).reshape(b, c, hq, dd)
+
+    if partials:
+        acc, m, l = out
+        return (unpack(m, 1)[..., 0], unpack(l, 1)[..., 0], unpack(acc, d))
+    return unpack(out[0], d)

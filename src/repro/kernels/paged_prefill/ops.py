@@ -13,14 +13,25 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-@partial(jax.jit, static_argnames=("pages_per_block", "interpret"))
+@partial(jax.jit, static_argnames=("pages_per_block", "partials",
+                                   "interpret"))
 def paged_prefill_attention(q, k_pages, v_pages, block_table, start,
-                            chunk_len, pages_per_block=1, interpret=None):
+                            chunk_len, pages_per_block=1,
+                            page_positions=None, partials=False,
+                            interpret=None):
     """q: (b, c, hq, d) chunk queries; k_pages/v_pages: (P, page, hkv, d)
     one layer's arena; block_table: (b, max_pages); start/chunk_len: (b,)
     chunk geometry.  Returns (b, c, hq, d); rows past chunk_len are
-    exact zeros."""
+    exact zeros.
+
+    `page_positions` (optional (b, max_pages) int32) carries each table
+    slot's absolute first-token position so a shard can walk a compacted
+    table of just its resident pages; `partials=True` returns the
+    online-softmax carry (m (b, c, hq), l (b, c, hq), acc (b, c, hq, d))
+    f32 for the cross-shard log-sum-exp merge instead of the normalized
+    output."""
     interpret = (not _on_tpu()) if interpret is None else interpret
     return K.paged_prefill_attention_pallas(
         q, k_pages, v_pages, block_table, start, chunk_len,
-        pages_per_block=pages_per_block, interpret=interpret)
+        pages_per_block=pages_per_block, page_positions=page_positions,
+        partials=partials, interpret=interpret)

@@ -7,29 +7,52 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.paged_attention.kernel import default_page_positions
+
 NEG_INF = -1e30
 
 
 def paged_prefill_attention_ref(q, k_pages, v_pages, block_table, start,
-                                chunk_len):
+                                chunk_len, page_positions=None,
+                                partials=False):
     """q: (b, c, hq, d) chunk queries at absolute positions
     start[i]..start[i]+c-1; k_pages/v_pages: (P, page, hkv, d) one
     layer's arena; block_table: (b, max_pages) int32; chunk_len: (b,)
-    valid rows (rows past it return zeros).  Returns (b, c, hq, d)."""
+    valid rows (rows past it return zeros).  Returns (b, c, hq, d).
+
+    `page_positions` ((b, max_pages), default slot i == logical page i)
+    lets a shard attend over a compacted table of its resident pages;
+    `partials=True` returns the unnormalized summary (m (b, c, hq),
+    l (b, c, hq), acc (b, c, hq, d)) f32 for the cross-shard merge."""
     b, c, hq, d = q.shape
     page, hkv = k_pages.shape[1], k_pages.shape[2]
     mp = block_table.shape[1]
     S = mp * page
     g = hq // hkv
+    if page_positions is None:
+        page_positions = default_page_positions(block_table, page)
     k = k_pages[block_table].reshape(b, S, hkv, d)
     v = v_pages[block_table].reshape(b, S, hkv, d)
     positions = start[:, None] + jnp.arange(c)[None, :]        # (b, c)
     qg = q.reshape(b, c, hkv, g, d)
     s = jnp.einsum("bchgd,bshd->bhgcs", qg, k).astype(jnp.float32)
     s = s / math.sqrt(d)
-    mask = jnp.arange(S)[None, None, :] <= positions[:, :, None]   # (b,c,S)
+    kv_pos = (page_positions[:, :, None]
+              + jnp.arange(page)[None, None, :]).reshape(b, S)
+    mask = kv_pos[:, None, :] <= positions[:, :, None]         # (b, c, S)
+    q_valid = (jnp.arange(c)[None, :] < chunk_len[:, None])    # (b, c)
+    if partials:
+        mask = mask & q_valid[:, :, None]
+        s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+        m = s.max(axis=-1)                                     # (b,hkv,g,c)
+        p = jnp.where(mask[:, None, None, :, :],
+                      jnp.exp(s - m[..., None]), 0.0)
+        l = p.sum(axis=-1)
+        acc = jnp.einsum("bhgcs,bshd->bchgd", p.astype(jnp.float32),
+                         v.astype(jnp.float32)).reshape(b, c, hq, d)
+        to_bch = lambda x: jnp.moveaxis(x, 3, 1).reshape(b, c, hq)
+        return to_bch(m), to_bch(l), acc
     s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
     o = jnp.einsum("bhgcs,bshd->bchgd", p, v).reshape(b, c, hq, d)
-    q_valid = (jnp.arange(c)[None, :] < chunk_len[:, None])    # (b, c)
     return jnp.where(q_valid[..., None, None], o, jnp.zeros((), o.dtype))

@@ -57,6 +57,20 @@ def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
     return _mk((data, model), ("data", "model"))
 
 
+# the near-memory serving axis: the UniMem page arena shards over it
+MEM_AXIS = "mem"
+
+
+def make_mem_mesh(shards: int | None = None) -> Mesh:
+    """1-D serving mesh over the near-memory MEM_AXIS: the UniMem page
+    arena shards across it (pages resident per chip, queries broadcast,
+    softmax summaries reduced — DESIGN.md §2).  Defaults to every device
+    in the process; a 1-device mesh degrades the sharded serving path to
+    the plain single-arena one."""
+    shards = shards or jax.device_count()
+    return _mk((shards,), (MEM_AXIS,))
+
+
 def dp_width(mesh: Mesh) -> int:
     """Data-parallel width = product of the DSU axes present."""
     w = 1

@@ -1,7 +1,8 @@
 """Serving driver: paged-native continuous batching on the UniMem arena.
 
     PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
-        --reduced --requests 16 --max-new 24 [--layout paged|contiguous]
+        --reduced --requests 16 --max-new 24 [--layout paged|contiguous] \
+        [--shards N]
 
 Spins up a reduced (or full, on real hardware) model, submits a synthetic
 request stream with mixed prompt lengths (vlm arches get synthetic patch
@@ -10,6 +11,12 @@ latency/throughput/pool stats including the paged arena's page
 high-water mark (the memory the layout actually ties down).  Every
 decode family except pure-SSM defaults to the paged layout (dense, moe,
 hybrid, vlm); ssm falls back to contiguous automatically.
+
+`--shards N` serves from the near-memory SHARDED arena on an N-device
+"mem" mesh (pages resident per chip, queries broadcast, softmax
+summaries merged): on real multi-chip hosts this is the multi-chip
+serving path; on CPU force host devices first with
+XLA_FLAGS=--xla_force_host_platform_device_count=N.
 """
 from __future__ import annotations
 
@@ -41,6 +48,9 @@ def main(argv=None):
                     help="default: paged where the family supports it")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="prompt tokens prefilled per engine step (paged)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="shard the paged arena over an N-device 'mem' "
+                         "mesh (near-memory serving; needs N devices)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -59,11 +69,20 @@ def main(argv=None):
             f"--max-new {args.max_new} leave no room for a prompt "
             f"(need max_seq >= {patches + args.max_new + 5})")
 
+    mesh = None
+    if args.shards > 1:
+        from repro.launch.mesh import make_mem_mesh
+        if jax.device_count() < args.shards:
+            raise SystemExit(
+                f"--shards {args.shards} needs that many devices, have "
+                f"{jax.device_count()} (XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={args.shards})")
+        mesh = make_mem_mesh(args.shards)
     params = fam.init(jax.random.key(args.seed), cfg)
     engine = ServingEngine(cfg, params, max_batch=args.max_batch,
                            max_seq=args.max_seq, page_size=args.page_size,
                            layout=args.layout,
-                           prefill_chunk=args.prefill_chunk)
+                           prefill_chunk=args.prefill_chunk, mesh=mesh)
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
         plen = int(rng.integers(4, budget))

@@ -26,6 +26,11 @@ class ModelConfig:
     attention_impl: str = "flash_xla"    # dense | flash_xla | flash_pallas
     attn_chunk: int = 1024               # KV block for online-softmax attention
     attn_pages_per_block: int = 1        # arena pages per paged-kernel grid cell
+    # bound mesh axis the paged KV arena is sharded over (set only inside
+    # the shard_map'd sharded serving step): paged attention then runs
+    # over each chip's RESIDENT pages in partials mode and merges the
+    # (b, hq, hd)-sized summaries across this axis.  None = single arena.
+    mem_axis: str | None = None
 
     # mlp
     d_ff: int = 0

@@ -172,6 +172,35 @@ def run_decode_attention(cfg: ModelConfig, q, k_cache, v_cache, position):
     return decode_attention(q, k_cache, v_cache, position)
 
 
+def _shard_local_walk(mem_axis: str, block_table, page_size: int,
+                      local_null: int):
+    """Compact a shard's LOCAL full-width block table to its resident
+    stride (DESIGN.md §2 page→shard mapping: logical page j of every
+    sequence lives on shard j % n, so the columns this shard must walk
+    are exactly j ≡ axis_index (mod n)).
+
+    block_table: (b, max_pages) LOCAL page ids — entries this shard does
+    not own (and padding) already point at `local_null`.  Returns the
+    (b, ceil(max_pages/n)) compacted table + its absolute page positions
+    (POS_PAD sentinel for null/absent slots, so the kernels' position
+    mask kills them unconditionally): each chip's attention walk is n
+    times shorter — KV bandwidth scales with the mesh."""
+    from repro.kernels.paged_attention.kernel import POS_PAD
+    from repro.distribution.collectives import axis_size
+
+    n = axis_size(mem_axis)
+    idx = jax.lax.axis_index(mem_axis)
+    b, mp = block_table.shape
+    mp_loc = -(-mp // n)
+    cols = idx + n * jnp.arange(mp_loc, dtype=jnp.int32)     # logical slots
+    safe = jnp.minimum(cols, mp - 1)
+    lbt = jnp.take(block_table, safe, axis=1)                # (b, mp_loc)
+    resident = (cols[None, :] < mp) & (lbt != local_null)
+    lbt = jnp.where(resident, lbt, local_null)
+    page_pos = jnp.where(resident, cols[None, :] * page_size, POS_PAD)
+    return lbt, page_pos.astype(jnp.int32)
+
+
 def run_paged_decode_attention(cfg: ModelConfig, q, k_pages, v_pages,
                                block_table, positions):
     """Config-dispatched paged decode attention over the UniMem arena.
@@ -182,16 +211,33 @@ def run_paged_decode_attention(cfg: ModelConfig, q, k_pages, v_pages,
     fused single-pass Pallas block-table kernel (resident pages,
     travelling query, VMEM online-softmax carry —
     `cfg.attn_pages_per_block` pages per sequential grid cell); other
-    impls use the XLA gather oracle.  Returns (b, hq*d)."""
+    impls use the XLA gather oracle.  Returns (b, hq*d).
+
+    With `cfg.mem_axis` set (inside the shard_map'd sharded serving
+    step, where `block_table` is the shard's LOCAL table) each chip
+    attends over its RESIDENT pages only in partials mode and the
+    (b, hq(, d))-sized summaries are log-sum-exp-merged across the mesh
+    — the near-memory dataflow: pages stay put, summaries travel."""
     b, hq, d = q.shape
+    kw = {}
+    if cfg.mem_axis is not None:
+        lbt, page_pos = _shard_local_walk(
+            cfg.mem_axis, block_table, k_pages.shape[1],
+            local_null=k_pages.shape[0] - 1)
+        block_table = lbt
+        kw = dict(page_positions=page_pos, partials=True)
     if cfg.attention_impl == "flash_pallas":
         from repro.kernels.paged_attention.ops import paged_decode_attention
         o = paged_decode_attention(q, k_pages, v_pages, block_table, positions,
-                                   pages_per_block=cfg.attn_pages_per_block)
+                                   pages_per_block=cfg.attn_pages_per_block,
+                                   **kw)
     else:
         from repro.kernels.paged_attention.ref import paged_decode_attention_ref
         o = paged_decode_attention_ref(q, k_pages, v_pages, block_table,
-                                       positions)
+                                       positions, **kw)
+    if cfg.mem_axis is not None:
+        from repro.distribution.collectives import combine_shard_partials
+        o = combine_shard_partials(*o, cfg.mem_axis, q.dtype)
     return o.reshape(b, hq * d)
 
 
@@ -206,17 +252,32 @@ def run_paged_prefill_attention(cfg: ModelConfig, q, k_pages, v_pages,
     walks the block table inside the fused Pallas kernel — the
     (b, max_pages*page, hkv, hd) gathered KV copy of the old
     formulation never exists; other impls use the XLA gather oracle.
-    Returns (b, c, hq*d).  Per-chunk cost is c*S, not prompt^2."""
+    Returns (b, c, hq*d).  Per-chunk cost is c*S, not prompt^2.
+
+    With `cfg.mem_axis` set (sharded serving step), each chip walks only
+    its resident pages and the (b, c, hq(, d)) chunk summaries merge
+    across the mesh — see `run_paged_decode_attention`."""
     b, c, hq, d = q.shape
+    kw = {}
+    if cfg.mem_axis is not None:
+        lbt, page_pos = _shard_local_walk(
+            cfg.mem_axis, block_table, k_pages.shape[1],
+            local_null=k_pages.shape[0] - 1)
+        block_table = lbt
+        kw = dict(page_positions=page_pos, partials=True)
     if cfg.attention_impl == "flash_pallas":
         from repro.kernels.paged_prefill.ops import paged_prefill_attention
         o = paged_prefill_attention(q, k_pages, v_pages, block_table,
                                     start, chunk_len,
-                                    pages_per_block=cfg.attn_pages_per_block)
+                                    pages_per_block=cfg.attn_pages_per_block,
+                                    **kw)
     else:
         from repro.kernels.paged_prefill.ref import paged_prefill_attention_ref
         o = paged_prefill_attention_ref(q, k_pages, v_pages, block_table,
-                                        start, chunk_len)
+                                        start, chunk_len, **kw)
+    if cfg.mem_axis is not None:
+        from repro.distribution.collectives import combine_shard_partials
+        o = combine_shard_partials(*o, cfg.mem_axis, q.dtype)
     return o.reshape(b, c, hq * d)
 
 

@@ -36,6 +36,18 @@ cache is O(1) state with nothing to page — it uses the contiguous
 layout: per-slot caches with the pool as an admission counter over max
 footprints.
 
+Admission is WATERMARK-based: a request enters once its first prefill
+chunk fits (low watermark), prompt pages then grow lazily chunk by
+chunk; an optional high watermark preempts youngest slots before the
+pool runs hard dry.
+
+Given a mesh with a "mem" axis (>1 device), the arena is SHARDED
+near-memory style (`serve/sharded/`): every chip owns a static bank of
+pages, the allocator interleaves each sequence's pages across banks,
+queries broadcast and only (b, hq, hd)-sized softmax summaries cross
+the interconnect.  The engine logic here is identical either way — it
+talks global page ids; the jitted step localizes them.
+
 Loop shape (classic continuous batching):
 
     while work:
@@ -148,12 +160,25 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
                  max_seq: int = 1024, page_size: int = 16,
                  pool_pages: int | None = None, temperature: float = 0.0,
-                 layout: str | None = None, prefill_chunk: int | None = None):
+                 layout: str | None = None, prefill_chunk: int | None = None,
+                 mesh=None, high_watermark: float | None = None):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.page_size = page_size
+        # a mesh with a >1 "mem" axis shards the arena near-memory style
+        # (pages resident per chip, queries broadcast, summaries merged);
+        # a 1-device mesh degrades to the plain single-arena path, so
+        # every existing code path is untouched.
+        from repro.launch.mesh import MEM_AXIS
+        self.mesh = None
+        if (mesh is not None and MEM_AXIS in getattr(mesh, "axis_names", ())
+                and mesh.shape[MEM_AXIS] > 1):
+            self.mesh = mesh
+        # fraction of pool pages above which the engine proactively
+        # preempts youngest slots (None = preempt only on hard OOM)
+        self.high_watermark = high_watermark
         fam = registry.get_family(cfg)
         if fam.decode_step is None:
             raise ValueError(f"family {cfg.family!r} cannot serve (no decode)")
@@ -166,6 +191,9 @@ class ServingEngine:
         if layout not in ("paged", "contiguous"):
             raise ValueError(f"unknown layout {layout!r}")
         self.layout = layout
+        if layout != "paged":
+            self.mesh = None        # only the arena shards; contiguous
+                                    # (ssm fallback) serves single-device
         pool_pages = pool_pages or (max_batch * max_seq) // page_size
         self.max_pages = -(-max_seq // page_size)     # block-table width
         self.prefill_chunk = prefill_chunk or max(page_size * 4, 32)
@@ -179,16 +207,29 @@ class ServingEngine:
         self.prefill_shapes: set[tuple[int, int]] = set()
 
         if layout == "paged":
-            self.arena = PagedKVArena(cfg, num_pages=pool_pages,
-                                      page_size=page_size,
-                                      max_batch=max_batch)
+            if self.mesh is not None:
+                from repro.serve.sharded import (ShardedPagedKVArena,
+                                                 make_sharded_serve_fns)
+                n = self.mesh.shape[MEM_AXIS]
+                pool_pages = -(-pool_pages // n) * n   # round UP: never
+                                                       # shrink the pool
+                self.arena = ShardedPagedKVArena(
+                    cfg, num_pages=pool_pages, page_size=page_size,
+                    max_batch=max_batch, mesh=self.mesh)
+                self.prefill_fn, self.decode_fn = make_sharded_serve_fns(
+                    cfg, self.mesh, pool_pages, temperature=temperature,
+                    arena_keys=tuple(self.arena.kv))
+            else:
+                self.arena = PagedKVArena(cfg, num_pages=pool_pages,
+                                          page_size=page_size,
+                                          max_batch=max_batch)
+                self.prefill_fn, self.decode_fn = make_paged_serve_fns(
+                    cfg, temperature=temperature)
             self.pool = self.arena.pool
             # families with contiguous per-slot state (hybrid conv/SSM)
             # can share page MEMORY but never skip prefill COMPUTE: the
             # skipped tokens' state would not exist for the new slot
             self._slot_state = self.arena.state_bytes > 0
-            self.prefill_fn, self.decode_fn = make_paged_serve_fns(
-                cfg, temperature=temperature)
             self.cache = None
             # page-content hash -> physical page id (prompt prefix reuse)
             self._prefix_cache: dict[int, int] = {}
@@ -299,7 +340,8 @@ class ServingEngine:
         limit = (s.request.virtual_len - 1) // ps
         while s.prefill_pos % ps == 0:
             i = s.prefill_pos // ps
-            if i >= limit or i >= len(s.page_hashes):
+            if i >= limit or i >= len(s.page_hashes) \
+                    or i >= len(s.pages.pages):
                 break
             page = self._prefix_cache.get(s.page_hashes[i])
             if page is None or not self.pool.is_allocated(page):
@@ -336,27 +378,35 @@ class ServingEngine:
             self._admit_contiguous()
 
     def _admit_paged(self):
-        """Admission reserves the PROMPT's pages only (lazy growth covers
-        decode); shared prefix pages cost nothing extra."""
+        """Watermark-based admission: a request enters as soon as the
+        pool can hold its FIRST prefill chunk (the low-watermark
+        estimate), not its whole prompt — the remaining prompt pages are
+        allocated lazily, one chunk per tick, exactly like decode
+        growth, with preemption as the backpressure.  A prompt that only
+        fits once a draining slot retires no longer waits for the
+        retire: it prefills INTO the freeing pool.  Shared prefix pages
+        cost nothing extra."""
         free = self._free_slots()
         while free and self.pending:
             req = self.pending[0]
             plen = req.virtual_len
             written, adopted, hashes = self._match_prefix(req)
             shared_tokens = len(written) * self.page_size
-            need = self.pool.pages_for(plen) - len(written) - len(adopted)
-            if need > self.pool.free_pages:
+            # adopted pages are held but still prefilled through (their
+            # content lands when this row — or the co-prefilling donor —
+            # writes them); only `written` tokens are skipped outright
+            held = shared_tokens + len(adopted) * self.page_size
+            first = min(self.prefill_chunk, plen - held)
+            need = (self.pool.pages_for(held + first)
+                    - len(written) - len(adopted))
+            if not self.pool.fits(len(written) + len(adopted), need):
                 break                            # UniMem backpressure
             self.pending.pop(0)
             slot = free.pop(0)
             if written or adopted:
                 self.pool.share(written + adopted)
-            # adopted pages are held but still prefilled through (their
-            # content lands when this row — or the co-prefilling donor —
-            # writes them); only `written` tokens are skipped outright
-            held = shared_tokens + len(adopted) * self.page_size
             seq = SequencePageTable(self.pool, written + adopted, held)
-            seq.append_tokens(plen - held)
+            seq.append_tokens(first)
             s = _Slot(request=req, pages=seq, admitted_at=time.perf_counter(),
                       order=self._admitted, prefill_pos=shared_tokens,
                       shared_tokens=shared_tokens, page_hashes=hashes)
@@ -415,6 +465,21 @@ class ServingEngine:
         lens = {i: min(self.prefill_chunk,
                        s.request.virtual_len - s.prefill_pos)
                 for i, s in pre}
+        # lazy prompt-page growth (watermark admission allocated only the
+        # first chunk): extend each slot's table to cover this tick's
+        # chunk, preempting younger slots under pool pressure — a slot
+        # preempted here simply sits out the tick
+        for i, s in pre:
+            if self.slots.get(i) is not s:
+                continue                         # preempted this tick
+            grow = s.prefill_pos + lens[i] - s.pages.num_tokens
+            if grow > 0:
+                self._with_preemption(
+                    s, lambda s=s, g=grow: s.pages.append_tokens(g))
+        pre = [(i, s) for i, s in pre if self.slots.get(i) is s]
+        if not pre:
+            return
+        lens = {i: lens[i] for i, _ in pre}
         b, c = self.max_batch, self._bucket_width(max(lens.values()))
         tokens = np.zeros((b, c), np.int32)
         start = np.zeros((b,), np.int32)
@@ -452,38 +517,57 @@ class ServingEngine:
 
     # ------------------------------------------------------------- step
 
-    def _with_preemption(self, s: _Slot, fn) -> None:
+    def _with_preemption(self, s: _Slot, fn) -> bool:
         """Run one ATOMIC allocator step (raises UniMemOOM before any
-        mutation), preempting younger slots until it fits."""
+        mutation) under the age-priority discipline: a slot may evict
+        only YOUNGER slots.  With no younger victim left it yields —
+        preempts ITSELF back to the queue (returns False; the caller
+        must skip the slot this tick).  Mutual old↔young eviction would
+        otherwise livelock under watermark admission (the victim
+        readmits next tick and evicts its evictor); strict age order
+        means the oldest slot always runs to completion.  A lone slot
+        that still cannot fit surfaces the OOM — the pool is genuinely
+        too small."""
         while True:
             try:
                 fn()
-                return
+                return True
             except UniMemOOM:
-                if not self._preempt_youngest(but=s):
-                    raise
+                if self._preempt_youngest(but=s):
+                    continue
+                if len(self.slots) > 1:          # yield to the elders
+                    idx = next(i for i, sl in self.slots.items() if sl is s)
+                    self._preempt_slot(idx, s)
+                    return False
+                raise
 
     def _grow_for_write(self, s: _Slot) -> None:
         """Lazy page growth + COW before this step's token write, each
         retried separately under pool pressure — retrying them as a unit
         would re-run the append after a COW OOM and double-count the
         token."""
-        self._with_preemption(s, lambda: s.pages.append_tokens(1))
+        if not self._with_preemption(s, lambda: s.pages.append_tokens(1)):
+            return                               # slot yielded its pages
         self._with_preemption(s, lambda: self.arena.cow_for_write(s.pages))
 
-    def _preempt_youngest(self, but: _Slot) -> bool:
-        """Kick the most recently admitted other slot back to the queue
-        (its work is recomputed on readmission) and reclaim its pages."""
-        victims = [(i, s) for i, s in self.slots.items()
-                   if s is not but]
-        if not victims:
-            return False
-        idx, victim = max(victims, key=lambda kv: kv[1].order)
+    def _preempt_slot(self, idx: int, victim: _Slot) -> None:
+        """Kick one slot back to the queue front (recompute-on-readmit)
+        and reclaim its pages."""
         log.info("engine: preempting uid=%d (pool pressure)",
                  victim.request.uid)
         self._release_pages(victim.pages)
         del self.slots[idx]
         self.pending.insert(0, victim.request)
+
+    def _preempt_youngest(self, but: _Slot) -> bool:
+        """Preempt the most recently admitted slot YOUNGER than `but`
+        (age priority — see _with_preemption)."""
+        victims = [(i, s) for i, s in self.slots.items()
+                   if s is not but and s.order > but.order]
+        if not victims:
+            return False
+        idx, victim = max(victims, key=lambda kv: kv[1].order)
+        self._preempt_slot(idx, victim)
         return True
 
     def _decode_paged(self):
@@ -553,9 +637,24 @@ class ServingEngine:
                 self.cache = clear_slot(self.cache, i, self.cache_ax)
             del self.slots[i]
 
+    def _enforce_high_watermark(self):
+        """Proactive backpressure: when allocation crosses the high
+        watermark, preempt youngest slots (never the oldest — progress
+        is guaranteed) until the pool is back under.  OOM-driven
+        preemption still backstops a high_watermark of None."""
+        if self.high_watermark is None or self.layout != "paged":
+            return
+        limit = int(self.high_watermark * self.pool.num_pages)
+        while (self.pool.num_pages - self.pool.free_pages) > limit \
+                and len(self.slots) > 1:
+            oldest = min(self.slots.values(), key=lambda s: s.order)
+            if not self._preempt_youngest(but=oldest):
+                break
+
     def step(self):
         self._admit()
         self._prefill_tick()
+        self._enforce_high_watermark()
         if self.layout == "paged":
             self._decode_paged()
         else:
@@ -621,7 +720,7 @@ class ServingEngine:
                    for a in jax.tree.leaves(self.cache))
 
     def stats(self) -> dict:
-        return {
+        out = {
             "layout": self.layout,
             "steps": self.steps,
             "tokens_out": self.tokens_out,
@@ -632,3 +731,7 @@ class ServingEngine:
             "prefill_shapes": sorted(self.prefill_shapes),
             "pool": self.pool.stats().__dict__,
         }
+        if self.mesh is not None:               # near-memory sharded arena
+            out["shards"] = self.pool.shard_stats()
+            out["shard_kv_bytes"] = self.arena.shard_kv_bytes()
+        return out

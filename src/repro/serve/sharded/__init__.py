@@ -1,0 +1,17 @@
+"""Near-memory sharded serving: the UniMem page arena distributed over a
+`mem` mesh axis (DESIGN.md §2).
+
+Each device owns a static bank of physical pages; the host allocator
+interleaves every sequence's logical pages across the banks; the decode/
+prefill batch is broadcast; each shard runs the fused paged kernels over
+its resident pages only (partials mode) and only the (b, hq, hd)-sized
+online-softmax summaries cross the interconnect, merged by the shared
+log-sum-exp reduction.  On a 1-device mesh the engine bypasses this
+package entirely — every single-arena path is unchanged.
+"""
+from repro.serve.sharded.arena import ShardedPagedKVArena
+from repro.serve.sharded.serve_step import (MEM_AXIS, make_sharded_serve_fns,
+                                            lowered_sharded_hlo)
+
+__all__ = ["ShardedPagedKVArena", "MEM_AXIS", "make_sharded_serve_fns",
+           "lowered_sharded_hlo"]

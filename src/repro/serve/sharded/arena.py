@@ -1,0 +1,136 @@
+"""Device-side sharded page arena: UniMem distributed over the `mem` axis.
+
+The single pooled arena of `serve/kv_cache.py`, cut into per-device
+banks (DESIGN.md §2): the K/V page leaves are laid out as
+(layers, n * (pages_per_shard + 1), page, hkv, hd) and sharded over the
+page-slot axis, so device s holds the contiguous physical bank
+[s*(pps+1), (s+1)*(pps+1)) — its resident pages plus its OWN null slot
+(every shard needs a local write/gather sink for tokens other shards
+own).  Pool page ids are blocked to match: page g lives on shard
+g // pps at local slot g % pps; the engine-visible null sentinel is
+`num_pages`, which no shard owns, so the in-step translation maps it to
+every shard's local null.
+
+Non-page leaves (hybrid's per-slot conv/SSM state) are REPLICATED: the
+batch is broadcast anyway and the recurrent state update is a pure
+function of it, so every shard carries identical copies — nothing to
+reduce, nothing to migrate on fork.
+
+Device-side page copies (COW) go through jitted helpers with pinned
+output shardings: an eager `.at[].set()` would silently drop the
+placement and re-gather the whole arena onto one device.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.unimem import ShardedUniMemPool
+from repro.launch.mesh import MEM_AXIS
+from repro.serve.kv_cache import (PAGED_KV_KEYS, STATE_SLOT_AXIS,
+                                  PagedKVArena)
+
+
+@dataclass
+class ShardedPagedKVArena(PagedKVArena):
+    """PagedKVArena whose page banks live one-per-device on `mesh`'s
+    "mem" axis.  `num_pages` is the GLOBAL pool size (must divide over
+    the axis); the device arrays carry one extra null slot PER SHARD."""
+    mesh: Mesh = None
+    _copy_page_jit: object = field(default=None, repr=False, compare=False)
+    _copy_state_jit: object = field(default=None, repr=False, compare=False)
+
+    def __post_init__(self):
+        assert self.mesh is not None and MEM_AXIS in self.mesh.axis_names
+        n = self.num_shards
+        if self.num_pages % n:
+            raise ValueError(f"num_pages {self.num_pages} must divide over "
+                             f"{n} shards")
+        pps = self.num_pages // n
+        if self.kv is None:
+            from repro.models import registry
+            fam = registry.get_family(self.cfg)
+            self.kv = fam.init_paged_cache(
+                self.cfg, n * (pps + 1), self.page_size, self.max_batch)
+        self.kv = {
+            name: jax.device_put(
+                a, NamedSharding(self.mesh,
+                                 P(None, MEM_AXIS) if name in PAGED_KV_KEYS
+                                 else P()))
+            for name, a in self.kv.items()}
+        if self.pool is None:
+            self.pool = ShardedUniMemPool(self.num_pages, self.page_size,
+                                          num_shards=n)
+
+    @property
+    def num_shards(self) -> int:
+        return self.mesh.shape[MEM_AXIS]
+
+    @property
+    def pages_per_shard(self) -> int:
+        return self.num_pages // self.num_shards
+
+    def phys_slot(self, page: int) -> int:
+        """Device-array slot of pool page id `page`: each shard's bank is
+        its pages_per_shard resident slots plus its local null slot."""
+        pps = self.pages_per_shard
+        if page == self.null_page:            # sentinel -> shard 0's null
+            return pps
+        return (page // pps) * (pps + 1) + page % pps
+
+    @property
+    def page_bytes(self) -> int:
+        kv = sum(int(self.kv[n].size) * self.kv[n].dtype.itemsize
+                 for n in PAGED_KV_KEYS)
+        return kv // (self.num_shards * (self.pages_per_shard + 1))
+
+    def shard_kv_bytes(self) -> list[int]:
+        """Per-device bytes of the page leaves actually resident on each
+        shard (from the arrays' own placement, not arithmetic)."""
+        n = self.num_shards
+        totals = [0] * n
+        for name in PAGED_KV_KEYS:
+            for i, s in enumerate(self.kv[name].addressable_shards):
+                totals[i % n] += int(s.data.size) * s.data.dtype.itemsize
+        return totals
+
+    def _shardings(self):
+        return {name: a.sharding for name, a in self.kv.items()}
+
+    def copy_page(self, src: int, dst: int) -> None:
+        """COW page copy.  src and dst serve the same logical index, so
+        the strided allocator placed them on the SAME shard — the copy
+        never crosses the interconnect."""
+        if self._copy_page_jit is None:
+            def f(kv, ps, pd):
+                return {name: (a.at[:, pd].set(
+                            jax.lax.dynamic_index_in_dim(a, ps, 1,
+                                                         keepdims=False))
+                               if name in PAGED_KV_KEYS else a)
+                        for name, a in kv.items()}
+            self._copy_page_jit = jax.jit(f, out_shardings=self._shardings())
+        self.kv = self._copy_page_jit(self.kv, jnp.int32(self.phys_slot(src)),
+                                      jnp.int32(self.phys_slot(dst)))
+
+    def copy_slot_state(self, src_slot: int, dst_slot: int) -> None:
+        """fork() state copy on the REPLICATED non-page leaves."""
+        if self.state_bytes == 0:
+            return
+        if self._copy_state_jit is None:
+            def f(kv, src, dst):
+                out = {}
+                for name, a in kv.items():
+                    if name in PAGED_KV_KEYS:
+                        out[name] = a
+                    else:
+                        row = jax.lax.dynamic_index_in_dim(
+                            a, src, STATE_SLOT_AXIS, keepdims=False)
+                        idx = (slice(None),) * STATE_SLOT_AXIS
+                        out[name] = a.at[idx + (dst,)].set(row)
+                return out
+            self._copy_state_jit = jax.jit(f, out_shardings=self._shardings())
+        self.kv = self._copy_state_jit(self.kv, jnp.int32(src_slot),
+                                       jnp.int32(dst_slot))

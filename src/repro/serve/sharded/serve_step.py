@@ -1,0 +1,132 @@
+"""Jitted sharded serving steps: shard_map over the `mem` axis.
+
+The single-arena closures of `serve/serve_step.py`, lifted onto a device
+mesh (DESIGN.md §2).  The engine keeps talking GLOBAL pool page ids —
+the jitted step translates them per shard:
+
+  * the (b, max_pages) block table and the (b,)/(b, c) token inputs are
+    tiny and REPLICATED (the broadcast query of the near-memory layout);
+  * inside shard_map each device rewrites the table into LOCAL ids —
+    entries it owns become bank slots, everything else (other shards'
+    pages, the null sentinel) becomes its local null slot;
+  * the family hooks run UNCHANGED on the local view: page writes land
+    in resident pages (non-owned tokens fall into the local null sink),
+    and `cfg.mem_axis` flips the attention layer into resident-pages-
+    only partials mode + cross-shard log-sum-exp merge
+    (`models/layers.py` / `distribution/collectives.py`);
+  * out through the boundary travel only the updated LOCAL banks (which
+    never move) and the replicated (b, vocab) logits.
+
+Nothing page-sized ever crosses the interconnect — the HLO-structure
+test pins that: every collective in the compiled step is summary-sized.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.launch.mesh import MEM_AXIS
+from repro.models.config import ModelConfig
+from repro.models import registry
+from repro.serve.kv_cache import PAGED_KV_KEYS
+from repro.serve.serve_step import sample_logits
+
+
+def make_sharded_serve_fns(cfg: ModelConfig, mesh: Mesh, num_pages: int,
+                           *, temperature: float = 0.0,
+                           arena_keys=tuple(PAGED_KV_KEYS)):
+    """Sharded analogues of `make_paged_serve_fns` — same signatures,
+    GLOBAL block tables; `num_pages` is the global pool size (fixes the
+    static page→shard arithmetic).  `arena_keys` names the family's
+    arena leaves (non-KV leaves ride replicated)."""
+    fam = registry.get_family(cfg)
+    if not registry.has_paged(cfg):
+        raise ValueError(f"family {cfg.family!r} has no paged serving path")
+    n = mesh.shape[MEM_AXIS]
+    if num_pages % n:
+        raise ValueError(f"num_pages {num_pages} must divide over {n} shards")
+    pps = num_pages // n
+    scfg = cfg.replace(mem_axis=MEM_AXIS)
+    arena_specs = {k: (P(None, MEM_AXIS) if k in PAGED_KV_KEYS else P())
+                   for k in arena_keys}
+    rep = P()
+    cpu = jax.default_backend() == "cpu"
+
+    def to_local(bt):
+        """Global pool ids -> this shard's bank slots; foreign pages and
+        the null sentinel -> the local null slot (pps)."""
+        idx = jax.lax.axis_index(MEM_AXIS)
+        return jnp.where(bt // pps == idx, bt % pps, pps).astype(jnp.int32)
+
+    def prefill_body(params, chunk, arena, bt, start, clen):
+        return fam.paged_prefill(params, scfg, chunk, arena, to_local(bt),
+                                 start, clen)
+
+    prefill_sharded = shard_map(
+        prefill_body, mesh=mesh,
+        in_specs=(rep, rep, arena_specs, rep, rep, rep),
+        out_specs=(arena_specs, rep), check_rep=False)
+
+    def decode_body(params, arena, bt, positions, tokens):
+        return fam.paged_decode_step(params, scfg, arena, to_local(bt),
+                                     positions, tokens)
+
+    decode_sharded = shard_map(
+        decode_body, mesh=mesh,
+        in_specs=(rep, arena_specs, rep, rep, rep),
+        out_specs=(arena_specs, rep), check_rep=False)
+
+    @partial(jax.jit, donate_argnums=() if cpu else (2,))
+    def prefill_chunk(params, chunk, arena, block_table, start, chunk_len):
+        return prefill_sharded(params, chunk, arena, block_table, start,
+                               chunk_len)
+
+    @partial(jax.jit, donate_argnums=() if cpu else (1,))
+    def decode(params, arena, block_table, positions, tokens, key):
+        arena, logits = decode_sharded(params, arena, block_table, positions,
+                                       tokens)
+        key, sub = jax.random.split(key)
+        next_tokens = sample_logits(logits, sub, temperature)
+        return arena, next_tokens, key
+
+    return prefill_chunk, decode
+
+
+def lowered_sharded_hlo(cfg: ModelConfig, mesh: Mesh, which: str = "decode",
+                        *, max_batch: int = 2, max_seq: int = 64,
+                        page_size: int = 8, prefill_chunk: int = 8,
+                        params=None) -> str:
+    """Compile the jitted SHARDED serving step and return its optimized
+    HLO text — the interconnect-contract check greps this: every
+    collective op must be summary-sized (no page-sized operands cross
+    the mesh)."""
+    from repro.serve.sharded.arena import ShardedPagedKVArena
+
+    fam = registry.get_family(cfg)
+    if params is None:
+        params = fam.init(jax.random.key(0), cfg)
+    n = mesh.shape[MEM_AXIS]
+    num_pages = -(-max_batch * max_seq // page_size // n) * n
+    arena = ShardedPagedKVArena(cfg, num_pages=num_pages,
+                                page_size=page_size, max_batch=max_batch,
+                                mesh=mesh)
+    bt = jnp.zeros((max_batch, max_seq // page_size), jnp.int32)
+    zeros_b = jnp.zeros((max_batch,), jnp.int32)
+    prefill_fn, decode_fn = make_sharded_serve_fns(cfg, mesh, num_pages)
+    if which == "decode":
+        lowered = decode_fn.lower(params, arena.kv, bt, zeros_b, zeros_b,
+                                  jax.random.key(0))
+    elif which == "prefill":
+        chunk = {"tokens": jnp.zeros((max_batch, prefill_chunk), jnp.int32)}
+        if cfg.frontend == "patch":
+            chunk["patches"] = jnp.zeros(
+                (max_batch, prefill_chunk, cfg.frontend_dim), jnp.float32)
+        lowered = prefill_fn.lower(params, chunk, arena.kv, bt, zeros_b,
+                                   zeros_b)
+    else:
+        raise ValueError(which)
+    return lowered.compile().as_text()

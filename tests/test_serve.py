@@ -195,6 +195,178 @@ def test_engine_rejects_oversized_request():
                            max_new_tokens=8))
 
 
+# ------------------------------------------- COW / fork refcount chains
+
+def test_fork_of_fork_refcount_chain_and_cow_cascade():
+    """Grandchild forks: every page is held three ways; COW peels owners
+    off one at a time until the LAST holder becomes exclusive and writes
+    in place."""
+    pool = UniMemPool(num_pages=12, page_size=4)
+    a = SequencePageTable(pool)
+    a.append_tokens(10)                       # 3 pages, last partial
+    b = a.fork()
+    c = b.fork()                              # fork OF a fork
+    assert all(pool._refcount[p] == 3 for p in a.pages)
+    assert a.pages == b.pages == c.pages
+
+    moved_a = a.cow_last_page()               # 3 holders -> a splits off
+    assert moved_a is not None
+    assert pool._refcount[moved_a[0]] == 2    # b and c still share src
+    moved_b = b.cow_last_page()               # 2 holders -> b splits off
+    assert moved_b is not None and moved_b[0] == moved_a[0]
+    assert pool._refcount[moved_b[0]] == 1    # c is now exclusive...
+    assert c.cow_last_page() is None          # ...and writes in place
+    assert len({a.pages[-1], b.pages[-1], c.pages[-1]}) == 3
+    assert a.pages[:2] == b.pages[:2] == c.pages[:2]   # full pages shared
+    for t in (a, b, c):
+        t.release()
+    assert pool.free_pages == 12 and not pool._refcount
+
+
+def test_retire_mid_chain_keeps_surviving_forks_intact():
+    """Releasing the MIDDLE of a fork chain must not free pages the head
+    and tail still reference, and COW afterwards still works."""
+    pool = UniMemPool(num_pages=12, page_size=4)
+    a = SequencePageTable(pool)
+    a.append_tokens(10)
+    b = a.fork()
+    c = b.fork()
+    b.release()                               # retire mid-chain
+    assert all(pool._refcount[p] == 2 for p in a.pages)
+    assert c.pages == a.pages
+    moved = c.cow_last_page()                 # survivors still COW cleanly
+    assert moved is not None
+    assert pool._refcount[moved[0]] == 1      # a became exclusive
+    assert a.cow_last_page() is None
+    a.release(); c.release()
+    assert pool.free_pages == 12 and not pool._refcount
+
+
+def test_arena_write_after_double_fork_copies_once_per_writer():
+    """Device-content check through PagedKVArena.cow_for_write: after a
+    double fork, each writer's copy-on-write duplicates the page for
+    ITSELF and leaves every other holder's bytes untouched."""
+    cfg = TINY["dense"]
+    arena = PagedKVArena(cfg, num_pages=8, page_size=4)
+    a = arena.new_sequence()
+    a.append_tokens(6)                        # pages [p0, p1], p1 partial
+    p1 = a.pages[-1]
+    marker = jnp.full(arena.k.shape[2:], 7.0, arena.k.dtype)
+    arena.kv["k"] = arena.k.at[:, p1].set(marker)
+    b = a.fork()
+    c = b.fork()
+
+    assert arena.cow_for_write(a)             # shared -> device copy
+    pa = a.pages[-1]
+    assert pa != p1
+    np.testing.assert_array_equal(np.asarray(arena.k[:, pa]),
+                                  np.asarray(arena.k[:, p1]))
+    # a diverges; b and c still read the original bytes
+    arena.kv["k"] = arena.k.at[:, pa].set(marker * 2)
+    np.testing.assert_array_equal(
+        np.asarray(arena.k[:, p1]),
+        np.broadcast_to(np.asarray(marker), arena.k[:, p1].shape))
+    assert arena.cow_for_write(b)             # second writer copies again
+    pb = b.pages[-1]
+    assert pb not in (p1, pa)
+    assert not arena.cow_for_write(c)         # last holder: in-place
+    assert c.pages[-1] == p1
+    for t in (a, b, c):
+        t.release()
+    assert arena.pool.free_pages == 8
+
+
+def test_engine_fork_of_fork_serves_identical_tokens():
+    """End-to-end grandchild fork: parent, child and grandchild all emit
+    the solo run's greedy tokens, and the pool drains."""
+    cfg = TINY["dense"]
+    params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+    prompt = (np.arange(20, dtype=np.int32) * 7) % cfg.vocab_size
+
+    solo_eng = ServingEngine(cfg, params, max_batch=1, max_seq=64,
+                             page_size=8)
+    solo_eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=8))
+    want = {r.uid: r.tokens for r in solo_eng.run()}[0]
+
+    eng = ServingEngine(cfg, params, max_batch=3, max_seq=64, page_size=8)
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=8))
+    while not any(s.generated for s in eng.slots.values()):
+        eng.step()
+    eng.fork(0, new_uid=1)
+    eng.step()
+    eng.fork(1, new_uid=2)                    # fork OF the fork
+    res = {r.uid: r.tokens for r in eng.run()}
+    assert res == {0: want, 1: want, 2: want}
+    assert eng.pool.stats().allocated_pages == 0
+
+
+# ------------------------------------------------ watermark admission
+
+def test_watermark_admission_admits_prompts_that_fit_lazily():
+    """Regression for strict full-prompt reservation: a prompt whose
+    pages exceed the CURRENT free pool but whose first chunk fits must
+    be admitted and prefill into the freeing pool, not wait for the
+    draining slot to retire."""
+    cfg = TINY["dense"]
+    params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+    rng = np.random.default_rng(9)
+    a = rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
+    b = rng.integers(0, cfg.vocab_size, 32).astype(np.int32)
+
+    eng = ServingEngine(cfg, params, max_batch=2, max_seq=64, page_size=8,
+                        pool_pages=6, prefill_chunk=8)
+    eng.submit(Request(uid=0, prompt=a, max_new_tokens=8))
+    while not any(s.generated for s in eng.slots.values()):
+        eng.step()
+    eng.submit(Request(uid=1, prompt=b, max_new_tokens=4))
+    # full-prompt reservation would reject: 4 pages > what's free
+    assert eng.pool.free_pages < eng.pool.pages_for(len(b))
+    eng.step()
+    assert len(eng.slots) == 2, "second prompt was not admitted lazily"
+    toks = {r.uid: tuple(r.tokens) for r in eng.run()}
+
+    ample = ServingEngine(cfg, params, max_batch=2, max_seq=64, page_size=8,
+                          prefill_chunk=8)
+    ample.submit(Request(uid=0, prompt=a, max_new_tokens=8))
+    ample.submit(Request(uid=1, prompt=b, max_new_tokens=4))
+    want = {r.uid: tuple(r.tokens) for r in ample.run()}
+    assert toks == want
+    assert eng.pool.stats().allocated_pages == 0
+
+
+def test_high_watermark_preempts_before_hard_oom(monkeypatch):
+    """With a high watermark set, the engine sheds youngest slots as
+    allocation crosses it — BEFORE any allocator OOM — and still serves
+    every request with unchanged tokens."""
+    cfg = TINY["dense"]
+    params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+    rng = np.random.default_rng(10)
+    reqs = [dict(uid=i, prompt=rng.integers(0, cfg.vocab_size, 20)
+                 .astype(np.int32), max_new_tokens=6) for i in range(3)]
+
+    def run(high_watermark):
+        eng = ServingEngine(cfg, params, max_batch=4, max_seq=64,
+                            page_size=8, pool_pages=16,
+                            high_watermark=high_watermark)
+        preempted = []
+        orig = eng._preempt_slot
+        monkeypatch.setattr(
+            eng, "_preempt_slot",
+            lambda idx, victim: (preempted.append(victim.request.uid),
+                                 orig(idx, victim)))
+        for r in reqs:
+            eng.submit(Request(**r))
+        toks = {r.uid: tuple(r.tokens) for r in eng.run()}
+        return eng, toks, preempted
+
+    e_off, toks_off, pre_off = run(None)
+    assert pre_off == []                  # 12 pages fit 16: no hard OOM
+    e_on, toks_on, pre_on = run(0.5)
+    assert pre_on, "high watermark never preempted"
+    assert toks_on == toks_off            # shedding never changes tokens
+    assert e_on.pool.stats().allocated_pages == 0
+
+
 # ------------------------------------- cross-family parity matrix (paged)
 
 def _family_requests(cfg, n=4, seed=7, max_new=5, plen_hi=26):

@@ -1,0 +1,384 @@
+"""Near-memory sharded serving (`serve/sharded/` + the kernels' partials
+mode): the page arena distributed over a "mem" mesh axis.
+
+In-process: the partials-mode kernel/oracle contract (shard halves merge
+to the exact full softmax), the strided sharded allocator's invariants,
+and the 1-device-mesh degrade path.  Subprocess (8 forced host devices,
+like test_multidevice): byte-identical greedy tokens vs the
+single-device arena across the model zoo, per-shard residency ≈ total/n,
+and the interconnect contract on compiled HLO — every collective in the
+jitted sharded step is summary-sized; pages never cross the mesh.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core.unimem import (ShardedUniMemPool, SequencePageTable,
+                               UniMemOOM)
+from repro.kernels.decode_attention.kernel import combine_splits
+from repro.kernels.paged_attention.kernel import POS_PAD
+from repro.kernels.paged_attention.ops import paged_decode_attention
+from repro.kernels.paged_attention.ref import paged_decode_attention_ref
+from repro.kernels.paged_prefill.ops import paged_prefill_attention
+from repro.kernels.paged_prefill.ref import paged_prefill_attention_ref
+
+from conftest import TINY
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_with_devices(body: str, n: int = 8, timeout: int = 560) -> str:
+    code = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n}"
+        import sys
+        sys.path.insert(0, {os.path.join(REPO, "src")!r})
+        sys.path.insert(0, {os.path.join(REPO, "tests")!r})
+    """) + textwrap.dedent(body)
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, timeout=timeout, cwd=REPO)
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    return proc.stdout
+
+
+# --------------------------------------------- partials mode == full softmax
+
+def _arena(seed=0, b=3, hkv=2, hd=16, page=8, mp=4):
+    rng = np.random.default_rng(seed)
+    P = b * mp + 1
+    k = jnp.asarray(rng.standard_normal((P, page, hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((P, page, hkv, hd)), jnp.float32)
+    bt = jnp.asarray(rng.permutation(P - 1)[:b * mp].reshape(b, mp), jnp.int32)
+    return rng, k, v, bt
+
+
+def _strided_halves(bt, page, n=2):
+    """Split a block table the way two shards of a mem mesh would walk
+    it: shard s keeps logical slots s, s+n, ... with their absolute
+    positions."""
+    b, mp = bt.shape
+    out = []
+    for s in range(n):
+        cols = np.arange(s, mp, n)
+        ppos = jnp.broadcast_to(
+            (cols * page).astype(np.int32)[None, :], (b, len(cols)))
+        out.append((bt[:, cols], ppos))
+    return out
+
+
+@pytest.mark.parametrize("impl,ppb,mp,hd", [
+    ("kernel", 1, 4, 16),
+    ("kernel", 2, 5, 16),      # ppb > 1, non-dividing compacted width
+    ("kernel", 2, 4, 160),     # head dim past the 128 lane tile
+    ("ref", 1, 4, 16),
+])
+def test_decode_partials_of_strided_shards_merge_to_full_softmax(
+        impl, ppb, mp, hd):
+    rng, k, v, bt = _arena(mp=mp, hd=hd)
+    b, page, hq = 3, 8, 4
+    pos = jnp.asarray([mp * page - 1, 5, 17], jnp.int32)
+    q = jnp.asarray(rng.standard_normal((b, hq, hd)), jnp.float32)
+    want = paged_decode_attention_ref(q, k, v, bt, pos)
+
+    def partials(lbt, ppos):
+        if impl == "kernel":
+            return paged_decode_attention(q, k, v, lbt, pos,
+                                          pages_per_block=ppb,
+                                          page_positions=ppos, partials=True,
+                                          interpret=True)
+        return paged_decode_attention_ref(q, k, v, lbt, pos,
+                                          page_positions=ppos, partials=True)
+
+    parts = [partials(lbt, ppos) for lbt, ppos in _strided_halves(bt, page)]
+    m = jnp.stack([p[0] for p in parts], axis=1)        # (b, shards, hq)
+    l = jnp.stack([p[1] for p in parts], axis=1)
+    acc = jnp.stack([p[2] for p in parts], axis=1)
+    got = combine_splits(m, l, acc, b, hq, hd, jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("impl", ["kernel", "ref"])
+def test_prefill_partials_of_strided_shards_merge_to_full_softmax(impl):
+    rng, k, v, bt = _arena(seed=1)
+    b, mp, page, hd, hq, c = 3, 4, 8, 16, 4, 8
+    start = jnp.asarray([0, 5, 17], jnp.int32)
+    clen = jnp.asarray([0, 3, 8], jnp.int32)       # inert, ragged, full rows
+    q = jnp.asarray(rng.standard_normal((b, c, hq, hd)), jnp.float32)
+    want = paged_prefill_attention_ref(q, k, v, bt, start, clen)
+
+    def partials(lbt, ppos):
+        if impl == "kernel":
+            return paged_prefill_attention(q, k, v, lbt, start, clen,
+                                           page_positions=ppos, partials=True,
+                                           interpret=True)
+        return paged_prefill_attention_ref(q, k, v, lbt, start, clen,
+                                           page_positions=ppos, partials=True)
+
+    parts = [partials(lbt, ppos) for lbt, ppos in _strided_halves(bt, page)]
+    m = jnp.stack([p[0] for p in parts], axis=1).reshape(b, 2, c * hq)
+    l = jnp.stack([p[1] for p in parts], axis=1).reshape(b, 2, c * hq)
+    acc = jnp.stack([p[2] for p in parts], axis=1).reshape(b, 2, c * hq, hd)
+    got = combine_splits(m, l, acc, b, c * hq, hd, jnp.float32).reshape(
+        b, c, hq, hd)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    # the ragged-tail zero contract survives the merge
+    assert np.all(np.asarray(got[0]) == 0.0)
+
+
+def test_pos_pad_sentinel_slots_are_inert():
+    """Slots carrying the POS_PAD page position (holes in a shard's
+    compacted walk) contribute nothing, whatever page they name."""
+    rng, k, v, bt = _arena(seed=2)
+    b, mp, page, hd, hq = 3, 4, 8, 16, 4
+    pos = jnp.asarray([mp * page - 1, 5, 17], jnp.int32)
+    q = jnp.asarray(rng.standard_normal((b, hq, hd)), jnp.float32)
+    ppos = jnp.broadcast_to(
+        (jnp.arange(mp, dtype=jnp.int32) * page)[None, :], (b, mp))
+    base = paged_decode_attention(q, k, v, bt, pos, page_positions=ppos,
+                                  partials=True, interpret=True)
+    # append a column pointing at a REAL page but with the sentinel pos
+    bt2 = jnp.concatenate([bt, bt[:, :1]], axis=1)
+    ppos2 = jnp.concatenate(
+        [ppos, jnp.full((b, 1), POS_PAD, jnp.int32)], axis=1)
+    got = paged_decode_attention(q, k, v, bt2, pos, page_positions=ppos2,
+                                 partials=True, interpret=True)
+    for a, b_ in zip(base, got):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------------------- sharded allocator laws
+
+def test_sharded_pool_strides_sequences_across_banks():
+    pool = ShardedUniMemPool(16, 4, num_shards=4)
+    seq = SequencePageTable(pool)
+    seq.append_tokens(13)                      # 4 pages
+    assert [pool.shard_of(p) for p in seq.pages] == [0, 1, 2, 3]
+    seq.append_tokens(4)                       # logical page 4 -> shard 0
+    assert pool.shard_of(seq.pages[4]) == 0
+    seq.release()
+    assert pool.free_pages == 16
+
+
+def test_sharded_pool_per_bank_oom_and_fits():
+    pool = ShardedUniMemPool(8, 4, num_shards=4)    # 2 pages per bank
+    a, b = SequencePageTable(pool), SequencePageTable(pool)
+    a.append_tokens(8)                         # logical 0,1 -> shards 0,1
+    b.append_tokens(8)
+    c = SequencePageTable(pool)
+    assert not pool.fits(0, 1)                 # bank 0 is full...
+    assert pool.fits(2, 1)                     # ...bank 2 is empty
+    free_before = pool.free_pages
+    with pytest.raises(UniMemOOM):
+        c.append_tokens(1)                     # wants bank 0
+    assert pool.free_pages == free_before      # OOM never mutates
+    assert c.num_tokens == 0 and not c.pages
+    # refcount conservation across the whole walk
+    held = a.pages + b.pages
+    assert len(set(held)) + pool.free_pages == pool.num_pages
+    a.release(); b.release()
+    assert pool.free_pages == 8
+
+
+def test_sharded_pool_cow_and_fork_stay_on_shard():
+    pool = ShardedUniMemPool(12, 4, num_shards=4)
+    seq = SequencePageTable(pool)
+    seq.append_tokens(10)                      # 3 pages on shards 0,1,2
+    fork = seq.fork()
+    moved = seq.cow_last_page()
+    assert moved is not None
+    src, dst = moved
+    assert pool.shard_of(src) == pool.shard_of(dst) == 2
+    assert fork.pages[2] == src                # peer keeps the original
+    seq.release(); fork.release()
+    assert pool.free_pages == 12
+
+
+def test_sharded_pool_untracked_alloc_spreads_least_loaded():
+    pool = ShardedUniMemPool(8, 4, num_shards=4)
+    pages = pool.alloc(4)                      # no logical index: spread
+    assert sorted(pool.shard_of(p) for p in pages) == [0, 1, 2, 3]
+    stats = pool.shard_stats()
+    assert all(s["allocated_pages"] == 1 for s in stats)
+    pool.free(pages)
+
+
+# ------------------------------------------------------- degrade path
+
+def test_one_device_mem_mesh_degrades_to_plain_paged_path():
+    """A 1-device mesh must be a no-op wrapper: same engine internals,
+    same tokens as no mesh at all."""
+    from repro.launch.mesh import make_mem_mesh
+    from repro.models import registry
+    from repro.serve import ServingEngine, Request
+    from repro.serve.kv_cache import PagedKVArena
+    from repro.serve.sharded import ShardedPagedKVArena
+
+    cfg = TINY["dense"]
+    params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+    prompt = (np.arange(11, dtype=np.int32) * 11) % cfg.vocab_size
+
+    def run(mesh):
+        eng = ServingEngine(cfg, params, max_batch=2, max_seq=64,
+                            page_size=8, mesh=mesh)
+        eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=4))
+        return eng, {r.uid: tuple(r.tokens) for r in eng.run()}
+
+    e1, t1 = run(make_mem_mesh(1))
+    e0, t0 = run(None)
+    assert e1.mesh is None
+    assert type(e1.arena) is PagedKVArena
+    assert not isinstance(e1.arena, ShardedPagedKVArena)
+    assert t1 == t0
+
+
+# ---------------------------------------- 8-device parity + residency
+
+@pytest.mark.slow
+@pytest.mark.parametrize("family", ["dense", "moe", "hybrid", "vlm"])
+def test_sharded_arena_matches_single_device_tokens(family):
+    """Acceptance: byte-identical greedy tokens on a forced 8-device mem
+    mesh vs the single-device arena, per-shard page-leaf bytes == total/8,
+    pages drained, and residency spread over every bank."""
+    run_with_devices(f"""
+        import numpy as np, jax
+        from conftest import TINY
+        from repro.models import registry
+        from repro.serve import ServingEngine, Request
+        from repro.serve.kv_cache import PAGED_KV_KEYS
+        from repro.launch.mesh import make_mem_mesh
+
+        family = {family!r}
+        cfg = TINY[family]
+        params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+        rng = np.random.default_rng(sum(map(ord, family)))
+        reqs = []
+        for i in range(4):
+            pe = (rng.standard_normal((cfg.num_patches, cfg.frontend_dim))
+                  .astype(np.float32) if cfg.frontend == "patch" else None)
+            reqs.append(dict(
+                uid=i, max_new_tokens=4, patch_embeds=pe,
+                prompt=rng.integers(0, cfg.vocab_size,
+                                    int(rng.integers(3, 28))
+                                    ).astype(np.int32)))
+
+        def run(mesh):
+            eng = ServingEngine(cfg, params, max_batch=2, max_seq=64,
+                                page_size=8, mesh=mesh, prefill_chunk=8)
+            for r in reqs:
+                eng.submit(Request(**r))
+            return eng, {{r.uid: tuple(r.tokens) for r in eng.run()}}
+
+        _, single = run(None)
+        eng, shard = run(make_mem_mesh(8))
+        assert shard == single, (single, shard)
+        assert eng.pool.stats().allocated_pages == 0
+
+        # per-shard residency: each bank holds exactly total/8 of the
+        # page leaves, verified from the arrays' actual placement
+        per_shard = eng.arena.shard_kv_bytes()
+        total = sum(int(eng.arena.kv[k].size) * eng.arena.kv[k].dtype.itemsize
+                    for k in PAGED_KV_KEYS)
+        assert len(per_shard) == 8
+        assert all(s == total // 8 for s in per_shard), (per_shard, total)
+
+        # the workload actually touched several banks (strided placement)
+        peaks = [s["peak_allocated_pages"] for s in eng.pool.shard_stats()]
+        assert sum(1 for p in peaks if p > 0) >= 3, peaks
+        print(family, "sharded == single:", shard == single, "peaks", peaks)
+    """)
+
+
+@pytest.mark.slow
+def test_sharded_step_collectives_are_summary_sized():
+    """The interconnect contract on COMPILED HLO: the jitted sharded
+    decode step merges per-shard softmax summaries — every collective's
+    result is orders below a page bank; no page-sized operand crosses
+    the mesh.  (Geometry chosen so pages dwarf summaries: one bank layer
+    is ~20 KB, the (b, hq, hd) acc summary 0.5 KB.)"""
+    run_with_devices("""
+        import jax
+        from conftest import TINY
+        from repro.launch.mesh import make_mem_mesh
+        from repro.launch import hlo_analysis as H
+        from repro.serve.sharded import lowered_sharded_hlo
+
+        cfg = TINY["dense"]
+        mesh = make_mem_mesh(8)
+        geom = dict(max_batch=2, max_seq=512, page_size=32)
+        text = lowered_sharded_hlo(cfg, mesh, "decode", **geom)
+        prog = H.parse_hlo(text)
+        colls = [op for op in prog.ops.values()
+                 if op.opcode in H.COLLECTIVE_KINDS]
+        assert colls, "sharded decode step must merge partials"
+
+        # local bank: (pps+1, page, hkv, hd) f32 per layer per K/V
+        pps = (geom["max_batch"] * geom["max_seq"]
+               // geom["page_size"]) // 8
+        bank_bytes = (pps + 1) * geom["page_size"] * cfg.num_kv_heads \\
+            * cfg.head_dim * 4
+        # gathered-KV bulk (what a naive layout would ship):
+        bulk_bytes = geom["max_batch"] * geom["max_seq"] \\
+            * cfg.num_kv_heads * cfg.head_dim * 4
+        worst = max(op.result_bytes for op in colls)
+        assert worst < bank_bytes / 2, (worst, bank_bytes)
+        assert worst < bulk_bytes / 8, (worst, bulk_bytes)
+        print("collectives:", {op.opcode: op.result_type for op in colls})
+        print("worst", worst, "bank", bank_bytes, "bulk", bulk_bytes)
+    """)
+
+
+@pytest.mark.slow
+def test_sharded_engine_backpressure_and_fork_on_mesh():
+    """Per-bank OOM behaves like pool OOM: preemption-as-backpressure
+    still serves everything, and a COW fork on the mesh stays
+    byte-identical to the un-forked run."""
+    run_with_devices("""
+        import numpy as np, jax
+        from conftest import TINY
+        from repro.models import registry
+        from repro.serve import ServingEngine, Request
+        from repro.launch.mesh import make_mem_mesh
+
+        cfg = TINY["dense"]
+        params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+        mesh = make_mem_mesh(4)
+
+        # tight pool: 8 pages over 4 banks, three 5-page sequences
+        eng = ServingEngine(cfg, params, max_batch=4, max_seq=64,
+                            page_size=8, pool_pages=8, mesh=mesh)
+        for i in range(3):
+            eng.submit(Request(uid=i, prompt=np.arange(30, dtype=np.int32),
+                               max_new_tokens=8))
+        toks = {r.uid: tuple(r.tokens) for r in eng.run()}
+        assert sorted(toks) == [0, 1, 2]
+        assert all(len(t) == 8 for t in toks.values())
+        assert eng.pool.stats().allocated_pages == 0
+
+        # fork on the mesh
+        prompt = (np.arange(20, dtype=np.int32) * 7) % cfg.vocab_size
+        solo = ServingEngine(cfg, params, max_batch=1, max_seq=64,
+                             page_size=8)
+        solo.submit(Request(uid=0, prompt=prompt, max_new_tokens=8))
+        want = {r.uid: r.tokens for r in solo.run()}[0]
+        eng = ServingEngine(cfg, params, max_batch=2, max_seq=64,
+                            page_size=8, mesh=mesh)
+        eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=8))
+        while not any(s.generated for s in eng.slots.values()):
+            eng.step()
+        eng.fork(0, new_uid=1)
+        res = {r.uid: r.tokens for r in eng.run()}
+        assert res[0] == want and res[1] == want, (want, res)
+        assert eng.pool.stats().allocated_pages == 0
+        print("backpressure + fork on mesh OK")
+    """)
