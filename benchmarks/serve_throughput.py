@@ -18,16 +18,20 @@ interpret mode off-TPU) with N pages per grid cell — the CI smoke for
 the TPU-tiled hot path.  `--shards N` serves the paged side from the
 NEAR-MEMORY SHARDED arena (`serve/sharded/`) on an N-device "mem" mesh
 (CI forces host devices via XLA_FLAGS) — same token-parity and KV
-gates, plus per-shard page high-water in the report.  `--json PATH`
-additionally writes a machine-readable `BENCH_serve.json`
-(`"schema": 2` — tokens/s, peak KV bytes, shard topology + per-shard
-KV high-water, and the compiled-HLO attention traffic of the jitted
-steps before/after the kernel fusion: the oracle formulation's
-gathered-KV/partials bytes vs the fused kernels' zero).
+gates, plus per-shard page high-water in the report.  `--sampling` adds
+the IN-STEP sampling sweep: the same dense stream rerun with
+per-request temperature + top-p + seeds (serve/sampling.py lowers them
+into the jitted step), gated on seed-replay determinism, reporting
+greedy vs sampled tokens/s so the sampling overhead is tracked.
+`--json PATH` additionally writes a machine-readable `BENCH_serve.json`
+(`"schema": 3` — tokens/s, peak KV bytes, shard topology + per-shard
+KV high-water, the sampling-mode sweep, and the compiled-HLO attention
+traffic of the jitted steps before/after the kernel fusion: the oracle
+formulation's gathered-KV/partials bytes vs the fused kernels' zero).
 
     PYTHONPATH=src python benchmarks/serve_throughput.py \
         [--family dense,moe,hybrid,vlm] [--impl flash_pallas] [--ppb 2] \
-        [--shards 8] [--json BENCH_serve.json]
+        [--shards 8] [--sampling] [--json BENCH_serve.json]
 """
 from __future__ import annotations
 
@@ -41,11 +45,12 @@ import jax
 
 from repro.models.config import ModelConfig
 from repro.models import registry
-from repro.serve import ServingEngine, Request
+from repro.serve import ServingEngine, Request, SamplingParams
 
 # machine-readable result schema, versioned so trajectory tooling can
-# evolve: 2 added shard topology + per-shard KV high-water
-SCHEMA = 2
+# evolve: 2 added shard topology + per-shard KV high-water; 3 added the
+# --sampling sweep (mode, greedy vs sampled tokens/s, determinism gate)
+SCHEMA = 3
 
 CFG = ModelConfig(
     name="bench-dense", family="dense", num_layers=2, d_model=64,
@@ -176,8 +181,54 @@ def _attention_hlo_stats(cfg) -> dict:
     return out
 
 
+def _sampling_sweep(cfg, params, mesh=None) -> dict:
+    """Greedy vs per-request-sampled serving on the SAME stream.
+
+    Every request carries its own SamplingParams (temperature ramp,
+    top-p nucleus, top-k on odd uids, per-request seed) lowered into
+    the jitted step.  PASS requires (a) a seed replay reproduces the
+    sampled tokens byte-for-byte (counter-derived randomness — the
+    determinism the API guarantees) and (b) the sampled run actually
+    diverges from greedy somewhere (the knobs reach the kernel).
+    Reported tokens/s tracks the in-step sampling overhead."""
+    mb, ms, mnew = 4, 128, 8
+    rng = np.random.default_rng(12345)
+    prompts = [rng.integers(0, cfg.vocab_size, int(rng.integers(4, 48)))
+               .astype(np.int32) for _ in range(8)]
+
+    def params_for(uid):
+        return SamplingParams(temperature=0.7 + 0.05 * uid,
+                              top_k=8 if uid % 2 else 0, top_p=0.9,
+                              seed=uid, max_new_tokens=mnew)
+
+    def serve(sampled):
+        eng = ServingEngine(cfg, params, max_batch=mb, max_seq=ms,
+                            page_size=16, mesh=mesh)
+        for uid, p in enumerate(prompts):
+            eng.submit(Request(
+                uid=uid, prompt=p.copy(),
+                sampling=params_for(uid) if sampled
+                else SamplingParams(max_new_tokens=mnew)))
+        t0 = time.perf_counter()
+        toks = {r.uid: tuple(r.tokens) for r in eng.run()}
+        dt = time.perf_counter() - t0
+        return toks, sum(len(t) for t in toks.values()) / dt
+
+    greedy, greedy_tok_s = serve(sampled=False)
+    sampled, sampled_tok_s = serve(sampled=True)
+    replay, _ = serve(sampled=True)
+    deterministic = sampled == replay
+    diverged = sampled != greedy
+    return dict(mode="per-request temperature + top-p (+ top-k odd uids)",
+                requests=len(prompts),
+                greedy_tok_s=greedy_tok_s, sampled_tok_s=sampled_tok_s,
+                sampled_over_greedy=sampled_tok_s / greedy_tok_s,
+                deterministic=deterministic, diverged_from_greedy=diverged,
+                ok=deterministic and diverged)
+
+
 def run(families=None, impl=None, ppb=1, attn_hlo=False,
-        shards: int = 1) -> dict:
+        shards: int = 1, sampling: bool = False) -> dict:
     families = families or list(FAMILY_CFGS)
     mesh = None
     if shards > 1:
@@ -229,6 +280,11 @@ def run(families=None, impl=None, ppb=1, attn_hlo=False,
                                  else None,
                                  "devices": jax.device_count(),
                                  "backend": jax.default_backend()}}
+    if sampling:
+        cfg = cfg_of("dense")
+        params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+        result["sampling"] = _sampling_sweep(cfg, params, mesh=mesh)
+        result["ok"] = ok = ok and result["sampling"]["ok"]
     if attn_hlo:
         result["attention_hlo"] = _attention_hlo_stats(FAMILY_CFGS["dense"])
         # the fused steps must ship ZERO bulk attention bytes
@@ -261,6 +317,13 @@ def pretty(result: dict):
               f"{r['contig_kv_mb']:>14.3f}{r['paged_kv_mb']:>13.3f}"
               f"{r['kv_ratio']:>10.2f}  "
               f"{'==' if r['tokens_match'] else 'DIFFER'}{shard}")
+    s = result.get("sampling")
+    if s:
+        print(f"   in-step sampling [{s['mode']}]: greedy "
+              f"{s['greedy_tok_s']:.1f} tok/s -> sampled "
+              f"{s['sampled_tok_s']:.1f} tok/s "
+              f"({s['sampled_over_greedy']:.2f}x); seed replay "
+              f"{'identical' if s['deterministic'] else 'DIVERGED'}")
     h = result.get("attention_hlo")
     if h:
         print("   jitted-step attention traffic (compiled HLO, dense): "
@@ -290,12 +353,16 @@ if __name__ == "__main__":
                          "SHARDED arena on an N-device 'mem' mesh "
                          "(needs N devices, e.g. XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--sampling", action="store_true",
+                    help="add the in-step sampling sweep (per-request "
+                         "temperature + top-p + seeds on the dense "
+                         "stream; gated on seed-replay determinism)")
     ap.add_argument("--json", nargs="?", const="BENCH_serve.json",
                     default=None, metavar="PATH",
-                    help="write machine-readable results (schema 2: "
+                    help="write machine-readable results (schema 3: "
                          "tokens/s, peak KV bytes, shard topology, "
-                         "attention HBM bytes before/after the kernel "
-                         "fusion) to PATH")
+                         "sampling-mode sweep, attention HBM bytes "
+                         "before/after the kernel fusion) to PATH")
     args = ap.parse_args()
     fams = [f.strip() for f in args.family.split(",") if f.strip()]
     unknown = [f for f in fams if f not in FAMILY_CFGS]
@@ -306,7 +373,8 @@ if __name__ == "__main__":
            "error": "run() raised before completing"}
     try:
         res = run(fams, impl=args.impl, ppb=args.ppb,
-                  attn_hlo=bool(args.json), shards=args.shards)
+                  attn_hlo=bool(args.json), shards=args.shards,
+                  sampling=args.sampling)
         pretty(res)
     finally:
         # write even when run() raises: the (partial) record is exactly

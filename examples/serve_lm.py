@@ -1,12 +1,23 @@
-"""Serving example (README): paged-native continuous batching + UniMem
-prefix sharing + near-memory sharded serving.
+"""Serving example (README): streaming generation + per-request sampling
++ paged-native continuous batching + UniMem prefix sharing + near-memory
+sharded serving.
 
-    PYTHONPATH=src python examples/serve_lm.py [--devices N]
+    PYTHONPATH=src python examples/serve_lm.py [--devices N] [--stream]
+        [--temperature T] [--top-k K] [--top-p P] [--seed S]
 
-Submits a bursty stream of mixed-length requests to the paged engine
-(lazy page allocation: pool memory tracks tokens in flight), prints
-per-request latency, throughput, and the page-pool high-water mark; then
-demonstrates the two UniMem sharing paths end-to-end on devices:
+`--stream` demonstrates the public API (`repro.serve.LLMServer`):
+`generate(prompt, SamplingParams(...))` returns a `GenerationStream`
+that yields `TokenEvent`s AS THE ENGINE TICKS — tokens print the moment
+the jitted step emits them (sampling runs inside the step; the host
+never sees logits) — and `stream.fork(params)` branches the in-flight
+sequence under a second sampling regime over shared copy-on-write
+pages.  The sampling flags set the per-request `SamplingParams`
+(temperature 0 = greedy default; each request gets seed S + uid).
+
+Without `--stream` the example runs the classic batch loop: a bursty
+stream of mixed-length requests through the paged engine (lazy page
+allocation: pool memory tracks tokens in flight), then the two UniMem
+sharing paths end-to-end on devices:
 
   * prefix sharing — identical prompts reuse each other's prompt pages
     through the page-hash cache (refcounts, zero copies, zero
@@ -17,23 +28,67 @@ demonstrates the two UniMem sharing paths end-to-end on devices:
 
 `--devices N` (default 1) runs the same stream on an N-device "mem"
 mesh — the near-memory SHARDED arena of DESIGN.md §2: each device owns
-a bank of pages, sequences interleave their pages across all banks,
-and only softmax summaries cross the interconnect.  On a CPU-only host
-the flag forces N host devices (the XLA_FLAGS shim below), so the
-whole sharded path is demonstrable on a laptop; greedy tokens are
-byte-identical to the single-device run.
+a bank of pages, sequences interleave their pages across all banks
+under per-prompt rotations, and only softmax summaries cross the
+interconnect.  On a CPU-only host the flag forces N host devices (the
+XLA_FLAGS shim below); tokens are byte-identical to the single-device
+run.
 """
 from __future__ import annotations
 
 
-def main(devices: int = 1):
+def demo_stream(cfg, params, sp, seed: int, mesh=None):
+    """The streaming API: tokens print as the engine emits them, then a
+    fork decodes the same prompt under a second sampling regime from
+    shared COW pages.  With a mesh, the same streams serve from the
+    near-memory sharded arena."""
+    import numpy as np
+
+    from repro.serve import (LLMServer, SamplingParams, TokenEvent,
+                             FinishEvent)
+
+    rng = np.random.default_rng(seed)
+    server = LLMServer(cfg, params, max_batch=4, max_seq=128, page_size=16,
+                       mesh=mesh)
+    prompts = [rng.integers(0, cfg.vocab_size, int(rng.integers(8, 40)))
+               .astype(np.int32) for _ in range(3)]
+    streams = [server.generate(
+        p, SamplingParams(temperature=sp.temperature, top_k=sp.top_k,
+                          top_p=sp.top_p, seed=sp.seed + i,
+                          max_new_tokens=12))
+        for i, p in enumerate(prompts)]
+
+    print("== streaming: tokens as the engine ticks ==")
+    for i, stream in enumerate(streams):
+        for ev in stream:
+            if isinstance(ev, TokenEvent):
+                print(f"  req{i} t{ev.index}: {ev.token}", flush=True)
+            elif isinstance(ev, FinishEvent):
+                print(f"  req{i} finished ({ev.reason}): "
+                      f"{ev.result.tokens}")
+
+    # fork: one prompt, two sampling regimes, shared COW pages
+    parent = server.generate(prompts[0], SamplingParams(
+        max_new_tokens=10, seed=sp.seed))                 # greedy parent
+    child = parent.fork(SamplingParams(temperature=0.9, top_p=0.9,
+                                       seed=sp.seed + 99,
+                                       max_new_tokens=10))
+    shared = server.engine.pool.stats().shared_pages
+    a, b = parent.drain(), child.drain()
+    print(f"fork: {shared} pages shared at branch point")
+    print(f"  greedy  : {a.tokens}")
+    print(f"  sampled : {b.tokens}")
+
+
+def main(devices: int = 1, stream: bool = False, temperature: float = 0.0,
+         top_k: int = 0, top_p: float = 1.0, seed: int = 0):
     import numpy as np
     import jax
 
     from repro.configs import get_arch
     from repro.models.config import reduced_for_smoke
     from repro.models import registry
-    from repro.serve import ServingEngine, Request
+    from repro.serve import (ServingEngine, Request, SamplingParams)
 
     mesh = None
     if devices > 1:
@@ -46,22 +101,34 @@ def main(devices: int = 1):
     cfg = reduced_for_smoke(spec.model, max_seq=128)
     fam = registry.get_family(cfg)
     params = fam.init(jax.random.key(0), cfg)
+    sp = SamplingParams(temperature=temperature, top_k=top_k, top_p=top_p,
+                        seed=seed)
+
+    if stream:
+        demo_stream(cfg, params, sp, seed, mesh=mesh)
+        return
 
     engine = ServingEngine(cfg, params, max_batch=4, max_seq=128,
                            page_size=16, mesh=mesh)
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(seed)
     for uid in range(12):
         plen = int(rng.integers(4, 80))
         engine.submit(Request(
-            uid=uid, prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
-            max_new_tokens=int(rng.integers(4, 16))))
+            uid=uid,
+            prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
+            sampling=SamplingParams(
+                temperature=temperature, top_k=top_k, top_p=top_p,
+                seed=seed + uid,
+                max_new_tokens=int(rng.integers(4, 16)))))
 
     results = engine.run()
     lats = sorted(r.latency_s for r in results)
     st = engine.pool.stats()
     arena = "sharded arena" if engine.mesh is not None else "arena"
-    print(f"[{engine.layout}/{arena}] served {len(results)} requests | "
-          f"p50 {lats[len(lats) // 2]:.2f}s p95 {lats[-1]:.2f}s | "
+    mode = "greedy" if temperature == 0.0 else (
+        f"T={temperature} k={top_k} p={top_p}")
+    print(f"[{engine.layout}/{arena}/{mode}] served {len(results)} requests"
+          f" | p50 {lats[len(lats) // 2]:.2f}s p95 {lats[-1]:.2f}s | "
           f"{engine.tokens_out} tokens in {engine.steps} engine steps")
     print(f"pool: peak {st.peak_allocated_pages}/{st.num_pages} pages "
           f"({engine.peak_kv_bytes() / 1e6:.2f} MB KV high-water vs "
@@ -109,6 +176,17 @@ if __name__ == "__main__":
     ap.add_argument("--devices", type=int, default=1,
                     help="serve from a sharded arena on an N-device "
                          "'mem' mesh (forces N host devices on CPU)")
+    ap.add_argument("--stream", action="store_true",
+                    help="demo the streaming LLMServer.generate API "
+                         "(tokens print as emitted; fork under a second "
+                         "sampling regime)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0, help="top-k (0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus mass (1.0 = off)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base sampling seed (uid added per request)")
     args = ap.parse_args()
     if args.devices > 1:
         # host-platform shim: must land before jax initializes, which is
@@ -116,4 +194,5 @@ if __name__ == "__main__":
         os.environ["XLA_FLAGS"] = (
             os.environ.get("XLA_FLAGS", "")
             + f" --xla_force_host_platform_device_count={args.devices}")
-    main(args.devices)
+    main(args.devices, stream=args.stream, temperature=args.temperature,
+         top_k=args.top_k, top_p=args.top_p, seed=args.seed)

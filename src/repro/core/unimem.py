@@ -124,9 +124,12 @@ class ShardedUniMemPool(UniMemPool):
     """UniMem pool distributed over `num_shards` near-memory banks
     (DESIGN.md §2): physical ids are blocked per shard (page p lives on
     shard p // pages_per_shard) while LOGICAL placement is strided —
-    logical page j of every sequence is allocated from shard j % n, so
-    one sequence's pages interleave over all chips and both KV capacity
-    and attention bandwidth scale with the mesh.
+    logical page j of a sequence is allocated from shard
+    (rotation + j) % n (the rotation arrives folded into `start` by
+    `SequencePageTable`), so one sequence's pages interleave over all
+    chips and both KV capacity and attention bandwidth scale with the
+    mesh, while per-prompt rotations keep page 0 of short prompts from
+    piling onto one bank.
 
     The strided invariant is what lets each shard COMPACT its block-table
     walk to a static width of ceil(max_pages/n) columns (the jitted step
@@ -231,17 +234,27 @@ class ShardedUniMemPool(UniMemPool):
 @dataclass
 class SequencePageTable:
     """Per-sequence logical->physical page map, length in tokens.
-    Allocations carry the LOGICAL index of the page they extend, so a
-    sharded pool can keep logical page j resident on shard j % n."""
+    Allocations carry the LOGICAL index of the page they extend (offset
+    by `rotation`), so a sharded pool can keep logical page j resident
+    on shard (rotation + j) % n.
+
+    `rotation` is the per-prompt shard offset (0 on a single pool, where
+    it is inert): without it, page 0 of EVERY sequence lands on shard 0
+    and many-short-prompt loads concentrate on one bank.  The engine
+    derives it from a hash of the prompt's first full page, so
+    prefix-sharing partners compute the same rotation and shared pages
+    keep serving the same logical index on the same shard."""
     pool: UniMemPool
     pages: list[int] = field(default_factory=list)
     num_tokens: int = 0
+    rotation: int = 0
 
     def append_tokens(self, n: int) -> list[int]:
         """Extend by n tokens, allocating pages as needed (copy-on-write is
         the caller's job for shared last pages)."""
         need = self.pool.pages_for(self.num_tokens + n) - len(self.pages)
-        new = self.pool.alloc(need, start=len(self.pages)) if need > 0 else []
+        new = (self.pool.alloc(need, start=self.rotation + len(self.pages))
+               if need > 0 else [])
         self.pages.extend(new)
         self.num_tokens += n
         return new
@@ -249,7 +262,8 @@ class SequencePageTable:
     def fork(self) -> "SequencePageTable":
         """Share the full prefix with a new sequence (no copy)."""
         self.pool.share(self.pages)
-        return SequencePageTable(self.pool, list(self.pages), self.num_tokens)
+        return SequencePageTable(self.pool, list(self.pages), self.num_tokens,
+                                 self.rotation)
 
     def cow_last_page(self) -> tuple[int, int] | None:
         """Copy-on-write: swap a SHARED last page for a private one before
@@ -260,7 +274,7 @@ class SequencePageTable:
         if not self.pages or not self.pool.is_shared(self.pages[-1]):
             return None
         src = self.pages[-1]
-        dst = self.pool.alloc(1, start=len(self.pages) - 1)[0]
+        dst = self.pool.alloc(1, start=self.rotation + len(self.pages) - 1)[0]
         self.pool.free([src])               # drop our ref; peers keep theirs
         self.pages[-1] = dst
         return src, dst

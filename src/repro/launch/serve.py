@@ -2,7 +2,11 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
         --reduced --requests 16 --max-new 24 [--layout paged|contiguous] \
-        [--shards N]
+        [--shards N] [--temperature T --top-k K --top-p P --sample-seed S]
+
+Sampling flags build per-request `SamplingParams` (serve/sampling.py)
+executed INSIDE the jitted step — each request gets its own seed
+(base + uid), so reruns are reproducible while requests decorrelate.
 
 Spins up a reduced (or full, on real hardware) model, submits a synthetic
 request stream with mixed prompt lengths (vlm arches get synthetic patch
@@ -28,7 +32,7 @@ import jax
 from repro.configs import get_arch
 from repro.models.config import reduced_for_smoke
 from repro.models import registry
-from repro.serve import ServingEngine, Request
+from repro.serve import ServingEngine, Request, SamplingParams
 from repro.utils.logging import get_logger
 
 log = get_logger("serve")
@@ -52,6 +56,14 @@ def main(argv=None):
                     help="shard the paged arena over an N-device 'mem' "
                          "mesh (near-memory serving; needs N devices)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="per-request sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="per-request top-k cutoff (0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="per-request nucleus mass (1.0 = off)")
+    ap.add_argument("--sample-seed", type=int, default=0,
+                    help="base sampling seed (request uid is added)")
     args = ap.parse_args(argv)
 
     spec = get_arch(args.arch)
@@ -89,14 +101,20 @@ def main(argv=None):
         prompt = rng.integers(0, cfg.vocab_size, (plen,)).astype(np.int32)
         pe = (rng.standard_normal((patches, cfg.frontend_dim))
               .astype(np.float32) if patches else None)
-        engine.submit(Request(uid=i, prompt=prompt,
-                              max_new_tokens=args.max_new, patch_embeds=pe))
+        engine.submit(Request(
+            uid=i, prompt=prompt, patch_embeds=pe,
+            sampling=SamplingParams(
+                temperature=args.temperature, top_k=args.top_k,
+                top_p=args.top_p, seed=args.sample_seed + i,
+                max_new_tokens=args.max_new)))
 
     results = engine.run()
     lat = sorted(r.latency_s for r in results)
-    log.info("served %d requests; latency p50 %.3fs p95 %.3fs; stats=%s",
-             len(results), lat[len(lat) // 2], lat[int(len(lat) * 0.95)],
-             engine.stats())
+    mode = ("greedy" if args.temperature == 0.0 else
+            f"T={args.temperature} k={args.top_k} p={args.top_p}")
+    log.info("served %d requests (%s); latency p50 %.3fs p95 %.3fs; "
+             "stats=%s", len(results), mode, lat[len(lat) // 2],
+             lat[int(len(lat) * 0.95)], engine.stats())
     return results
 
 

@@ -308,6 +308,8 @@ def paged_prefill(params, cfg: ModelConfig, chunk, arena, block_table,
     live = (start > 0).astype(arena["conv"].dtype)
     conv0 = arena["conv"] * live[None, None, :, None, None]
     ssm0 = arena["ssm"] * live[None, None, :, None, None, None]
+    # sharded step: localized table for page writes, global for the walk
+    wbt = L.localize_block_table(cfg, block_table, arena["k"].shape[1] - 1)
 
     def inner(h, xs):
         p, conv_c, ssm_c = xs
@@ -326,8 +328,8 @@ def paged_prefill(params, cfg: ModelConfig, chunk, arena, block_table,
         cat = jnp.concatenate([h, x0], axis=-1)
         hn = L.rmsnorm_apply(sp["ln1"], cat, cfg.norm_eps)
         q, k, v = L.attention_qkv(sp["attn"], scfg, hn, positions)
-        k_g = T._paged_write(k_g, k, block_table, start, valid)
-        v_g = T._paged_write(v_g, v, block_table, start, valid)
+        k_g = T._paged_write(k_g, k, wbt, start, valid)
+        v_g = T._paged_write(v_g, v, wbt, start, valid)
         # block-table walk inside the kernel — no gathered page copy
         o = L.run_paged_prefill_attention(scfg, q, k_g, v_g, block_table,
                                           start, chunk_len)
@@ -362,6 +364,7 @@ def paged_decode_step(params, cfg: ModelConfig, arena, block_table,
     scfg = _shared_cfg(cfg)
     x = L.embed_tokens(params["embed"], cfg, tokens[:, None])[:, 0]   # (b, d)
     x0 = x
+    wbt = L.localize_block_table(cfg, block_table, arena["k"].shape[1] - 1)
 
     def inner(h, xs):
         p, conv_c, ssm_c = xs
@@ -379,8 +382,8 @@ def paged_decode_step(params, cfg: ModelConfig, arena, block_table,
         cat = jnp.concatenate([h, x0], axis=-1)[:, None, :]           # (b,1,2d)
         hn = L.rmsnorm_apply(sp["ln1"], cat, cfg.norm_eps)
         q, k, v = L.attention_qkv(sp["attn"], scfg, hn, positions[:, None])
-        k_g = T._paged_write(k_g, k, block_table, positions)
-        v_g = T._paged_write(v_g, v, block_table, positions)
+        k_g = T._paged_write(k_g, k, wbt, positions)
+        v_g = T._paged_write(v_g, v, wbt, positions)
         o = L.run_paged_decode_attention(scfg, q[:, 0], k_g, v_g,
                                          block_table, positions)
         cat = cat[:, 0] + o @ sp["attn"]["wo"]

@@ -172,32 +172,57 @@ def run_decode_attention(cfg: ModelConfig, q, k_cache, v_cache, position):
     return decode_attention(q, k_cache, v_cache, position)
 
 
+def localize_block_table(cfg: ModelConfig, block_table, num_local_pages):
+    """GLOBAL pool page ids -> this shard's bank slots for page WRITES:
+    entries the shard owns become local slots, everything else (other
+    shards' pages, the null sentinel) its local null sink
+    (`num_local_pages`).  Identity when `cfg.mem_axis` is unset (single
+    arena — the table already is physical).  Rotation-agnostic: writes
+    address pages by PHYSICAL id; only the attention walk needs the
+    logical stride."""
+    if cfg.mem_axis is None:
+        return block_table
+    pps = num_local_pages
+    idx = jax.lax.axis_index(cfg.mem_axis)
+    return jnp.where(block_table // pps == idx, block_table % pps,
+                     pps).astype(jnp.int32)
+
+
 def _shard_local_walk(mem_axis: str, block_table, page_size: int,
                       local_null: int):
-    """Compact a shard's LOCAL full-width block table to its resident
-    stride (DESIGN.md §2 page→shard mapping: logical page j of every
-    sequence lives on shard j % n, so the columns this shard must walk
-    are exactly j ≡ axis_index (mod n)).
+    """Compact a shard's walk of a GLOBAL block table to its resident
+    stride (DESIGN.md §2 page→shard mapping): logical page j of a
+    sequence lives on shard (rot + j) % n, where rot is the sequence's
+    per-prompt ROTATION — recovered here as the shard owning its logical
+    page 0 (`block_table[:, 0] // pps`), so the allocator can rotate
+    placement per prompt (bank balance under many-short-prompt loads)
+    without any extra step input.  The columns shard `idx` must walk for
+    row i are exactly j ≡ idx - rot_i (mod n).
 
-    block_table: (b, max_pages) LOCAL page ids — entries this shard does
-    not own (and padding) already point at `local_null`.  Returns the
-    (b, ceil(max_pages/n)) compacted table + its absolute page positions
-    (POS_PAD sentinel for null/absent slots, so the kernels' position
-    mask kills them unconditionally): each chip's attention walk is n
-    times shorter — KV bandwidth scales with the mesh."""
+    block_table: (b, max_pages) GLOBAL page ids.  Returns the
+    (b, ceil(max_pages/n)) compacted LOCAL table + its absolute page
+    positions (POS_PAD sentinel for null/foreign/absent slots, so the
+    kernels' position mask kills them unconditionally): each chip's
+    attention walk is n times shorter — KV bandwidth scales with the
+    mesh."""
     from repro.kernels.paged_attention.kernel import POS_PAD
     from repro.distribution.collectives import axis_size
 
     n = axis_size(mem_axis)
     idx = jax.lax.axis_index(mem_axis)
+    pps = local_null                       # bank size == local null slot
     b, mp = block_table.shape
     mp_loc = -(-mp // n)
-    cols = idx + n * jnp.arange(mp_loc, dtype=jnp.int32)     # logical slots
+    # per-row rotation from the table itself; inactive rows (all-null)
+    # clamp to n — their columns are masked below regardless
+    rot = jnp.minimum(block_table[:, 0] // pps, n)
+    col0 = jnp.mod(idx - rot, n).astype(jnp.int32)           # (b,)
+    cols = col0[:, None] + n * jnp.arange(mp_loc, dtype=jnp.int32)[None, :]
     safe = jnp.minimum(cols, mp - 1)
-    lbt = jnp.take(block_table, safe, axis=1)                # (b, mp_loc)
-    resident = (cols[None, :] < mp) & (lbt != local_null)
-    lbt = jnp.where(resident, lbt, local_null)
-    page_pos = jnp.where(resident, cols[None, :] * page_size, POS_PAD)
+    gbt = jnp.take_along_axis(block_table, safe, axis=1)     # (b, mp_loc)
+    resident = (cols < mp) & (gbt // pps == idx)
+    lbt = jnp.where(resident, gbt % pps, pps).astype(jnp.int32)
+    page_pos = jnp.where(resident, cols * page_size, POS_PAD)
     return lbt, page_pos.astype(jnp.int32)
 
 
@@ -214,8 +239,9 @@ def run_paged_decode_attention(cfg: ModelConfig, q, k_pages, v_pages,
     impls use the XLA gather oracle.  Returns (b, hq*d).
 
     With `cfg.mem_axis` set (inside the shard_map'd sharded serving
-    step, where `block_table` is the shard's LOCAL table) each chip
-    attends over its RESIDENT pages only in partials mode and the
+    step, where `block_table` carries GLOBAL pool ids) each chip
+    recovers the sequence's placement rotation from the table, attends
+    over its RESIDENT pages only in partials mode, and the
     (b, hq(, d))-sized summaries are log-sum-exp-merged across the mesh
     — the near-memory dataflow: pages stay put, summaries travel."""
     b, hq, d = q.shape
@@ -254,9 +280,10 @@ def run_paged_prefill_attention(cfg: ModelConfig, q, k_pages, v_pages,
     formulation never exists; other impls use the XLA gather oracle.
     Returns (b, c, hq*d).  Per-chunk cost is c*S, not prompt^2.
 
-    With `cfg.mem_axis` set (sharded serving step), each chip walks only
-    its resident pages and the (b, c, hq(, d)) chunk summaries merge
-    across the mesh — see `run_paged_decode_attention`."""
+    With `cfg.mem_axis` set (sharded serving step, GLOBAL block table),
+    each chip walks only its resident pages (rotation-aware stride) and
+    the (b, c, hq(, d)) chunk summaries merge across the mesh — see
+    `run_paged_decode_attention`."""
     b, c, hq, d = q.shape
     kw = {}
     if cfg.mem_axis is not None:

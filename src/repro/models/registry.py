@@ -18,6 +18,15 @@ contiguous layout there):
         one BATCHED ragged chunk: chunk = {"tokens": (b, c), ...},
         row i valid for chunk_len[i] tokens from start[i]
     paged_decode_step(params, cfg, arena, block_table, positions, tokens)
+
+Both paged hooks return (arena, logits (b, vocab)) — SAMPLING is not
+theirs: the jitted serving steps (serve/serve_step.py, sharded variant)
+collapse the logits to int32 tokens in-step against the per-slot
+SamplingState, so logits never leave the jit.  Under `cfg.mem_axis`
+(sharded serving) `block_table` carries GLOBAL pool ids: hooks localize
+it for page writes via `layers.localize_block_table` and hand the
+global table to the attention walk, which recovers each sequence's
+shard rotation from it.
 """
 from __future__ import annotations
 

@@ -292,13 +292,17 @@ def paged_prefill_embeds(params, cfg: ModelConfig, x, arena, block_table,
     b, c, _ = x.shape
     positions = start[:, None] + jnp.arange(c)[None, :]
     valid = jnp.arange(c)[None, :] < chunk_len[:, None]        # (b, c)
+    # sharded step: writes address the LOCAL bank (foreign tokens fall
+    # into the null sink); the attention walk keeps the GLOBAL table —
+    # it recovers the sequence's shard rotation from it
+    wbt = L.localize_block_table(cfg, block_table, arena["k"].shape[1] - 1)
 
     def body(h, xs):
         p, k_l, v_l = xs
         hn = L.rmsnorm_apply(p["ln1"], h, cfg.norm_eps)
         q, k, v = L.attention_qkv(p["attn"], cfg, hn, positions)
-        k_l = _paged_write(k_l, k, block_table, start, valid)
-        v_l = _paged_write(v_l, v, block_table, start, valid)
+        k_l = _paged_write(k_l, k, wbt, start, valid)
+        v_l = _paged_write(v_l, v, wbt, start, valid)
         # chunk queries attend through the block table IN PLACE — no
         # contiguous (b, max_pages*page, hkv, hd) copy of the pages
         o = L.run_paged_prefill_attention(cfg, q, k_l, v_l, block_table,
@@ -345,13 +349,14 @@ def paged_decode_step(params, cfg: ModelConfig, arena, block_table,
     Returns (arena, logits (b, vocab))."""
     x = L.embed_tokens(params["embed"], cfg, tokens[:, None])   # (b, 1, d)
     valid = (positions > 0)[:, None]                            # (b, 1)
+    wbt = L.localize_block_table(cfg, block_table, arena["k"].shape[1] - 1)
 
     def body(h, xs):
         p, k_l, v_l = xs
         hn = L.rmsnorm_apply(p["ln1"], h, cfg.norm_eps)
         q, k, v = L.attention_qkv(p["attn"], cfg, hn, positions[:, None])
-        k_l = _paged_write(k_l, k, block_table, positions)
-        v_l = _paged_write(v_l, v, block_table, positions)
+        k_l = _paged_write(k_l, k, wbt, positions)
+        v_l = _paged_write(v_l, v, wbt, positions)
         o = L.run_paged_decode_attention(cfg, q[:, 0], k_l, v_l,
                                          block_table, positions)
         h = h + (o @ p["attn"]["wo"])[:, None, :]

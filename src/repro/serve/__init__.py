@@ -9,8 +9,15 @@ Architecture (one pooled memory, the paper's form):
     models/<family>          paged hooks: init_paged_cache /
                              paged_prefill / paged_decode_step
     serve/serve_step.py      jitted closures over the hooks
+    serve/sampling.py        SamplingParams -> per-slot SamplingState;
+                             greedy/temperature/top-k/top-p compiled
+                             into the step (tokens, not logits, leave)
     serve/engine.py          continuous batching: lazy allocation,
-                             chunked prefill, prefix sharing, preemption
+                             chunked prefill, prefix sharing, preemption,
+                             the TokenEvent/FinishEvent stream
+    serve/api.py             public facade: LLMServer.generate ->
+                             GenerationStream (+ fork under a new
+                             sampling regime over shared COW pages)
 
 Every decode family except pure-SSM serves from the paged arena (KV
 bytes scale with tokens in flight): dense, moe (expert dispatch inside
@@ -29,4 +36,9 @@ from repro.serve.kv_cache import (
 )
 from repro.serve.serve_step import (
     make_serve_fns, make_paged_serve_fns, sample_logits, init_cache)
-from repro.serve.engine import ServingEngine, Request, Result
+from repro.serve.sampling import (
+    SamplingParams, SamplingState, sample_tokens, state_for_slots,
+    greedy_state)
+from repro.serve.engine import (
+    ServingEngine, Request, Result, TokenEvent, FinishEvent)
+from repro.serve.api import LLMServer, GenerationStream

@@ -1,0 +1,206 @@
+"""The public streaming serve API: `LLMServer.generate` -> a token stream.
+
+The facade over the continuous-batching engine (serve/engine.py): one
+`LLMServer` owns one engine; each `generate(prompt, params)` call
+submits a request with its own `SamplingParams` and hands back a
+`GenerationStream` — a lazy iterator of `TokenEvent`s (one per emitted
+token, in order) terminated by a `FinishEvent`.  Iterating a stream
+TICKS the shared engine, so many concurrent streams interleave naturally
+(continuous batching is the scheduler; the streams are just per-request
+views of the engine's single event drain).
+
+    server = LLMServer(cfg, params, max_batch=8, max_seq=512)
+    stream = server.generate(prompt, SamplingParams(temperature=0.8,
+                                                    top_p=0.9, seed=7))
+    for ev in stream:                  # TokenEvents as the engine ticks
+        print(ev.token)
+    result = stream.result             # the FinishEvent's Result
+
+Prefix sharing is first-class: `stream.fork(params)` branches the
+in-flight sequence through the engine's COW page fork — the child
+shares every page of the prompt AND everything decoded so far, and
+diverges under its OWN sampling regime (seed / temperature / top-k /
+top-p).  That is how a speculative client decodes one prompt under
+several sampling laws while paying for the shared prefix once.
+
+Sampling itself is compiled into the jitted step (serve/sampling.py):
+the engine threads a per-slot `SamplingState` and receives tokens, so
+this module never touches logits — it only routes events.
+"""
+from __future__ import annotations
+
+from collections import deque
+
+import numpy as np
+import jax
+
+from repro.models.config import ModelConfig
+from repro.models import registry
+from repro.serve.engine import (FinishEvent, Request, Result, ServingEngine,
+                                TokenEvent)
+from repro.serve.sampling import SamplingParams
+
+
+class GenerationStream:
+    """Per-request view of the engine's event stream.
+
+    Iteration yields the request's `TokenEvent`s in emission order and
+    finally its `FinishEvent`, then stops; each `__next__` that finds
+    the buffer empty ticks the shared engine (other streams' events are
+    buffered for THEIR iterators).  `tokens` accumulates what has been
+    yielded so far; `result` holds the final `Result` once finished.
+    `drain()` runs the stream to completion and returns the Result."""
+
+    def __init__(self, server: "LLMServer", uid: int,
+                 params: SamplingParams, tokens_prefix=()):
+        self._server = server
+        self.uid = uid
+        self.params = params
+        self.tokens: list[int] = list(tokens_prefix)
+        self.finished = False
+        self.result: Result | None = None
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        if self.finished:
+            raise StopIteration
+        ev = self._server._next_event(self.uid)
+        if ev is None:                      # engine drained without finish
+            self.finished = True            # (max_steps exhausted)
+            raise StopIteration
+        if isinstance(ev, TokenEvent):
+            self.tokens.append(ev.token)
+        else:                               # FinishEvent terminates the
+            self.finished = True            # stream; drop its buffer
+            self.result = ev.result
+            self._server._buffers.pop(self.uid, None)
+        return ev
+
+    def drain(self) -> Result:
+        """Consume the rest of the stream; returns the final Result."""
+        for _ in self:
+            pass
+        if self.result is None:
+            raise RuntimeError(
+                f"stream uid={self.uid} ended without a FinishEvent "
+                "(engine max_steps exhausted?)")
+        return self.result
+
+    def fork(self, params: SamplingParams | None = None
+             ) -> "GenerationStream":
+        """Branch this in-flight generation under its own sampling
+        regime: the child shares every page decoded so far (COW — the
+        first divergent write copies one partial page) and continues
+        with `params` (None inherits).  The child stream starts at the
+        fork point; its `tokens` is seeded with the shared prefix's
+        generated tokens."""
+        if self.finished:
+            raise ValueError(f"uid {self.uid} already finished; submit a "
+                             "fresh generate() instead of forking")
+        slot = self._server._pump_until_decoding(self.uid)
+        return self._server._fork(self.uid, params,
+                                  tokens_prefix=list(slot.generated))
+
+
+class LLMServer:
+    """One engine, many concurrent token streams.
+
+    Engine keyword arguments (`max_batch`, `max_seq`, `page_size`,
+    `mesh`, `prefill_decode_ratio`, ...) pass straight through — the
+    facade adds uid allocation, per-stream event routing, and the
+    fork-as-stream surface.  `run()` keeps the batch-mode contract:
+    drive everything submitted so far to completion and return the
+    engine's `Result` list.  `max_steps` bounds the engine ticks over
+    the server's LIFETIME (same contract as `engine.run`): a request
+    the pool can never admit makes the streams terminate instead of
+    spinning forever."""
+
+    def __init__(self, cfg: ModelConfig, params=None, *,
+                 max_steps: int = 100_000, **engine_kw):
+        if params is None:
+            params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+        self.engine = ServingEngine(cfg, params, **engine_kw)
+        self.max_steps = max_steps
+        self._buffers: dict[int, deque] = {}
+        self._next_uid = 0
+
+    # ------------------------------------------------------------ public
+
+    def generate(self, prompt, params: SamplingParams | None = None, *,
+                 patch_embeds=None, uid: int | None = None
+                 ) -> GenerationStream:
+        """Submit one prompt under its own `SamplingParams` (default:
+        greedy) and return its token stream.  Nothing runs until a
+        stream is iterated (or `run()` is called)."""
+        params = params or SamplingParams()
+        uid = self._next_uid if uid is None else uid
+        if uid in self._buffers:
+            raise ValueError(f"uid {uid} already streaming")
+        self._next_uid = max(self._next_uid, uid + 1)   # never collide
+                                                        # with explicit uids
+        self._buffers[uid] = deque()
+        self.engine.submit(Request(
+            uid=uid, prompt=np.asarray(prompt, np.int32),
+            patch_embeds=patch_embeds, sampling=params))
+        return GenerationStream(self, uid, params)
+
+    def run(self) -> list[Result]:
+        """Drive every submitted request to completion (compat with the
+        engine's batch loop); per-stream events stay consumable."""
+        while self._pump():
+            pass
+        return self.engine.results
+
+    @property
+    def stats(self) -> dict:
+        return self.engine.stats()
+
+    # ---------------------------------------------------------- plumbing
+
+    def _pump(self) -> bool:
+        """One engine tick; route its events to per-uid buffers.
+        Returns False when the engine has no work left — or when
+        `max_steps` is exhausted (an unadmittable request must end the
+        streams, not spin them)."""
+        if not (self.engine.pending or self.engine.slots):
+            return False
+        if self.engine.steps >= self.max_steps:
+            return False
+        self.engine.step()
+        for ev in self.engine.events():
+            self._buffers.setdefault(ev.uid, deque()).append(ev)
+        return True
+
+    def _next_event(self, uid: int):
+        buf = self._buffers[uid]
+        while not buf:
+            if not self._pump():
+                return None
+        return buf.popleft()
+
+    def _pump_until_decoding(self, uid: int):
+        """Tick until `uid` holds a decoding slot (fork needs the prompt
+        prefilled); raises if the request already finished."""
+        while True:
+            slot = next((s for s in self.engine.slots.values()
+                         if s.request.uid == uid), None)
+            if slot is not None and slot.generated and not slot.prefilling:
+                return slot
+            if slot is None and not any(r.uid == uid
+                                        for r in self.engine.pending):
+                raise ValueError(f"uid {uid} is not in flight")
+            if not self._pump():
+                raise ValueError(f"uid {uid} never reached decode")
+
+    def _fork(self, uid: int, params: SamplingParams | None,
+              tokens_prefix) -> GenerationStream:
+        new_uid = self._next_uid
+        self._next_uid += 1
+        self.engine.fork(uid, new_uid, sampling=params)
+        self._buffers[new_uid] = deque()
+        child = next(s for s in self.engine.slots.values()
+                     if s.request.uid == new_uid)
+        return GenerationStream(self, new_uid, child.request.sampling,
+                                tokens_prefix=tokens_prefix)

@@ -28,6 +28,31 @@ prompt mix compiles at most `len(prefill_buckets)` prefill variants
 instead of one per distinct prompt length (the jit cache stays bounded
 no matter the workload; `prefill_shapes` records what was dispatched).
 
+SAMPLING runs inside the jitted step.  Every request carries
+`SamplingParams` (serve/sampling.py: greedy / temperature / top-k /
+top-p, per-request seed, token budget, stop set); each tick the engine
+lowers the live slots to a per-slot `SamplingState` struct-of-arrays and
+the compiled step returns int32 TOKENS — the host never sees logits,
+never argmaxes.  Randomness is counter-derived (`fold_in(key(seed),
+emission_index)`), so tokens are a pure function of (prompt, params):
+identical across batch compositions, slot order, shard counts, and
+preempt/resume replays.
+
+The engine is a TOKEN STREAM: every emitted token is published as a
+`TokenEvent` and every retirement as a `FinishEvent` through ONE
+emission path; `events()` drains them, `stream()` ticks the engine and
+yields them, and `run()` survives as a thin compat wrapper that
+exhausts the stream and returns the collected `Result`s.  The
+`serve/api.py` facade (`LLMServer.generate` -> `GenerationStream`) sits
+on this drain.
+
+Scheduling is TOKEN-BUDGET driven when `prefill_decode_ratio` is set:
+each tick has `tick_token_budget` tokens, split ratio:(1-ratio) between
+the batched prefill call (chunk lengths capped oldest-first) and decode
+(slots decoded oldest-first) — prefill/decode fairness as one knob.
+The default (None) keeps the legacy full-speed behavior: full chunks
+for every admitting slot plus a decode for every active slot.
+
 Every decode family except pure-SSM serves paged-native: dense, moe
 (expert dispatch inside the paged decode step), vlm (patch-embedding
 chunks feed the paged text cache) and hybrid (attention KV share paged;
@@ -43,9 +68,11 @@ pool runs hard dry.
 
 Given a mesh with a "mem" axis (>1 device), the arena is SHARDED
 near-memory style (`serve/sharded/`): every chip owns a static bank of
-pages, the allocator interleaves each sequence's pages across banks,
-queries broadcast and only (b, hq, hd)-sized softmax summaries cross
-the interconnect.  The engine logic here is identical either way — it
+pages, the allocator interleaves each sequence's pages across banks
+under a per-prompt shard ROTATION (hash of the first full page — bank
+balance for short prompts, prefix partners stay aligned), queries
+broadcast and only (b, hq, hd)-sized softmax summaries cross the
+interconnect.  The engine logic here is identical either way — it
 talks global page ids; the jitted step localizes them.
 
 Loop shape (classic continuous batching):
@@ -59,7 +86,9 @@ Loop shape (classic continuous batching):
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+import zlib
+from collections import deque
+from dataclasses import dataclass, field, replace
 
 import numpy as np
 import jax
@@ -69,6 +98,8 @@ from repro.core.unimem import UniMemPool, SequencePageTable, UniMemOOM
 from repro.models.config import ModelConfig
 from repro.models import registry
 from repro.serve.kv_cache import PagedKVArena, insert_slot, clear_slot
+from repro.serve.sampling import (SamplingParams, state_for_slots,
+                                  sample as sample_on_device)
 from repro.serve.serve_step import make_serve_fns, make_paged_serve_fns
 from repro.utils.logging import get_logger
 
@@ -79,9 +110,16 @@ log = get_logger("engine")
 class Request:
     uid: int
     prompt: np.ndarray                 # (prompt_len,) int32
-    max_new_tokens: int = 32
-    eos_token: int = -1                # -1 = never (synthetic serving)
+    max_new_tokens: int = 32           # legacy mirror of sampling.max_new_tokens
+    eos_token: int = -1                # -1 = never; folded into sampling.stop
     patch_embeds: np.ndarray | None = None   # vlm: (num_patches, frontend_dim)
+    sampling: SamplingParams | None = None   # resolved by the engine at submit
+    # tokens a preempted slot had already generated: on readmission the
+    # engine REPLAYS them as forced context instead of re-sampling, so
+    # published tokens can never be contradicted by a recompute (fork
+    # children inherit tokens drawn under the PARENT's params — only a
+    # forced replay reproduces those)
+    replay: list[int] | None = None
 
     @property
     def num_patch_tokens(self) -> int:
@@ -114,10 +152,30 @@ class Result:
     prompt_len: int
     admitted_at: float = 0.0
     finished_at: float = 0.0
+    finish_reason: str = "length"      # "length" | "stop"
 
     @property
     def latency_s(self) -> float:
         return self.finished_at - self.admitted_at
+
+
+@dataclass(frozen=True)
+class TokenEvent:
+    """One generated token, published as it is emitted.  `index` is the
+    emission index within its request (0 = first generated token) —
+    exactly-once per (uid, index): a preempted slot's recompute replays
+    silently."""
+    uid: int
+    token: int
+    index: int
+
+
+@dataclass(frozen=True)
+class FinishEvent:
+    """A request retired; carries the full `Result` and why it stopped."""
+    uid: int
+    reason: str                        # "length" | "stop"
+    result: Result
 
 
 @dataclass
@@ -140,7 +198,8 @@ class _Slot:
 class ServingEngine:
     """`layout="paged"` (default where the family supports it) serves
     from the UniMem arena; `layout="contiguous"` is the per-slot
-    fallback.  Both run the same continuous-batching loop.
+    fallback.  Both run the same continuous-batching loop and publish
+    the same event stream.
 
     Chunk bucketing
     ---------------
@@ -161,12 +220,17 @@ class ServingEngine:
                  max_seq: int = 1024, page_size: int = 16,
                  pool_pages: int | None = None, temperature: float = 0.0,
                  layout: str | None = None, prefill_chunk: int | None = None,
-                 mesh=None, high_watermark: float | None = None):
+                 mesh=None, high_watermark: float | None = None,
+                 prefill_decode_ratio: float | None = None,
+                 tick_token_budget: int | None = None):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.page_size = page_size
+        # engine-wide default temperature for requests submitted without
+        # explicit SamplingParams (legacy constructor knob)
+        self.default_temperature = temperature
         # a mesh with a >1 "mem" axis shards the arena near-memory style
         # (pages resident per chip, queries broadcast, summaries merged);
         # a 1-device mesh degrades to the plain single-arena path, so
@@ -197,6 +261,17 @@ class ServingEngine:
         pool_pages = pool_pages or (max_batch * max_seq) // page_size
         self.max_pages = -(-max_seq // page_size)     # block-table width
         self.prefill_chunk = prefill_chunk or max(page_size * 4, 32)
+        # token-budget tick: ratio of each tick's token budget given to
+        # the batched prefill call; the remainder caps decoded slots.
+        # None = legacy full-speed (full chunks + every active slot).
+        if prefill_decode_ratio is not None \
+                and not 0.0 <= prefill_decode_ratio <= 1.0:
+            raise ValueError(
+                f"prefill_decode_ratio must be in [0, 1], got "
+                f"{prefill_decode_ratio}")
+        self.prefill_decode_ratio = prefill_decode_ratio
+        self.tick_token_budget = (tick_token_budget
+                                  or max_batch * self.prefill_chunk)
         # chunk widths snap UP to this fixed set: powers of two from 8 to
         # prefill_chunk (plus prefill_chunk itself) — the jit cache for
         # prefill is bounded by len(prefill_buckets), not by the number
@@ -217,14 +292,13 @@ class ServingEngine:
                     cfg, num_pages=pool_pages, page_size=page_size,
                     max_batch=max_batch, mesh=self.mesh)
                 self.prefill_fn, self.decode_fn = make_sharded_serve_fns(
-                    cfg, self.mesh, pool_pages, temperature=temperature,
+                    cfg, self.mesh, pool_pages,
                     arena_keys=tuple(self.arena.kv))
             else:
                 self.arena = PagedKVArena(cfg, num_pages=pool_pages,
                                           page_size=page_size,
                                           max_batch=max_batch)
-                self.prefill_fn, self.decode_fn = make_paged_serve_fns(
-                    cfg, temperature=temperature)
+                self.prefill_fn, self.decode_fn = make_paged_serve_fns(cfg)
             self.pool = self.arena.pool
             # families with contiguous per-slot state (hybrid conv/SSM)
             # can share page MEMORY but never skip prefill COMPUTE: the
@@ -239,8 +313,10 @@ class ServingEngine:
             self.cache = fam.init_cache(cfg, max_batch, max_seq)
             self.cache_ax = fam.cache_axes()
             self.pool = UniMemPool(pool_pages, page_size)
-            self.prefill_fn, self.decode_fn, _ = make_serve_fns(
-                cfg, temperature=temperature)
+            # temperature only parameterizes decode_many (unused here);
+            # the decode closure samples from the per-slot SamplingState
+            # — the engine-wide default folds in via _resolve_sampling
+            self.prefill_fn, self.decode_fn, _ = make_serve_fns(cfg)
 
         self.pending: list[Request] = []
         self.slots: dict[int, _Slot] = {}        # slot index -> state
@@ -248,11 +324,36 @@ class ServingEngine:
         self.steps = 0
         self.tokens_out = 0
         self._admitted = 0
-        self._key = jax.random.key(0)
+        self._events: deque = deque()
+        self._emitted: dict[int, int] = {}       # uid -> tokens published
 
     # ------------------------------------------------------------ intake
 
+    def _resolve_sampling(self, request: Request) -> None:
+        """Fill in `request.sampling` (legacy fields -> params) and keep
+        the legacy mirrors coherent — the engine reads `sampling` only.
+        EVERY legacy field folds into explicit params the same way: an
+        eos_token joins the stop set, and a non-default max_new_tokens
+        overrides a params-default budget (explicit params win when both
+        are set away from their defaults)."""
+        sp = request.sampling
+        if sp is None:
+            stop = (request.eos_token,) if request.eos_token >= 0 else ()
+            sp = SamplingParams(temperature=self.default_temperature,
+                                max_new_tokens=request.max_new_tokens,
+                                stop=stop)
+        else:
+            if request.eos_token >= 0 and request.eos_token not in sp.stop:
+                sp = replace(sp, stop=sp.stop + (request.eos_token,))
+            default_budget = SamplingParams().max_new_tokens
+            if (request.max_new_tokens != default_budget
+                    and sp.max_new_tokens == default_budget):
+                sp = replace(sp, max_new_tokens=request.max_new_tokens)
+        request.sampling = sp.validate()
+        request.max_new_tokens = sp.max_new_tokens
+
     def submit(self, request: Request):
+        self._resolve_sampling(request)
         if request.max_footprint > self.max_seq:
             raise ValueError(
                 f"request {request.uid}: footprint {request.max_footprint} "
@@ -268,6 +369,61 @@ class ServingEngine:
     def _free_slots(self) -> list[int]:
         return [i for i in range(self.max_batch) if i not in self.slots]
 
+    # ---------------------------------------------------- event emission
+
+    def _emit(self, s: _Slot, tok: int) -> None:
+        """THE single token-emission path — paged decode, contiguous
+        decode and the prefill first token all land here.  Appends to
+        the slot, counts, and publishes a TokenEvent exactly once per
+        (uid, index): a preempted slot's recompute replays its earlier
+        tokens without re-publishing them."""
+        s.generated.append(tok)
+        s.last_token = tok
+        self.tokens_out += 1
+        idx = len(s.generated) - 1
+        uid = s.request.uid
+        if idx >= self._emitted.get(uid, 0):
+            self._emitted[uid] = idx + 1
+            self._events.append(TokenEvent(uid=uid, token=tok, index=idx))
+
+    def _next_token(self, s: _Slot, sampled: int) -> int:
+        """The slot's next token: the step's sampled output, unless the
+        slot is REPLAYING tokens it had generated before a preemption —
+        forced replay reproduces published history exactly (a fork
+        child's inherited tokens were drawn under the PARENT's params;
+        re-sampling them under its own would contradict the stream)."""
+        rep = s.request.replay
+        if rep is not None:
+            t = len(s.generated)
+            if t < len(rep):
+                return rep[t]
+            s.request.replay = None              # replay complete
+        return sampled
+
+    def _emit_decoded(self, active: dict[int, _Slot], next_tokens) -> None:
+        """Shared retire-and-emit tail of both decode layouts."""
+        next_tokens = np.asarray(next_tokens)
+        for i, s in active.items():
+            self._emit(s, self._next_token(s, int(next_tokens[i])))
+
+    def events(self) -> list:
+        """Drain pending TokenEvent/FinishEvent records (FIFO)."""
+        out = list(self._events)
+        self._events.clear()
+        return out
+
+    # ---------------------------------------------------------- sampling
+
+    def _sampling_state(self, rows: dict[int, _Slot]):
+        """Lower the live rows to the per-slot SamplingState threaded
+        through the jitted step.  The emission counter is the number of
+        tokens generated so far — token t is always drawn with
+        fold_in(key(seed), t), whatever batch/slot/tick it lands in."""
+        return state_for_slots(
+            self.max_batch,
+            [(i, s.request.sampling, len(s.generated))
+             for i, s in rows.items()])
+
     # ------------------------------------------------- prefix page cache
 
     def _page_hashes(self, req: Request) -> list[int]:
@@ -280,6 +436,21 @@ class ServingEngine:
             h = hash((h, req.virtual_bytes(i * ps, (i + 1) * ps)))
             out.append(h)
         return out
+
+    def _rotation_of(self, req: Request) -> int:
+        """Per-prompt shard rotation (sharded pools only): a STABLE hash
+        of the first (full, if present) page's content offsets the
+        sequence's logical->shard stride, so page 0 of many short
+        prompts spreads over all banks instead of concentrating on
+        shard 0.  Content-derived, so prefix-sharing partners (same
+        first page) rotate identically and shared pages keep their
+        shard; crc32 (not Python's salted hash()) keeps placement and
+        per-shard metrics reproducible across processes."""
+        n = getattr(self.pool, "num_shards", 1)
+        if n <= 1:
+            return 0
+        head = req.virtual_bytes(0, min(self.page_size, req.virtual_len))
+        return zlib.crc32(head) % n
 
     def _match_prefix(self, req: Request) -> tuple[list[int], list[int],
                                                    list[int]]:
@@ -391,6 +562,7 @@ class ServingEngine:
             req = self.pending[0]
             plen = req.virtual_len
             written, adopted, hashes = self._match_prefix(req)
+            rot = self._rotation_of(req)
             shared_tokens = len(written) * self.page_size
             # adopted pages are held but still prefilled through (their
             # content lands when this row — or the co-prefilling donor —
@@ -399,13 +571,14 @@ class ServingEngine:
             first = min(self.prefill_chunk, plen - held)
             need = (self.pool.pages_for(held + first)
                     - len(written) - len(adopted))
-            if not self.pool.fits(len(written) + len(adopted), need):
+            if not self.pool.fits(rot + len(written) + len(adopted), need):
                 break                            # UniMem backpressure
             self.pending.pop(0)
             slot = free.pop(0)
             if written or adopted:
                 self.pool.share(written + adopted)
-            seq = SequencePageTable(self.pool, written + adopted, held)
+            seq = SequencePageTable(self.pool, written + adopted, held,
+                                    rotation=rot)
             seq.append_tokens(first)
             s = _Slot(request=req, pages=seq, admitted_at=time.perf_counter(),
                       order=self._admitted, prefill_pos=shared_tokens,
@@ -430,12 +603,15 @@ class ServingEngine:
             if req.patch_embeds is not None:
                 batch["patch_embeds"] = jnp.asarray(req.patch_embeds)[None]
             one_cache, logits = self.prefill_fn(self.params, batch, one_cache)
-            first = int(jnp.argmax(logits[0]))
             self.cache = insert_slot(self.cache, one_cache, slot, self.cache_ax)
-            self.slots[slot] = _Slot(
-                request=req, pages=pages, generated=[first],
-                last_token=first, admitted_at=time.perf_counter(),
-                order=self._admitted, prefill_pos=req.virtual_len)
+            s = _Slot(request=req, pages=pages,
+                      admitted_at=time.perf_counter(), order=self._admitted,
+                      prefill_pos=req.virtual_len)
+            # the first token samples ON DEVICE too (emission counter 0)
+            first = sample_on_device(
+                logits, state_for_slots(1, [(0, req.sampling, 0)]))
+            self._emit(s, int(np.asarray(first)[0]))
+            self.slots[slot] = s
             self._admitted += 1
 
     # ----------------------------------------------------------- prefill
@@ -443,6 +619,27 @@ class ServingEngine:
     def _bucket_width(self, n: int) -> int:
         """Smallest fixed bucket >= n (n <= prefill_chunk by construction)."""
         return next(b for b in self.prefill_buckets if b >= n)
+
+    def _prefill_token_budget(self) -> int | None:
+        """This tick's prompt-token allowance (None = unlimited).  When
+        nothing is decoding, an idle decode share rolls over to prefill
+        so a ratio of 0 can never deadlock admission."""
+        if self.prefill_decode_ratio is None:
+            return None
+        budget = int(self.prefill_decode_ratio * self.tick_token_budget)
+        decoding = any(not s.prefilling and s.generated
+                       for s in self.slots.values())
+        if budget < 1 and not decoding:
+            budget = self.prefill_chunk
+        return budget
+
+    def _decode_slot_budget(self) -> int | None:
+        """Max slots decoded this tick (None = all active).  At least
+        one, so decode always progresses."""
+        if self.prefill_decode_ratio is None:
+            return None
+        b = self.tick_token_budget
+        return max(1, b - int(self.prefill_decode_ratio * b))
 
     def _prefill_tick(self):
         """Advance EVERY prefilling slot by one ragged chunk in a SINGLE
@@ -453,7 +650,9 @@ class ServingEngine:
         number of distinct compiled prefill shapes is bounded by
         `prefill_buckets` however ragged the prompt mix.  Decode over
         already-active slots proceeds in the same engine step, so long
-        prompts never freeze token emission."""
+        prompts never freeze token emission.  Under a token-budget tick
+        the chunk lengths are additionally capped oldest-first by the
+        prefill share of `tick_token_budget`."""
         if self.layout != "paged":
             return
         pre = [(i, s) for i, s in self.slots.items() if s.prefilling]
@@ -465,6 +664,14 @@ class ServingEngine:
         lens = {i: min(self.prefill_chunk,
                        s.request.virtual_len - s.prefill_pos)
                 for i, s in pre}
+        budget = self._prefill_token_budget()
+        if budget is not None:
+            for i, s in sorted(pre, key=lambda kv: kv[1].order):
+                lens[i] = min(lens[i], max(budget, 0))
+                budget -= lens[i]
+            pre = [(i, s) for i, s in pre if lens[i] > 0]
+            if not pre:
+                return
         # lazy prompt-page growth (watermark admission allocated only the
         # first chunk): extend each slot's table to cover this tick's
         # chunk, preempting younger slots under pool pressure — a slot
@@ -502,18 +709,18 @@ class ServingEngine:
         chunk = {"tokens": jnp.asarray(tokens)}
         if patches is not None:
             chunk["patches"] = jnp.asarray(patches)
-        self.arena.kv, logits = self.prefill_fn(
+        self.arena.kv, first = self.prefill_fn(
             self.params, chunk, self.arena.kv, jnp.asarray(bt),
-            jnp.asarray(start), jnp.asarray(clen))
+            jnp.asarray(start), jnp.asarray(clen),
+            self._sampling_state(dict(pre)))
         self.prefill_shapes.add((b, c))
-        logits = np.asarray(logits)
+        first = np.asarray(first)
         for i, s in pre:
             s.prefill_pos += int(clen[i])
             self._register_prefix(s)             # newly-written full pages
-            if not s.prefilling:                 # prompt complete
-                first = int(np.argmax(logits[i]))
-                s.generated = [first]
-                s.last_token = first
+            if not s.prefilling:                 # prompt complete: the
+                                                 # step sampled token 0
+                self._emit(s, self._next_token(s, int(first[i])))
 
     # ------------------------------------------------------------- step
 
@@ -555,6 +762,10 @@ class ServingEngine:
         and reclaim its pages."""
         log.info("engine: preempting uid=%d (pool pressure)",
                  victim.request.uid)
+        # pin what was already generated: readmission replays these as
+        # forced context (never re-samples published history)
+        if len(victim.generated) > len(victim.request.replay or ()):
+            victim.request.replay = list(victim.generated)
         self._release_pages(victim.pages)
         del self.slots[idx]
         self.pending.insert(0, victim.request)
@@ -570,9 +781,24 @@ class ServingEngine:
         self._preempt_slot(idx, victim)
         return True
 
-    def _decode_paged(self):
+    def _decode_rows(self) -> dict[int, _Slot]:
+        """Active decode rows for this tick, throttled oldest-first by
+        the decode share of the token budget (when a ratio is set).
+        PAGED layout only: the contiguous fused step writes KV and
+        advances `pos` for every batch row unconditionally, so excluding
+        a row there would corrupt its cache — the ssm fallback always
+        decodes every active slot."""
         active = {i: s for i, s in self.slots.items() if not s.prefilling
                   and s.generated}
+        budget = (self._decode_slot_budget() if self.layout == "paged"
+                  else None)
+        if budget is not None and len(active) > budget:
+            keep = sorted(active.items(), key=lambda kv: kv[1].order)[:budget]
+            active = dict(keep)
+        return active
+
+    def _decode_paged(self):
+        active = self._decode_rows()
         if not active:
             return
         # grow tables first (may preempt younger slots under pool pressure)
@@ -592,44 +818,42 @@ class ServingEngine:
             tokens[i] = s.last_token
             positions[i] = s.pages.num_tokens - 1   # slot appended above
             bt[i, :len(s.pages.pages)] = s.pages.pages
-        self.arena.kv, nxt, self._key = self.decode_fn(
+        self.arena.kv, nxt = self.decode_fn(
             self.params, self.arena.kv, jnp.asarray(bt),
-            jnp.asarray(positions), jnp.asarray(tokens), self._key)
-        nxt = np.asarray(nxt)
-        for i, s in active.items():
-            tok = int(nxt[i])
-            s.generated.append(tok)
-            s.last_token = tok
-            self.tokens_out += 1
+            jnp.asarray(positions), jnp.asarray(tokens),
+            self._sampling_state(active))
+        self._emit_decoded(active, nxt)
 
     def _decode_contiguous(self):
-        if not self.slots:
+        active = self._decode_rows()
+        if not active:
             return
         tokens = np.zeros((self.max_batch,), np.int32)
-        for i, s in self.slots.items():
+        for i, s in active.items():
             tokens[i] = s.last_token
-        key = jax.random.key(self.steps)
-        self.cache, nxt, _ = self.decode_fn(
-            self.params, self.cache, jnp.asarray(tokens), key)
-        nxt = np.asarray(nxt)
-        for i, s in list(self.slots.items()):
-            tok = int(nxt[i])
-            s.generated.append(tok)
-            s.last_token = tok
-            self.tokens_out += 1
+        self.cache, nxt = self.decode_fn(
+            self.params, self.cache, jnp.asarray(tokens),
+            self._sampling_state(active))
+        self._emit_decoded(active, nxt)
 
     def _retire(self):
         for i, s in list(self.slots.items()):
             if s.prefilling or not s.generated:
                 continue
-            done = (len(s.generated) >= s.request.max_new_tokens
-                    or s.generated[-1] == s.request.eos_token)
-            if not done:
+            sp = s.request.sampling
+            stopped = s.generated[-1] in sp.stop
+            if not stopped and len(s.generated) < sp.max_new_tokens:
                 continue
-            self.results.append(Result(
+            reason = "stop" if stopped else "length"
+            result = Result(
                 uid=s.request.uid, tokens=list(s.generated),
                 prompt_len=len(s.request.prompt),
-                admitted_at=s.admitted_at, finished_at=time.perf_counter()))
+                admitted_at=s.admitted_at, finished_at=time.perf_counter(),
+                finish_reason=reason)
+            self.results.append(result)
+            self._events.append(FinishEvent(uid=s.request.uid, reason=reason,
+                                            result=result))
+            self._emitted.pop(s.request.uid, None)
             if self.layout == "paged":
                 self._release_pages(s.pages)
             else:
@@ -662,10 +886,19 @@ class ServingEngine:
         self.steps += 1
         self._retire()
 
-    def run(self, max_steps: int = 10_000) -> list[Result]:
-        t0 = time.perf_counter()
+    def stream(self, max_steps: int = 10_000):
+        """Tick the engine and yield TokenEvent/FinishEvent records as
+        they happen — the streaming drain `serve/api.py` sits on."""
         while (self.pending or self.slots) and self.steps < max_steps:
             self.step()
+            yield from self.events()
+
+    def run(self, max_steps: int = 10_000) -> list[Result]:
+        """Run to completion — a thin compat wrapper that exhausts the
+        event stream and returns the collected Results."""
+        t0 = time.perf_counter()
+        for _ in self.stream(max_steps):
+            pass
         dt = time.perf_counter() - t0
         if dt > 0:
             log.info("engine[%s]: %d results, %d tokens, %.1f tok/s, "
@@ -677,11 +910,15 @@ class ServingEngine:
 
     # -------------------------------------------------------------- fork
 
-    def fork(self, uid: int, new_uid: int) -> None:
+    def fork(self, uid: int, new_uid: int,
+             sampling: SamplingParams | None = None) -> None:
         """Branch an active sequence into a free slot: the child SHARES
         every page (refcounts, zero copies) and diverges lazily — the
         first write into the shared partial last page triggers
-        copy-on-write.  Paged layout only."""
+        copy-on-write.  `sampling` gives the child its OWN regime
+        (seed/temperature/top-k/top-p) over the shared prefix — one
+        prompt decoded under several sampling laws from the same COW
+        pages; None inherits the parent's.  Paged layout only."""
         if self.layout != "paged":
             raise ValueError("fork requires the paged layout")
         free = self._free_slots()
@@ -692,9 +929,10 @@ class ServingEngine:
         if src is None or src.prefilling:
             raise ValueError(f"uid {uid} is not active")
         child_req = Request(uid=new_uid, prompt=src.request.prompt,
-                            max_new_tokens=src.request.max_new_tokens,
                             eos_token=src.request.eos_token,
-                            patch_embeds=src.request.patch_embeds)
+                            patch_embeds=src.request.patch_embeds,
+                            sampling=sampling or src.request.sampling)
+        self._resolve_sampling(child_req)
         child = _Slot(request=child_req, pages=src.pages.fork(),
                       generated=list(src.generated),
                       last_token=src.last_token,
@@ -702,6 +940,9 @@ class ServingEngine:
                       prefill_pos=child_req.virtual_len,
                       shared_tokens=src.pages.num_tokens)
         self._admitted += 1
+        # inherited tokens were the parent's — the child's stream starts
+        # at the fork point
+        self._emitted[new_uid] = len(child.generated)
         self.slots[free[0]] = child
         # state that cannot share pages (hybrid conv/SSM rows) is copied
         self.arena.copy_slot_state(src_i, free[0])
@@ -729,6 +970,7 @@ class ServingEngine:
             "peak_kv_bytes": self.peak_kv_bytes(),
             "prefill_buckets": list(self.prefill_buckets),
             "prefill_shapes": sorted(self.prefill_shapes),
+            "prefill_decode_ratio": self.prefill_decode_ratio,
             "pool": self.pool.stats().__dict__,
         }
         if self.mesh is not None:               # near-memory sharded arena

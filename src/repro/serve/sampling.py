@@ -1,0 +1,167 @@
+"""Per-request sampling, compiled into the paged serving step.
+
+Decode is bandwidth-bound (PAPERS.md, "AI and Memory Wall"): the host
+must never sit between the arena and token emission.  So sampling is not
+a host-side post-process over logits — it is a vectorized function of a
+per-slot struct-of-arrays that runs INSIDE the jitted step, and the step
+returns int32 tokens.  The (b, vocab) logits never leave the device.
+
+Two layers:
+
+* `SamplingParams` — the REQUEST-level description (what a client asks
+  for): greedy / temperature / top-k / top-p, a per-request threefry
+  seed, the token budget and stop set.  Plain frozen dataclass, no jax.
+
+* `SamplingState` — the SLOT-level lowering the engine threads through
+  `make_paged_serve_fns` / `make_sharded_serve_fns` each tick: one
+  (max_batch,) array per knob, batch row i == engine slot i.  Rows
+  without a live request stay greedy-inert (temperature 0).
+
+Randomness is COUNTER-derived, not carried: the key for a slot's t-th
+emitted token is `fold_in(key(seed), t)` (a fresh threefry split per
+token).  Tokens are therefore a pure function of
+(prompt, SamplingParams) — independent of batch composition, slot
+order, shard count, and preemption (a preempted slot replays the same
+counters on readmission and regenerates byte-identical tokens).
+
+Greedy is the `SamplingParams()` default and lowers to the exact
+`argmax` the pre-sampling engine computed, so default tokens are
+byte-identical to the old host-side path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """How one request wants its tokens drawn.
+
+    temperature: 0.0 = greedy argmax (the default); > 0 scales logits.
+    top_k:       keep only the k highest logits (0 = off).
+    top_p:       nucleus sampling — keep the smallest prefix of the
+                 sorted distribution with cumulative mass >= top_p,
+                 renormalized (1.0 = off).
+    seed:        per-request threefry seed; token t is drawn with
+                 fold_in(key(seed), t), so a (prompt, params) pair
+                 replays identically anywhere in the fleet.
+    max_new_tokens / stop: generation budget and stop-token set (the
+                 retire conditions, carried here so one object fully
+                 describes a generation).
+    """
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+    max_new_tokens: int = 32
+    stop: tuple[int, ...] = ()
+
+    def validate(self) -> "SamplingParams":
+        if self.temperature < 0.0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        if self.max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {self.max_new_tokens}")
+        return self
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature == 0.0
+
+
+class SamplingState(NamedTuple):
+    """Per-slot struct-of-arrays lowering of `SamplingParams`, threaded
+    through the jitted serving steps (batch row i == engine slot i).
+    All leaves are (b,) arrays, so the state never changes the compiled
+    shape signature — one compile serves every sampling mix."""
+    temperature: jax.Array          # (b,) f32; <= 0 -> greedy argmax
+    top_k: jax.Array                # (b,) i32; 0 -> off
+    top_p: jax.Array                # (b,) f32; >= 1 -> off
+    seed: jax.Array                 # (b,) u32 threefry seed
+    step: jax.Array                 # (b,) i32 emission counter
+
+
+def state_for_slots(batch: int, entries) -> SamplingState:
+    """Lower per-slot (row, SamplingParams, emitted_count) triples into
+    one SamplingState.  Rows not named stay greedy-inert."""
+    t = np.zeros((batch,), np.float32)
+    k = np.zeros((batch,), np.int32)
+    p = np.ones((batch,), np.float32)
+    seed = np.zeros((batch,), np.uint32)
+    step = np.zeros((batch,), np.int32)
+    for row, sp, emitted in entries:
+        t[row] = sp.temperature
+        k[row] = sp.top_k
+        p[row] = sp.top_p
+        seed[row] = np.uint32(sp.seed & 0xFFFFFFFF)
+        step[row] = emitted
+    return SamplingState(jnp.asarray(t), jnp.asarray(k), jnp.asarray(p),
+                         jnp.asarray(seed), jnp.asarray(step))
+
+
+def greedy_state(batch: int) -> SamplingState:
+    """All-greedy state (the `SamplingParams()` default for every row)."""
+    return state_for_slots(batch, ())
+
+
+def sample_tokens(logits, state: SamplingState):
+    """(b, V) logits + per-slot SamplingState -> (b,) int32 tokens.
+
+    Runs inside the jitted step: masked top-k then top-p renormalization
+    vectorized over the batch, one fresh threefry key per slot per
+    emitted token (`fold_in(key(seed), step)`), greedy rows take the
+    exact argmax.  Fully shape-static — no host round-trip, no recompile
+    across sampling mixes.  An ALL-greedy tick (the default config, and
+    every inactive row) short-circuits through `lax.cond` to the plain
+    argmax — decode is bandwidth-bound; the two full-vocab sorts of the
+    sampling branch run only when some row actually samples."""
+    logits = logits.astype(jnp.float32)
+    b, V = logits.shape
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def drawn(_):
+        scaled = logits / jnp.maximum(state.temperature, 1e-6)[:, None]
+        # masked top-k: keep each row's k largest logits (k == 0 -> all)
+        desc = jnp.sort(scaled, axis=-1)[:, ::-1]
+        k_eff = jnp.where(state.top_k > 0, state.top_k, V)
+        kth = jnp.take_along_axis(desc,
+                                  jnp.clip(k_eff[:, None] - 1, 0, V - 1),
+                                  axis=1)
+        scaled = jnp.where(scaled < kth, NEG_INF, scaled)
+        # masked top-p over the RENORMALIZED top-k survivors: keep the
+        # smallest sorted prefix reaching mass top_p (the argmax always
+        # survives — the exclusive cumsum of the first entry is 0 < p)
+        probs = jax.nn.softmax(scaled, axis=-1)
+        psort = jnp.sort(probs, axis=-1)[:, ::-1]
+        keep = jnp.cumsum(psort, axis=-1) - psort < state.top_p[:, None]
+        thr = jnp.min(jnp.where(keep, psort, jnp.inf), axis=-1,
+                      keepdims=True)
+        nucleus = (state.top_p < 1.0)[:, None]      # 1.0 = off exactly
+        scaled = jnp.where(nucleus & (probs < thr), NEG_INF, scaled)
+
+        keys = jax.vmap(
+            lambda s, c: jax.random.fold_in(jax.random.key(s), c))(
+                state.seed, state.step)
+        toks = jax.vmap(jax.random.categorical)(keys,
+                                                scaled).astype(jnp.int32)
+        return jnp.where(state.temperature > 0.0, toks, greedy)
+
+    return jax.lax.cond(jnp.any(state.temperature > 0.0), drawn,
+                        lambda _: greedy, None)
+
+
+# standalone jitted entry for host code that holds logits already (the
+# contiguous layout's batch=1 admission prefill) — still samples on
+# device, so the host never argmaxes
+sample = jax.jit(sample_tokens)

@@ -1,18 +1,22 @@
-"""Jit-compiled serving steps: prefill, decode, sampling.
+"""Jit-compiled serving steps: prefill, decode, in-step sampling.
 
 `make_serve_fns(cfg)` returns jitted `prefill(params, batch, cache)` and
-`decode(params, cache, tokens, key, temperature)` closures for any family
-with a decode path.  Sampling is greedy at temperature 0, categorical
-otherwise; both are pure functions of an explicit PRNG key (reproducible
-serving).  `decode_many` fuses N decode steps into one `lax.scan` — one
-dispatch for a whole token budget (the decode analogue of the paper's
-UCE sequencing a fixed schedule without host round-trips).
+`decode(params, cache, tokens, sampling)` closures for any family with a
+decode path.  Sampling executes INSIDE the jitted step against the
+per-slot `SamplingState` (serve/sampling.py): greedy rows take the exact
+argmax, sampled rows draw with a counter-derived threefry key — tokens,
+never logits, cross the host boundary.  `decode_many` fuses N decode
+steps into one `lax.scan` — one dispatch for a whole token budget (the
+decode analogue of the paper's UCE sequencing a fixed schedule without
+host round-trips).
 
 `make_paged_serve_fns(cfg)` is the block-table-driven variant for
 families with the paged-cache hooks: prefill consumes prompt CHUNKS
 (advancing `start` offsets, so admission interleaves with decode) and
-decode walks the UniMem arena through (b, max_pages) block tables —
-memory proportional to tokens in flight, not slots x max_seq.
+SAMPLES each row's next token at its last valid position (the first
+generated token leaves the prefill step as a token too); decode walks
+the UniMem arena through (b, max_pages) block tables — memory
+proportional to tokens in flight, not slots x max_seq.
 """
 from __future__ import annotations
 
@@ -23,10 +27,13 @@ import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
 from repro.models import registry
+from repro.serve.sampling import SamplingState, greedy_state, sample_tokens
 
 
 def sample_logits(logits, key, temperature: float):
-    """logits: (b, V) -> tokens (b,)."""
+    """logits: (b, V) -> tokens (b,).  Legacy single-temperature sampler
+    kept for `decode_many` (a fixed-schedule tool, not the engine path —
+    the engine samples per-request via `SamplingState`)."""
     if temperature == 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     scaled = logits.astype(jnp.float32) / temperature
@@ -44,11 +51,9 @@ def make_serve_fns(cfg: ModelConfig, *, temperature: float = 0.0):
         return cache, logits
 
     @jax.jit
-    def decode(params, cache, tokens, key):
+    def decode(params, cache, tokens, sampling: SamplingState):
         cache, logits = fam.decode_step(params, cfg, cache, tokens)
-        key, sub = jax.random.split(key)
-        next_tokens = sample_logits(logits, sub, temperature)
-        return cache, next_tokens, key
+        return cache, sample_tokens(logits, sampling)
 
     @partial(jax.jit, static_argnames=("num_steps",))
     def decode_many(params, cache, tokens, key, num_steps: int):
@@ -67,16 +72,21 @@ def make_serve_fns(cfg: ModelConfig, *, temperature: float = 0.0):
     return prefill, decode, decode_many
 
 
-def make_paged_serve_fns(cfg: ModelConfig, *, temperature: float = 0.0):
+def make_paged_serve_fns(cfg: ModelConfig):
     """Jitted closures over the family's paged-cache hooks.
 
     prefill_chunk(params, chunk, arena, block_table, start (b,),
-                  chunk_len (b,)) -> (arena, last_valid_logits (b, vocab))
+                  chunk_len (b,), sampling) -> (arena, next_tokens (b,))
         `chunk` is {"tokens": (b, c)[, "patches": (b, c, frontend_dim)]}
         — ONE bucketed width c serves every admitting row; chunk_len
-        ragged-masks each row (0 = inert).
-    decode(params, arena, block_table, positions, tokens, key)
-        -> (arena, next_tokens, key)
+        ragged-masks each row (0 = inert).  The returned tokens are
+        sampled at each row's LAST VALID position — only the row whose
+        prompt just completed consumes its token (emission counter 0).
+    decode(params, arena, block_table, positions, tokens, sampling)
+        -> (arena, next_tokens)
+
+    Sampling is per-slot `SamplingState` arrays evaluated in-step; the
+    (b, vocab) logits never leave the jit.
     """
     fam = registry.get_family(cfg)
     if not registry.has_paged(cfg):
@@ -89,17 +99,18 @@ def make_paged_serve_fns(cfg: ModelConfig, *, temperature: float = 0.0):
     cpu = jax.default_backend() == "cpu"
 
     @partial(jax.jit, donate_argnums=() if cpu else (2,))
-    def prefill_chunk(params, chunk, arena, block_table, start, chunk_len):
-        return fam.paged_prefill(params, cfg, chunk, arena,
-                                 block_table, start, chunk_len)
+    def prefill_chunk(params, chunk, arena, block_table, start, chunk_len,
+                      sampling: SamplingState):
+        arena, logits = fam.paged_prefill(params, cfg, chunk, arena,
+                                          block_table, start, chunk_len)
+        return arena, sample_tokens(logits, sampling)
 
     @partial(jax.jit, donate_argnums=() if cpu else (1,))
-    def decode(params, arena, block_table, positions, tokens, key):
+    def decode(params, arena, block_table, positions, tokens,
+               sampling: SamplingState):
         arena, logits = fam.paged_decode_step(params, cfg, arena,
                                               block_table, positions, tokens)
-        key, sub = jax.random.split(key)
-        next_tokens = sample_logits(logits, sub, temperature)
-        return arena, next_tokens, key
+        return arena, sample_tokens(logits, sampling)
 
     return prefill_chunk, decode
 
@@ -132,7 +143,8 @@ def bulk_attn_shapes(cfg: ModelConfig, *, max_batch: int, max_seq: int,
 def lowered_paged_hlo(cfg: ModelConfig, which: str = "decode", *,
                       max_batch: int = 2, max_seq: int = 64,
                       page_size: int = 8, prefill_chunk: int = 8,
-                      params=None) -> str:
+                      params=None, sampling: SamplingState | None = None
+                      ) -> str:
     """Compile the jitted paged serving step (`which` in {"decode",
     "prefill"}) on the current backend and return the optimized HLO
     text, for shape-structure analysis via `launch/hlo_analysis`.
@@ -140,10 +152,15 @@ def lowered_paged_hlo(cfg: ModelConfig, which: str = "decode", *,
     The fused-kernel acceptance checks and `benchmarks/serve_throughput
     --json` grep this text: the single-pass kernels must not write the
     (b, hkv, max_pages, group, hd) f32 decode partials nor materialize
-    the (b, max_pages*page, hkv, hd) gathered prefill KV copy."""
+    the (b, max_pages*page, hkv, hd) gathered prefill KV copy.  The
+    sampling-API acceptance greps the ENTRY signature: int32 tokens, not
+    (b, vocab) logits, leave the step (no host round-trip for
+    sampling)."""
     fam = registry.get_family(cfg)
     if params is None:
         params = fam.init(jax.random.key(0), cfg)
+    if sampling is None:
+        sampling = greedy_state(max_batch)
     num_pages = max_batch * max_seq // page_size
     arena = fam.init_paged_cache(cfg, num_pages + 1, page_size, max_batch)
     bt = jnp.zeros((max_batch, max_seq // page_size), jnp.int32)
@@ -151,13 +168,14 @@ def lowered_paged_hlo(cfg: ModelConfig, which: str = "decode", *,
     prefill_fn, decode_fn = make_paged_serve_fns(cfg)
     if which == "decode":
         lowered = decode_fn.lower(params, arena, bt, zeros_b, zeros_b,
-                                  jax.random.key(0))
+                                  sampling)
     elif which == "prefill":
         chunk = {"tokens": jnp.zeros((max_batch, prefill_chunk), jnp.int32)}
         if cfg.frontend == "patch":
             chunk["patches"] = jnp.zeros(
                 (max_batch, prefill_chunk, cfg.frontend_dim), jnp.float32)
-        lowered = prefill_fn.lower(params, chunk, arena, bt, zeros_b, zeros_b)
+        lowered = prefill_fn.lower(params, chunk, arena, bt, zeros_b, zeros_b,
+                                   sampling)
     else:
         raise ValueError(which)
     return lowered.compile().as_text()

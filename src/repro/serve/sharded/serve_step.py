@@ -6,16 +6,21 @@ the jitted step translates them per shard:
 
   * the (b, max_pages) block table and the (b,)/(b, c) token inputs are
     tiny and REPLICATED (the broadcast query of the near-memory layout);
-  * inside shard_map each device rewrites the table into LOCAL ids —
-    entries it owns become bank slots, everything else (other shards'
-    pages, the null sentinel) becomes its local null slot;
-  * the family hooks run UNCHANGED on the local view: page writes land
-    in resident pages (non-owned tokens fall into the local null sink),
-    and `cfg.mem_axis` flips the attention layer into resident-pages-
-    only partials mode + cross-shard log-sum-exp merge
-    (`models/layers.py` / `distribution/collectives.py`);
+  * the family hooks receive the GLOBAL table and localize it
+    themselves: page WRITES go through `layers.localize_block_table`
+    (entries this shard owns become bank slots, everything else — other
+    shards' pages, the null sentinel — its local null slot), while
+    `cfg.mem_axis` flips the attention layer into the rotation-aware
+    resident-stride walk + partials mode + cross-shard log-sum-exp merge
+    (`models/layers.py` / `distribution/collectives.py`).  Keeping the
+    global ids to the walk is what lets each shard recover a sequence's
+    per-prompt shard ROTATION (the bank-balance fix) from the table
+    itself — no extra step inputs;
   * out through the boundary travel only the updated LOCAL banks (which
-    never move) and the replicated (b, vocab) logits.
+    never move) and the replicated (b, vocab) logits, which the step
+    immediately collapses to int32 tokens via the per-slot
+    `SamplingState` — sampling happens in-jit, after the summary merge,
+    identically on every shard.
 
 Nothing page-sized ever crosses the interconnect — the HLO-structure
 test pins that: every collective in the compiled step is summary-sized.
@@ -33,38 +38,30 @@ from repro.launch.mesh import MEM_AXIS
 from repro.models.config import ModelConfig
 from repro.models import registry
 from repro.serve.kv_cache import PAGED_KV_KEYS
-from repro.serve.serve_step import sample_logits
+from repro.serve.sampling import SamplingState, greedy_state, sample_tokens
 
 
 def make_sharded_serve_fns(cfg: ModelConfig, mesh: Mesh, num_pages: int,
-                           *, temperature: float = 0.0,
-                           arena_keys=tuple(PAGED_KV_KEYS)):
+                           *, arena_keys=tuple(PAGED_KV_KEYS)):
     """Sharded analogues of `make_paged_serve_fns` — same signatures,
-    GLOBAL block tables; `num_pages` is the global pool size (fixes the
-    static page→shard arithmetic).  `arena_keys` names the family's
-    arena leaves (non-KV leaves ride replicated)."""
+    GLOBAL block tables, per-slot `SamplingState`; `num_pages` is the
+    global pool size (fixes the static page→shard arithmetic).
+    `arena_keys` names the family's arena leaves (non-KV leaves ride
+    replicated)."""
     fam = registry.get_family(cfg)
     if not registry.has_paged(cfg):
         raise ValueError(f"family {cfg.family!r} has no paged serving path")
     n = mesh.shape[MEM_AXIS]
     if num_pages % n:
         raise ValueError(f"num_pages {num_pages} must divide over {n} shards")
-    pps = num_pages // n
     scfg = cfg.replace(mem_axis=MEM_AXIS)
     arena_specs = {k: (P(None, MEM_AXIS) if k in PAGED_KV_KEYS else P())
                    for k in arena_keys}
     rep = P()
     cpu = jax.default_backend() == "cpu"
 
-    def to_local(bt):
-        """Global pool ids -> this shard's bank slots; foreign pages and
-        the null sentinel -> the local null slot (pps)."""
-        idx = jax.lax.axis_index(MEM_AXIS)
-        return jnp.where(bt // pps == idx, bt % pps, pps).astype(jnp.int32)
-
     def prefill_body(params, chunk, arena, bt, start, clen):
-        return fam.paged_prefill(params, scfg, chunk, arena, to_local(bt),
-                                 start, clen)
+        return fam.paged_prefill(params, scfg, chunk, arena, bt, start, clen)
 
     prefill_sharded = shard_map(
         prefill_body, mesh=mesh,
@@ -72,8 +69,8 @@ def make_sharded_serve_fns(cfg: ModelConfig, mesh: Mesh, num_pages: int,
         out_specs=(arena_specs, rep), check_rep=False)
 
     def decode_body(params, arena, bt, positions, tokens):
-        return fam.paged_decode_step(params, scfg, arena, to_local(bt),
-                                     positions, tokens)
+        return fam.paged_decode_step(params, scfg, arena, bt, positions,
+                                     tokens)
 
     decode_sharded = shard_map(
         decode_body, mesh=mesh,
@@ -81,17 +78,18 @@ def make_sharded_serve_fns(cfg: ModelConfig, mesh: Mesh, num_pages: int,
         out_specs=(arena_specs, rep), check_rep=False)
 
     @partial(jax.jit, donate_argnums=() if cpu else (2,))
-    def prefill_chunk(params, chunk, arena, block_table, start, chunk_len):
-        return prefill_sharded(params, chunk, arena, block_table, start,
-                               chunk_len)
+    def prefill_chunk(params, chunk, arena, block_table, start, chunk_len,
+                      sampling: SamplingState):
+        arena, logits = prefill_sharded(params, chunk, arena, block_table,
+                                        start, chunk_len)
+        return arena, sample_tokens(logits, sampling)
 
     @partial(jax.jit, donate_argnums=() if cpu else (1,))
-    def decode(params, arena, block_table, positions, tokens, key):
+    def decode(params, arena, block_table, positions, tokens,
+               sampling: SamplingState):
         arena, logits = decode_sharded(params, arena, block_table, positions,
                                        tokens)
-        key, sub = jax.random.split(key)
-        next_tokens = sample_logits(logits, sub, temperature)
-        return arena, next_tokens, key
+        return arena, sample_tokens(logits, sampling)
 
     return prefill_chunk, decode
 
@@ -99,16 +97,20 @@ def make_sharded_serve_fns(cfg: ModelConfig, mesh: Mesh, num_pages: int,
 def lowered_sharded_hlo(cfg: ModelConfig, mesh: Mesh, which: str = "decode",
                         *, max_batch: int = 2, max_seq: int = 64,
                         page_size: int = 8, prefill_chunk: int = 8,
-                        params=None) -> str:
+                        params=None,
+                        sampling: SamplingState | None = None) -> str:
     """Compile the jitted SHARDED serving step and return its optimized
     HLO text — the interconnect-contract check greps this: every
     collective op must be summary-sized (no page-sized operands cross
-    the mesh)."""
+    the mesh), and the ENTRY signature carries int32 tokens, not
+    logits."""
     from repro.serve.sharded.arena import ShardedPagedKVArena
 
     fam = registry.get_family(cfg)
     if params is None:
         params = fam.init(jax.random.key(0), cfg)
+    if sampling is None:
+        sampling = greedy_state(max_batch)
     n = mesh.shape[MEM_AXIS]
     num_pages = -(-max_batch * max_seq // page_size // n) * n
     arena = ShardedPagedKVArena(cfg, num_pages=num_pages,
@@ -119,14 +121,14 @@ def lowered_sharded_hlo(cfg: ModelConfig, mesh: Mesh, which: str = "decode",
     prefill_fn, decode_fn = make_sharded_serve_fns(cfg, mesh, num_pages)
     if which == "decode":
         lowered = decode_fn.lower(params, arena.kv, bt, zeros_b, zeros_b,
-                                  jax.random.key(0))
+                                  sampling)
     elif which == "prefill":
         chunk = {"tokens": jnp.zeros((max_batch, prefill_chunk), jnp.int32)}
         if cfg.frontend == "patch":
             chunk["patches"] = jnp.zeros(
                 (max_batch, prefill_chunk, cfg.frontend_dim), jnp.float32)
         lowered = prefill_fn.lower(params, chunk, arena.kv, bt, zeros_b,
-                                   zeros_b)
+                                   zeros_b, sampling)
     else:
         raise ValueError(which)
     return lowered.compile().as_text()

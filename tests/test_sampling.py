@@ -1,0 +1,558 @@
+"""The streaming serve API and in-step sampling (serve/sampling.py,
+serve/api.py, the engine's event stream and token-budget tick).
+
+Pins the redesign's acceptance surface:
+
+* the vectorized sampler: greedy rows == exact argmax, top-k/top-p
+  masked renormalization, counter-derived threefry keys, row isolation;
+* the DETERMINISM MATRIX — the same (prompt, seed, params) emits
+  identical tokens across batch compositions, submission order, and
+  preempt/resume replays (the sharded {1, 8} leg lives in
+  test_sharded_serve.py);
+* greedy `SamplingParams()` default == the legacy Request fields ==
+  the contiguous oracle (byte-parity with the pre-redesign engine);
+* HLO structure: int32 TOKENS, not (b, vocab) logits, leave the
+  compiled paged decode step — no host round-trip for sampling;
+* the event stream: exactly-once TokenEvents through ONE emission path
+  (survives preemption replays), FinishEvents with reasons, stop
+  tokens;
+* `LLMServer.generate` streaming + `stream.fork(params)` decoding one
+  prompt under several sampling regimes from shared COW pages;
+* the token-budget tick: `prefill_decode_ratio` throttles prefill vs
+  decode without changing any request's tokens.
+"""
+from __future__ import annotations
+
+import re
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.models import registry
+from repro.serve import (FinishEvent, GenerationStream, LLMServer, Request,
+                         SamplingParams, ServingEngine, TokenEvent,
+                         greedy_state, sample_tokens, state_for_slots)
+
+from conftest import TINY
+
+
+# ------------------------------------------------------- sampler laws
+
+def _logits(b=4, V=64, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((b, V)), jnp.float32)
+
+
+def test_sampling_params_validation():
+    SamplingParams().validate()
+    SamplingParams(temperature=0.7, top_k=5, top_p=0.9, seed=3).validate()
+    for bad in (dict(temperature=-0.1), dict(top_k=-1), dict(top_p=0.0),
+                dict(top_p=1.5), dict(max_new_tokens=0)):
+        with pytest.raises(ValueError):
+            SamplingParams(**bad).validate()
+
+
+def test_greedy_state_matches_argmax_exactly():
+    logits = _logits()
+    got = sample_tokens(logits, greedy_state(logits.shape[0]))
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(jnp.argmax(logits, -1)))
+
+
+def test_top_k_one_is_argmax_whatever_the_seed():
+    logits = _logits()
+    for seed in (0, 1, 99):
+        st = state_for_slots(4, [(i, SamplingParams(temperature=1.0, top_k=1,
+                                                    seed=seed), t)
+                                 for i, t in zip(range(4), (0, 5, 9, 2))])
+        np.testing.assert_array_equal(
+            np.asarray(sample_tokens(logits, st)),
+            np.asarray(jnp.argmax(logits, -1)))
+
+
+def test_top_k_draws_stay_inside_the_top_k_set():
+    logits = _logits(b=2, V=32, seed=1)
+    top4 = np.argsort(np.asarray(logits), axis=-1)[:, -4:]
+    for step in range(40):
+        st = state_for_slots(2, [(i, SamplingParams(temperature=1.5, top_k=4,
+                                                    seed=7), step)
+                                 for i in range(2)])
+        tok = np.asarray(sample_tokens(logits, st))
+        for i in range(2):
+            assert tok[i] in top4[i], (step, i, tok[i], top4[i])
+
+
+def test_top_p_nucleus_masks_the_tail():
+    # one dominant token (prob ~0.97): top_p=0.5 must always pick it
+    logits = np.zeros((1, 16), np.float32)
+    logits[0, 3] = 5.0
+    st = lambda step: state_for_slots(
+        1, [(0, SamplingParams(temperature=1.0, top_p=0.5, seed=11), step)])
+    draws = {int(np.asarray(sample_tokens(jnp.asarray(logits), st(t)))[0])
+             for t in range(30)}
+    assert draws == {3}
+
+
+def test_counter_derived_keys_replay_and_advance():
+    logits = _logits(b=1, V=128, seed=2)
+    sp = SamplingParams(temperature=1.0, seed=5)
+    draw = lambda step: int(np.asarray(sample_tokens(
+        logits, state_for_slots(1, [(0, sp, step)])))[0])
+    assert draw(7) == draw(7)                       # pure in (seed, step)
+    assert len({draw(t) for t in range(32)}) > 4    # counter advances
+
+
+def test_rows_sample_independently():
+    """Row 0's draw must not depend on row 1's params (vectorized
+    per-slot keys, no cross-row coupling)."""
+    logits = _logits(b=2, V=64, seed=3)
+    sp0 = SamplingParams(temperature=0.9, seed=1)
+    a = sample_tokens(logits, state_for_slots(
+        2, [(0, sp0, 4), (1, SamplingParams(temperature=1.3, seed=2), 9)]))
+    b = sample_tokens(logits, state_for_slots(
+        2, [(0, sp0, 4), (1, SamplingParams(temperature=0.2, top_k=3,
+                                            seed=77), 1)]))
+    assert int(a[0]) == int(b[0])
+
+
+# ------------------------------------------------ determinism matrix
+
+def _prompt(n, seed, vocab):
+    return (np.random.default_rng(seed).integers(0, vocab, n)
+            .astype(np.int32))
+
+
+def _tokens_of(eng) -> dict[int, tuple]:
+    return {r.uid: tuple(r.tokens) for r in eng.run()}
+
+
+def test_tokens_are_pure_in_prompt_seed_params_across_batches():
+    """Same (prompt, seed, params) -> identical tokens whether the
+    request runs alone, alongside other traffic, or submitted last."""
+    cfg = TINY["dense"]
+    params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+    probe = dict(prompt=_prompt(18, 1, cfg.vocab_size),
+                 sampling=SamplingParams(temperature=0.8, top_k=8,
+                                         top_p=0.9, seed=13,
+                                         max_new_tokens=6))
+    other = [dict(prompt=_prompt(9 + 3 * i, 10 + i, cfg.vocab_size),
+                  sampling=SamplingParams(temperature=1.1, seed=50 + i,
+                                          max_new_tokens=6))
+             for i in range(2)]
+
+    def serve(reqs):
+        eng = ServingEngine(cfg, params, max_batch=4, max_seq=64,
+                            page_size=8, prefill_chunk=8)
+        for uid, r in enumerate(reqs):
+            eng.submit(Request(uid=uid, **r))
+        return eng
+
+    solo = _tokens_of(serve([probe]))[0]
+    first = _tokens_of(serve([probe] + other))[0]
+    last = _tokens_of(serve(other + [probe]))[2]
+    assert solo == first == last
+
+
+def test_sampled_tokens_survive_preempt_resume():
+    """Counter-derived randomness replays exactly: a run tight enough to
+    preempt must emit the same tokens as an ample pool."""
+    cfg = TINY["dense"]
+    params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+    reqs = [dict(prompt=_prompt(20, 30 + i, cfg.vocab_size),
+                 sampling=SamplingParams(temperature=0.9, top_p=0.85,
+                                         seed=i, max_new_tokens=6))
+            for i in range(3)]
+
+    def serve(pool_pages, high_watermark=None):
+        eng = ServingEngine(cfg, params, max_batch=4, max_seq=64,
+                            page_size=8, pool_pages=pool_pages,
+                            high_watermark=high_watermark)
+        preempted = []
+        orig = eng._preempt_slot
+        eng._preempt_slot = lambda idx, victim: (
+            preempted.append(victim.request.uid), orig(idx, victim))
+        for uid, r in enumerate(reqs):
+            eng.submit(Request(uid=uid, **r))
+        return _tokens_of(eng), preempted
+
+    ample, pre_a = serve(16)
+    tight, pre_t = serve(16, high_watermark=0.5)
+    assert pre_a == [] and pre_t, "watermark run must actually preempt"
+    assert tight == ample
+
+
+def test_greedy_default_is_byte_identical_to_legacy_fields():
+    """`SamplingParams()` IS the old engine: legacy Request fields, the
+    explicit default params, and the contiguous oracle all agree."""
+    cfg = TINY["dense"]
+    params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+    prompt = _prompt(21, 4, cfg.vocab_size)
+
+    def serve(layout, **req_kw):
+        eng = ServingEngine(cfg, params, max_batch=2, max_seq=64,
+                            page_size=8, layout=layout)
+        eng.submit(Request(uid=0, prompt=prompt.copy(), **req_kw))
+        return _tokens_of(eng)[0]
+
+    legacy = serve("paged", max_new_tokens=7)
+    explicit = serve("paged", sampling=SamplingParams(max_new_tokens=7))
+    oracle = serve("contiguous", max_new_tokens=7)
+    assert legacy == explicit == oracle
+
+
+def test_stop_tokens_retire_with_reason():
+    cfg = TINY["dense"]
+    params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+    prompt = _prompt(12, 6, cfg.vocab_size)
+
+    def serve(**req_kw):
+        eng = ServingEngine(cfg, params, max_batch=1, max_seq=64, page_size=8)
+        eng.submit(Request(uid=0, prompt=prompt.copy(), **req_kw))
+        return eng.run()[0]
+
+    free = serve(sampling=SamplingParams(max_new_tokens=8))
+    assert free.finish_reason == "length" and len(free.tokens) == 8
+    stop_tok = free.tokens[3]
+    stopped = serve(sampling=SamplingParams(max_new_tokens=8,
+                                            stop=(stop_tok,)))
+    assert stopped.finish_reason == "stop"
+    assert stopped.tokens == free.tokens[:4]
+    # legacy eos_token folds into the stop set
+    legacy = serve(max_new_tokens=8, eos_token=stop_tok)
+    assert legacy.tokens == stopped.tokens
+    assert legacy.finish_reason == "stop"
+
+
+@pytest.mark.parametrize("family", ["moe", "hybrid", "vlm"])
+def test_sampled_determinism_across_the_zoo(family):
+    """Every paged family serves per-request sampling deterministically
+    (and diverges from greedy)."""
+    cfg = TINY[family]
+    params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+    rng = np.random.default_rng(sum(map(ord, family)))
+    pe = (rng.standard_normal((cfg.num_patches, cfg.frontend_dim))
+          .astype(np.float32) if cfg.frontend == "patch" else None)
+    prompt = rng.integers(0, cfg.vocab_size, 14).astype(np.int32)
+
+    def serve(sp):
+        eng = ServingEngine(cfg, params, max_batch=2, max_seq=64,
+                            page_size=8, prefill_chunk=8)
+        eng.submit(Request(uid=0, prompt=prompt.copy(), patch_embeds=pe,
+                           sampling=sp))
+        return _tokens_of(eng)[0]
+
+    sp = SamplingParams(temperature=0.9, top_p=0.9, seed=5,
+                        max_new_tokens=5)
+    assert serve(sp) == serve(sp)
+    assert serve(sp) != serve(SamplingParams(max_new_tokens=5))
+
+
+# --------------------------------------------------- HLO structure
+
+def _entry_signature(hlo_text: str) -> str:
+    m = re.search(r"ENTRY[^\n]*->\s*(\([^)]*\)|[^\s{]+)", hlo_text)
+    assert m, "no ENTRY signature in HLO text"
+    return m.group(1)
+
+
+@pytest.mark.parametrize("sampled", [False, True])
+def test_decode_step_hlo_emits_tokens_not_logits(sampled):
+    """The sampling redesign's interconnect contract: int32 tokens leave
+    the compiled paged decode step; the (b, vocab) logits never cross
+    the host boundary — greedy AND sampled states compile to the same
+    token-out signature (no recompile, no round-trip)."""
+    from repro.serve.serve_step import HLO_PROBE_GEOM, lowered_paged_hlo
+
+    cfg = TINY["dense"]
+    b = HLO_PROBE_GEOM["max_batch"]
+    state = None
+    if sampled:
+        state = state_for_slots(b, [
+            (i, SamplingParams(temperature=0.8, top_k=4, top_p=0.9,
+                               seed=i), i) for i in range(b)])
+    sig = _entry_signature(lowered_paged_hlo(cfg, "decode", sampling=state,
+                                             **HLO_PROBE_GEOM))
+    assert f"s32[{b}]" in sig, sig                    # tokens out
+    assert f"f32[{b},{cfg.vocab_size}]" not in sig, sig   # logits stay in
+
+
+def test_prefill_step_hlo_emits_tokens_not_logits():
+    """The first generated token leaves the PREFILL step as a token too
+    — the host-side argmax over prefill logits is gone."""
+    from repro.serve.serve_step import HLO_PROBE_GEOM, lowered_paged_hlo
+
+    cfg = TINY["dense"]
+    b = HLO_PROBE_GEOM["max_batch"]
+    sig = _entry_signature(lowered_paged_hlo(cfg, "prefill",
+                                             **HLO_PROBE_GEOM))
+    assert f"s32[{b}]" in sig, sig
+    assert f"f32[{b},{cfg.vocab_size}]" not in sig, sig
+
+
+# ------------------------------------------------------ event stream
+
+def test_event_stream_is_exactly_once_and_ordered():
+    cfg = TINY["dense"]
+    params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+    eng = ServingEngine(cfg, params, max_batch=2, max_seq=64, page_size=8)
+    for uid in range(3):
+        eng.submit(Request(uid=uid, prompt=_prompt(10 + uid, uid,
+                                                   cfg.vocab_size),
+                           max_new_tokens=4))
+    toks: dict[int, list] = {}
+    finishes: dict[int, FinishEvent] = {}
+    for ev in eng.stream():
+        if isinstance(ev, TokenEvent):
+            assert ev.index == len(toks.setdefault(ev.uid, []))
+            toks[ev.uid].append(ev.token)
+        else:
+            assert ev.uid not in finishes
+            finishes[ev.uid] = ev
+    results = {r.uid: r for r in eng.results}
+    assert set(finishes) == set(results) == {0, 1, 2}
+    for uid, r in results.items():
+        assert toks[uid] == r.tokens                # stream == Result
+        assert finishes[uid].result.tokens == r.tokens
+
+
+def test_event_stream_survives_preemption_without_duplicates():
+    """A preempted slot recomputes its tokens; the event stream must not
+    re-publish the replayed indices."""
+    cfg = TINY["dense"]
+    params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+    eng = ServingEngine(cfg, params, max_batch=4, max_seq=64, page_size=8,
+                        pool_pages=16, high_watermark=0.5)
+    preempted = []
+    orig = eng._preempt_slot
+    eng._preempt_slot = lambda idx, victim: (
+        preempted.append(victim.request.uid), orig(idx, victim))
+    for uid in range(3):
+        eng.submit(Request(uid=uid, prompt=_prompt(20, 40 + uid,
+                                                   cfg.vocab_size),
+                           max_new_tokens=6))
+    seen: dict[tuple, int] = {}
+    for ev in eng.stream():
+        if isinstance(ev, TokenEvent):
+            seen[(ev.uid, ev.index)] = seen.get((ev.uid, ev.index), 0) + 1
+    assert preempted, "watermark run must actually preempt"
+    assert all(n == 1 for n in seen.values()), seen
+    for r in eng.results:
+        assert [seen[(r.uid, i)] for i in range(len(r.tokens))]
+
+
+# -------------------------------------------------- LLMServer facade
+
+def test_llmserver_streams_interleave_and_match_batch_run():
+    cfg = TINY["dense"]
+    params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+    prompts = [_prompt(8 + 5 * i, 60 + i, cfg.vocab_size) for i in range(3)]
+    sps = [SamplingParams(max_new_tokens=4),
+           SamplingParams(temperature=0.8, seed=1, max_new_tokens=5),
+           SamplingParams(temperature=1.2, top_k=6, seed=2,
+                          max_new_tokens=3)]
+
+    srv = LLMServer(cfg, params, max_batch=2, max_seq=64, page_size=8)
+    streams = [srv.generate(p, sp) for p, sp in zip(prompts, sps)]
+    # consume the LAST stream first: iteration must tick the shared
+    # engine and buffer the other streams' events
+    last = streams[2].drain()
+    assert len(last.tokens) == 3
+    evs0 = list(streams[0])
+    assert isinstance(evs0[-1], FinishEvent)
+    assert streams[0].tokens == streams[0].result.tokens
+    assert len(streams[1].drain().tokens) == 5
+
+    # the same traffic through the plain engine emits the same tokens
+    eng = ServingEngine(cfg, params, max_batch=2, max_seq=64, page_size=8)
+    for uid, (p, sp) in enumerate(zip(prompts, sps)):
+        eng.submit(Request(uid=uid, prompt=p.copy(), sampling=sp))
+    want = _tokens_of(eng)
+    for uid, st in enumerate(streams):
+        assert tuple(st.result.tokens) == want[uid]
+
+
+def test_stream_fork_decodes_one_prompt_under_two_regimes():
+    cfg = TINY["dense"]
+    params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+    prompt = _prompt(18, 70, cfg.vocab_size)
+
+    srv = LLMServer(cfg, params, max_batch=2, max_seq=64, page_size=8)
+    parent = srv.generate(prompt, SamplingParams(max_new_tokens=8))
+    child = parent.fork(SamplingParams(temperature=1.0, seed=9,
+                                       max_new_tokens=8))
+    assert srv.engine.pool.stats().shared_pages > 0   # COW prefix shared
+    a, b = parent.drain(), child.drain()
+    assert isinstance(child, GenerationStream)
+    assert a.tokens != b.tokens                       # regimes diverge
+    # the child's stream view includes the shared fork-point prefix
+    assert child.tokens == b.tokens
+    assert b.tokens[:1] == a.tokens[:1]               # shared first token
+    # greedy parent is unperturbed by the sampled sibling
+    solo = ServingEngine(cfg, params, max_batch=1, max_seq=64, page_size=8)
+    solo.submit(Request(uid=0, prompt=prompt.copy(), max_new_tokens=8))
+    assert tuple(a.tokens) == _tokens_of(solo)[0]
+
+
+# ------------------------------------------------- token-budget tick
+
+def test_llmserver_bounds_unadmittable_requests():
+    """Regression: a request the pool can never admit must terminate the
+    stream (max_steps), not spin _pump forever."""
+    cfg = TINY["dense"]
+    params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+    srv = LLMServer(cfg, params, max_batch=2, max_seq=64, page_size=8,
+                    pool_pages=2, max_steps=50)
+    stream = srv.generate(_prompt(40, 130, cfg.vocab_size),
+                          SamplingParams(max_new_tokens=4))
+    assert list(stream) == [] and stream.finished
+    with pytest.raises(RuntimeError):
+        stream.drain()
+
+
+def test_llmserver_uid_allocator_skips_explicit_uids():
+    """Regression: an explicit uid must not collide with the internal
+    allocator on the next argument-free generate()."""
+    cfg = TINY["dense"]
+    params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+    srv = LLMServer(cfg, params, max_batch=2, max_seq=64, page_size=8)
+    a = srv.generate(_prompt(6, 131, cfg.vocab_size),
+                     SamplingParams(max_new_tokens=3), uid=0)
+    b = srv.generate(_prompt(6, 132, cfg.vocab_size),
+                     SamplingParams(max_new_tokens=3))
+    assert b.uid == 1
+    assert {r.uid for r in srv.run()} == {0, 1}
+    assert len(a.drain().tokens) == len(b.drain().tokens) == 3
+
+
+def test_prefill_decode_ratio_throttles_without_changing_tokens():
+    """The fairness knob reshapes the schedule, never the tokens: a
+    prefill-starved ratio stretches admission over more ticks while
+    active decode keeps emitting, and every request's tokens match the
+    unthrottled run (purity makes fairness safe)."""
+    cfg = TINY["dense"]
+    params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+    short = _prompt(6, 80, cfg.vocab_size)
+    long = _prompt(50, 81, cfg.vocab_size)
+
+    def serve(**kw):
+        eng = ServingEngine(cfg, params, max_batch=2, max_seq=128,
+                            page_size=8, prefill_chunk=16, **kw)
+        eng.submit(Request(uid=0, prompt=short.copy(), max_new_tokens=10))
+        eng.submit(Request(uid=1, prompt=long.copy(), max_new_tokens=4))
+        toks = _tokens_of(eng)
+        return eng, toks
+
+    e_full, toks_full = serve()
+    e_tight, toks_tight = serve(prefill_decode_ratio=0.25,
+                                tick_token_budget=16)
+    assert toks_tight == toks_full
+    # 4-token prefill share: the 50-token prompt needs more ticks
+    assert e_tight.steps > e_full.steps
+    # prefill dispatch widths shrank to the budgeted bucket
+    assert max(w for _, w in e_tight.prefill_shapes) \
+        <= max(w for _, w in e_full.prefill_shapes)
+
+
+def test_decode_share_caps_slots_per_tick_oldest_first():
+    cfg = TINY["dense"]
+    params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+
+    def serve(**kw):
+        eng = ServingEngine(cfg, params, max_batch=4, max_seq=64,
+                            page_size=8, **kw)
+        for uid in range(4):
+            eng.submit(Request(uid=uid, prompt=_prompt(6, 90 + uid,
+                                                       cfg.vocab_size),
+                               max_new_tokens=5))
+        return eng, _tokens_of(eng)
+
+    e_full, toks_full = serve()
+    # ratio ~1: nearly the whole budget goes to prefill, decode is
+    # squeezed to one slot per tick — same tokens, more ticks
+    e_one, toks_one = serve(prefill_decode_ratio=0.95,
+                            tick_token_budget=8)
+    assert toks_one == toks_full
+    assert e_one.steps > e_full.steps
+
+
+def test_preempted_fork_child_replays_inherited_tokens():
+    """Regression: a fork child inherits tokens drawn under the PARENT's
+    params; if the child is preempted, readmission must REPLAY that
+    history as forced context, not re-sample it under the child's own
+    regime — published tokens can never be contradicted."""
+    cfg = TINY["dense"]
+    params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+    prompt = _prompt(16, 100, cfg.vocab_size)
+
+    eng = ServingEngine(cfg, params, max_batch=2, max_seq=64, page_size=8)
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=8))
+    while not any(len(s.generated) >= 3 for s in eng.slots.values()):
+        eng.step()
+    inherited = list(next(iter(eng.slots.values())).generated)
+    eng.fork(0, new_uid=1,
+             sampling=SamplingParams(temperature=0.9, seed=42,
+                                     max_new_tokens=8))
+    # force the child off its slot: readmission must replay `inherited`
+    idx, child = next((i, s) for i, s in eng.slots.items()
+                      if s.request.uid == 1)
+    eng._preempt_slot(idx, child)
+    res = {r.uid: r.tokens for r in eng.run()}
+    assert res[1][:len(inherited)] == inherited, (inherited, res[1])
+    assert res[0][:len(inherited)] == inherited
+    assert res[1] != res[0]                    # child still diverges after
+
+
+def test_contiguous_layout_ignores_decode_throttle():
+    """Regression: the contiguous fused step writes KV/advances pos for
+    EVERY batch row, so the token-budget decode cap must not exclude
+    rows there — a throttled contiguous run emits identical tokens."""
+    cfg = TINY["ssm"]                          # the real contiguous family
+    params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+
+    def serve(**kw):
+        eng = ServingEngine(cfg, params, max_batch=4, max_seq=64,
+                            page_size=8, layout="contiguous", **kw)
+        for uid in range(3):
+            eng.submit(Request(uid=uid, prompt=_prompt(8, 110 + uid,
+                                                       cfg.vocab_size),
+                               max_new_tokens=6))
+        return _tokens_of(eng)
+
+    assert serve(prefill_decode_ratio=0.5, tick_token_budget=2) == serve()
+
+
+def test_explicit_max_new_tokens_folds_into_explicit_params():
+    """Regression: Request(max_new_tokens=N, sampling=SamplingParams(...))
+    with a params-default budget must honor N (like eos_token, every
+    legacy field folds in); an explicit params budget wins."""
+    cfg = TINY["dense"]
+    params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+
+    def serve(**req_kw):
+        eng = ServingEngine(cfg, params, max_batch=1, max_seq=64,
+                            page_size=8)
+        eng.submit(Request(uid=0, prompt=_prompt(8, 120, cfg.vocab_size),
+                           **req_kw))
+        return eng.run()[0].tokens
+
+    mixed = serve(max_new_tokens=5,
+                  sampling=SamplingParams(temperature=0.8, seed=1))
+    assert len(mixed) == 5
+    explicit = serve(max_new_tokens=5,
+                     sampling=SamplingParams(temperature=0.8, seed=1,
+                                             max_new_tokens=3))
+    assert len(explicit) == 3                  # explicit params win
+
+
+def test_ratio_zero_never_deadlocks_admission():
+    """With nothing decoding, an idle decode share rolls over to
+    prefill — a pure-decode ratio must still admit and finish."""
+    cfg = TINY["dense"]
+    params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+    eng = ServingEngine(cfg, params, max_batch=2, max_seq=64, page_size=8,
+                        prefill_decode_ratio=0.0)
+    eng.submit(Request(uid=0, prompt=_prompt(20, 95, cfg.vocab_size),
+                       max_new_tokens=4))
+    assert len(_tokens_of(eng)[0]) == 4

@@ -562,9 +562,9 @@ def test_prefill_tick_is_one_call_for_all_admitting_slots(monkeypatch):
             0, cfg.vocab_size, 20 + i).astype(np.int32), max_new_tokens=2))
     calls = []
     inner = eng.prefill_fn
-    def counting(params, chunk, arena, bt, start, clen):
+    def counting(params, chunk, arena, bt, start, clen, sampling):
         calls.append(np.asarray(clen).copy())
-        return inner(params, chunk, arena, bt, start, clen)
+        return inner(params, chunk, arena, bt, start, clen, sampling)
     monkeypatch.setattr(eng, "prefill_fn", counting)
     eng.step()
     assert len(calls) == 1                       # ONE jit call per tick

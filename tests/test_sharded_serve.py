@@ -2,12 +2,16 @@
 mode): the page arena distributed over a "mem" mesh axis.
 
 In-process: the partials-mode kernel/oracle contract (shard halves merge
-to the exact full softmax), the strided sharded allocator's invariants,
-and the 1-device-mesh degrade path.  Subprocess (8 forced host devices,
-like test_multidevice): byte-identical greedy tokens vs the
+to the exact full softmax), the strided sharded allocator's invariants
+(including the per-prompt ROTATION that spreads page 0 of short
+sequences over all banks), and the 1-device-mesh degrade path.
+Subprocess (8 forced host devices, like test_multidevice):
+byte-identical greedy AND per-request-sampled tokens vs the
 single-device arena across the model zoo, per-shard residency ≈ total/n,
-and the interconnect contract on compiled HLO — every collective in the
-jitted sharded step is summary-sized; pages never cross the mesh.
+bank balance under short-prompt bursts, and the interconnect contract on
+compiled HLO — every collective in the jitted sharded step is
+summary-sized (pages never cross the mesh) and int32 tokens, not
+logits, leave the step.
 """
 from __future__ import annotations
 
@@ -213,6 +217,35 @@ def test_sharded_pool_untracked_alloc_spreads_least_loaded():
     pool.free(pages)
 
 
+def test_rotation_spreads_page0_of_short_sequences_across_banks():
+    """The bank-balance law: WITHOUT rotation, page 0 of every sequence
+    lands on shard 0 (one-page sequences pile onto one bank); WITH
+    per-sequence rotations the same load spreads evenly — and the
+    stride stays shard-stable (logical page j on shard (rot + j) % n)."""
+    n = 8
+    flat = ShardedUniMemPool(64, 4, num_shards=n)
+    seqs = [SequencePageTable(flat) for _ in range(n)]
+    for s in seqs:
+        s.append_tokens(4)                     # one page each
+    peaks = [d["peak_allocated_pages"] for d in flat.shard_stats()]
+    assert peaks[0] == n and sum(peaks[1:]) == 0   # the old concentration
+
+    rot = ShardedUniMemPool(64, 4, num_shards=n)
+    seqs = [SequencePageTable(rot, rotation=i % n) for i in range(n)]
+    for s in seqs:
+        s.append_tokens(4)
+    peaks = [d["peak_allocated_pages"] for d in rot.shard_stats()]
+    assert peaks == [1] * n, peaks             # perfectly spread
+    # the stride follows the rotation for later pages too
+    seqs[3].append_tokens(8)                   # logical pages 1, 2
+    assert [rot.shard_of(p) for p in seqs[3].pages] == [3, 4, 5]
+    # COW replacement keeps the rotated shard
+    f = seqs[3].fork()
+    src, dst = seqs[3].cow_last_page()
+    assert rot.shard_of(src) == rot.shard_of(dst) == 5
+    f.release()
+
+
 # ------------------------------------------------------- degrade path
 
 def test_one_device_mem_mesh_degrades_to_plain_paged_path():
@@ -333,8 +366,102 @@ def test_sharded_step_collectives_are_summary_sized():
         worst = max(op.result_bytes for op in colls)
         assert worst < bank_bytes / 2, (worst, bank_bytes)
         assert worst < bulk_bytes / 8, (worst, bulk_bytes)
+
+        # sampling-API contract on the SAME compiled step: int32 tokens
+        # leave it, the (b, vocab) logits never cross the host boundary
+        import re
+        m = re.search(r"ENTRY[^\\n]*->\\s*(\\([^)]*\\)|[^\\s{]+)", text)
+        sig = m.group(1)
+        assert f"s32[{geom['max_batch']}]" in sig, sig
+        assert f"f32[{geom['max_batch']},{cfg.vocab_size}]" not in sig, sig
+
         print("collectives:", {op.opcode: op.result_type for op in colls})
         print("worst", worst, "bank", bank_bytes, "bulk", bulk_bytes)
+    """)
+
+
+@pytest.mark.slow
+def test_sampled_tokens_identical_across_shard_counts():
+    """Determinism-matrix leg `--shards {1, 8}`: per-request sampled
+    tokens (temperature + top-k/top-p + seeds) are byte-identical on a
+    forced 8-device mem mesh vs the single-device arena — the partials
+    merge reproduces the full softmax and the in-step sampler consumes
+    identical logits + counters either way."""
+    run_with_devices("""
+        import numpy as np, jax
+        from conftest import TINY
+        from repro.models import registry
+        from repro.serve import ServingEngine, Request, SamplingParams
+        from repro.launch.mesh import make_mem_mesh
+
+        cfg = TINY["dense"]
+        params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+        rng = np.random.default_rng(77)
+        reqs = [dict(uid=i,
+                     prompt=rng.integers(0, cfg.vocab_size,
+                                         int(rng.integers(4, 24))
+                                         ).astype(np.int32),
+                     sampling=SamplingParams(
+                         temperature=0.6 + 0.1 * i,
+                         top_k=6 if i % 2 else 0, top_p=0.9, seed=i,
+                         max_new_tokens=5))
+                for i in range(4)]
+
+        def run(mesh):
+            eng = ServingEngine(cfg, params, max_batch=2, max_seq=64,
+                                page_size=8, mesh=mesh, prefill_chunk=8)
+            for r in reqs:
+                eng.submit(Request(**r))
+            return {r.uid: tuple(r.tokens) for r in eng.run()}
+
+        single = run(None)
+        shard = run(make_mem_mesh(8))
+        assert shard == single, (single, shard)
+        print("sampled 8-shard == 1-shard:", shard == single)
+    """)
+
+
+@pytest.mark.slow
+def test_rotation_spreads_short_prompt_load_on_mesh():
+    """Engine-level bank balance: a burst of one-page prompts must touch
+    MANY banks (per-prompt rotation), not pile page 0 onto shard 0 —
+    and still emit tokens identical to the single-device arena."""
+    run_with_devices("""
+        import numpy as np, jax
+        from conftest import TINY
+        from repro.models import registry
+        from repro.serve import ServingEngine, Request
+        from repro.launch.mesh import make_mem_mesh
+
+        cfg = TINY["dense"]
+        params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+        rng = np.random.default_rng(5)
+        # 12 DISTINCT short prompts: <= 2 pages each (page 8, prompt 8
+        # + 4 new tokens), so the un-rotated stride would touch only
+        # banks 0 and 1
+        reqs = [dict(uid=i, max_new_tokens=4,
+                     prompt=rng.integers(0, cfg.vocab_size, 8)
+                     .astype(np.int32))
+                for i in range(12)]
+
+        def run(mesh):
+            eng = ServingEngine(cfg, params, max_batch=4, max_seq=64,
+                                page_size=8, mesh=mesh)
+            for r in reqs:
+                eng.submit(Request(**r))
+            return eng, {r.uid: tuple(r.tokens) for r in eng.run()}
+
+        _, single = run(None)
+        eng, shard = run(make_mem_mesh(8))
+        assert shard == single, (single, shard)
+        peaks = [s["peak_allocated_pages"] for s in eng.pool.shard_stats()]
+        touched = sum(1 for p in peaks if p > 0)
+        # 12 crc32 content-hash rotations over 8 banks (deterministic
+        # for this prompt set): un-rotated placement would give
+        # touched == 2
+        assert touched >= 3, peaks
+        assert eng.pool.stats().allocated_pages == 0
+        print("per-shard peaks under short-prompt burst:", peaks)
     """)
 
 
