@@ -4,7 +4,9 @@ Times the fused single-pass Pallas kernels (decode + chunked prefill,
 interpret mode on CPU — this container is not the serving hardware, so
 wall-clock is a structural sanity signal, not TPU truth) against their
 XLA ref formulations, and checks bitwise-close parity on every
-geometry.  PASS is parity; the timings ride along for the perf
+geometry.  QUANT_GEOMS reruns a subset with int8/fp8 page banks +
+per-page scale columns — the in-kernel dequant path against the
+dequantizing ref.  PASS is parity; the timings ride along for the perf
 trajectory.
 
     PYTHONPATH=src python benchmarks/paged_kernel_bench.py
@@ -18,6 +20,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.unimem import quantize_kv
 from repro.kernels.paged_attention.ops import paged_decode_attention
 from repro.kernels.paged_attention.ref import paged_decode_attention_ref
 from repro.kernels.paged_prefill.ops import paged_prefill_attention
@@ -30,6 +33,15 @@ GEOMS = [
     (8, 2, 64, 8, 4, 2),
     (8, 8, 128, 8, 2, 2),
 ]
+# quantized reruns: in-kernel dequant vs the dequantizing ref, one
+# sub-tile and one MXU-width geometry per storage dtype
+QUANT_GEOMS = [
+    ("int8", 4, 2, 16, 8, 4, 1),
+    ("int8", 8, 2, 64, 8, 4, 2),
+    ("fp8", 4, 2, 16, 8, 4, 1),
+    ("fp8", 8, 2, 64, 8, 4, 2),
+]
+QUANT_DTYPES = {"int8": jnp.int8, "fp8": jnp.float8_e4m3fn}
 B, CHUNK, REPS = 2, 8, 3
 
 
@@ -76,6 +88,42 @@ def run() -> dict:
                                                pages_per_block=ppb,
                                                interpret=True)
         ref = lambda: paged_prefill_attention_ref(qc, k, v, bt, start, clen)
+        match = bool(np.allclose(np.asarray(kern()), np.asarray(ref()),
+                                 rtol=1e-5, atol=1e-5))
+        ok &= match
+        rows.append(dict(kernel="prefill", geom=geom, match=match,
+                         kernel_ms=_time(kern), ref_ms=_time(ref)))
+
+    for dt, hq, hkv, hd, page, mp, ppb in QUANT_GEOMS:
+        k, v, bt = _setup(rng, hkv, hd, page, mp)
+        qk, ks = quantize_kv(k, QUANT_DTYPES[dt])
+        qv, vs = quantize_kv(v, QUANT_DTYPES[dt])
+        geom = f"{dt}/hq{hq}/hkv{hkv}/hd{hd}/page{page}x{mp}/ppb{ppb}"
+
+        q = jnp.asarray(rng.standard_normal((B, hq, hd)), jnp.float32)
+        pos = jnp.asarray(rng.integers(0, mp * page, B), jnp.int32)
+        kern = lambda: paged_decode_attention(q, qk, qv, bt, pos,
+                                              pages_per_block=ppb,
+                                              k_scale=ks, v_scale=vs,
+                                              interpret=True)
+        ref = lambda: paged_decode_attention_ref(q, qk, qv, bt, pos,
+                                                 k_scale=ks, v_scale=vs)
+        match = bool(np.allclose(np.asarray(kern()), np.asarray(ref()),
+                                 rtol=1e-5, atol=1e-5))
+        ok &= match
+        rows.append(dict(kernel="decode", geom=geom, match=match,
+                         kernel_ms=_time(kern), ref_ms=_time(ref)))
+
+        qc = jnp.asarray(rng.standard_normal((B, CHUNK, hq, hd)), jnp.float32)
+        start = jnp.asarray(rng.integers(0, mp * page - CHUNK, B), jnp.int32)
+        clen = jnp.asarray([CHUNK - 3, CHUNK], jnp.int32)
+        kern = lambda: paged_prefill_attention(qc, qk, qv, bt, start, clen,
+                                               pages_per_block=ppb,
+                                               k_scale=ks, v_scale=vs,
+                                               interpret=True)
+        ref = lambda: paged_prefill_attention_ref(qc, qk, qv, bt, start,
+                                                  clen, k_scale=ks,
+                                                  v_scale=vs)
         match = bool(np.allclose(np.asarray(kern()), np.asarray(ref()),
                                  rtol=1e-5, atol=1e-5))
         ok &= match

@@ -23,15 +23,21 @@ the IN-STEP sampling sweep: the same dense stream rerun with
 per-request temperature + top-p + seeds (serve/sampling.py lowers them
 into the jitted step), gated on seed-replay determinism, reporting
 greedy vs sampled tokens/s so the sampling overhead is tracked.
-`--json PATH` additionally writes a machine-readable `BENCH_serve.json`
-(`"schema": 3` — tokens/s, peak KV bytes, shard topology + per-shard
-KV high-water, the sampling-mode sweep, and the compiled-HLO attention
-traffic of the jitted steps before/after the kernel fusion: the oracle
-formulation's gathered-KV/partials bytes vs the fused kernels' zero).
+`--kv-dtype int8|fp8` stores the paged side QUANTIZED (per-page scales,
+in-kernel dequant); `--quant` adds the capacity sweep gating the int8
+arena at <= 0.55x bf16 page bytes with identical greedy tokens, and
+`--host-tier` adds the forced-watermark spill smoke (DRAM cold bank
+behind the pool; gated on nonzero spill+restore traffic and token
+identity with an all-HBM run).  `--json PATH` additionally writes a
+machine-readable `BENCH_serve.json` (`"schema": 4` — tokens/s, peak KV
+bytes per tier, kv_dtype, shard topology + per-shard KV high-water,
+spill/prefetch counts, the sampling-mode sweep, and the compiled-HLO
+attention traffic of the jitted steps before/after the kernel fusion).
 
     PYTHONPATH=src python benchmarks/serve_throughput.py \
         [--family dense,moe,hybrid,vlm] [--impl flash_pallas] [--ppb 2] \
-        [--shards 8] [--sampling] [--json BENCH_serve.json]
+        [--shards 8] [--sampling] [--kv-dtype int8] [--quant] \
+        [--host-tier] [--json BENCH_serve.json]
 """
 from __future__ import annotations
 
@@ -49,12 +55,25 @@ from repro.serve import ServingEngine, Request, SamplingParams
 
 # machine-readable result schema, versioned so trajectory tooling can
 # evolve: 2 added shard topology + per-shard KV high-water; 3 added the
-# --sampling sweep (mode, greedy vs sampled tokens/s, determinism gate)
-SCHEMA = 3
+# --sampling sweep (mode, greedy vs sampled tokens/s, determinism gate);
+# 4 added kv_dtype + the quantized-arena sweep (int8 page bytes <= 0.55x
+# bf16 at identical greedy tokens) and the host-tier spill smoke (HBM +
+# host arena bytes, spill/prefetch/restore traffic)
+SCHEMA = 4
 
 CFG = ModelConfig(
     name="bench-dense", family="dense", num_layers=2, d_model=64,
     vocab_size=128, num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+    attn_chunk=32, max_seq=256)
+
+# quantized-arena sweep point: head_dim 64 so the int8 payload
+# amortizes the f32 per-token-per-head scale column — the page-bytes
+# ratio is (hd + 4) / (2 hd) = 0.53 at hd=64 (0.625 at hd=16, which
+# would never clear the 0.55 gate: scales are a per-HEAD overhead,
+# paying off only at real head widths)
+QUANT_CFG = ModelConfig(
+    name="bench-quant", family="dense", num_layers=2, d_model=128,
+    vocab_size=128, num_heads=2, num_kv_heads=1, head_dim=64, d_ff=128,
     attn_chunk=32, max_seq=256)
 
 FAMILY_CFGS = {
@@ -101,10 +120,10 @@ def _stream(rng, cfg, n, prompt_hi, max_new):
     return reqs
 
 
-def _run(cfg, params, layout, reqs, mb, ms, mesh=None):
+def _run(cfg, params, layout, reqs, mb, ms, mesh=None, **eng_kw):
     eng = ServingEngine(cfg, params, max_batch=mb, max_seq=ms,
                         page_size=16, layout=layout,
-                        mesh=mesh if layout == "paged" else None)
+                        mesh=mesh if layout == "paged" else None, **eng_kw)
     for r in reqs:
         eng.submit(Request(uid=r.uid, prompt=r.prompt,
                            max_new_tokens=r.max_new_tokens,
@@ -121,6 +140,8 @@ def _run(cfg, params, layout, reqs, mb, ms, mesh=None):
         out["per_shard_peak_pages"] = [
             s["peak_allocated_pages"] for s in eng.pool.shard_stats()]
         out["per_shard_kv_bytes"] = eng.arena.shard_kv_bytes()
+    if eng.host_tier is not None:
+        out["host_tier"] = eng.stats()["host_tier"]
     return out
 
 
@@ -227,8 +248,81 @@ def _sampling_sweep(cfg, params, mesh=None) -> dict:
                 ok=deterministic and diverged)
 
 
+def _quant_sweep(mesh=None, impl=None, ppb=1) -> dict:
+    """int8 page arena vs bf16 on the SAME greedy stream.
+
+    The capacity claim of the quantized page mode, measured end to end:
+    at head_dim 64 the int8 payload + f32 scale column must hold the
+    paged KV high-water to <= 0.55x the bf16 arena's, AND the greedy
+    tokens must stay identical (quantize-on-write + in-kernel dequant
+    never flips an argmax on this workload — the numerics smoke)."""
+    mb, ms, n, phi, mnew = 4, 128, 8, 48, 8
+    base = QUANT_CFG
+    if impl:
+        base = base.replace(attention_impl=impl)
+    base = base.replace(attn_pages_per_block=ppb)
+    rng = np.random.default_rng(777)
+    reqs = _stream(rng, base, n, phi, mnew)
+    runs = {}
+    for tag in ("bf16", "int8"):
+        # pin the baseline to bf16 STORAGE explicitly — the default
+        # arena stores the compute dtype (f32 on CPU), which would
+        # overstate the int8 win
+        cfg = base.replace(kv_dtype=tag)
+        params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+        runs[tag] = _run(cfg, params, "paged", reqs, mb, ms, mesh=mesh)
+    ratio = runs["int8"]["peak_kv_bytes"] / runs["bf16"]["peak_kv_bytes"]
+    same = runs["bf16"]["tokens"] == runs["int8"]["tokens"]
+    return dict(head_dim=base.head_dim, requests=n,
+                bf16_kv_mb=runs["bf16"]["peak_kv_bytes"] / 1e6,
+                int8_kv_mb=runs["int8"]["peak_kv_bytes"] / 1e6,
+                bytes_ratio=ratio,
+                bf16_tok_s=runs["bf16"]["tok_s"],
+                int8_tok_s=runs["int8"]["tok_s"],
+                tokens_match=same,
+                ok=same and ratio <= 0.55)
+
+
+def _tier_sweep(mesh=None) -> dict:
+    """Forced-watermark host-tier smoke: a pool deliberately sized PAST
+    by the workload, with the DRAM cold tier behind it.
+
+    The shedder preempts under the high watermark, preempted slots
+    SPILL to host, readmissions RESTORE (with async prefetch) — and the
+    stream must finish with tokens identical to an all-HBM run of the
+    same requests.  PASS requires nonzero spill AND restore traffic plus
+    token identity; the report carries both arenas' bytes (HBM page
+    high-water, host-tier peak) so capacity-vs-traffic is visible."""
+    mb, ms, n, phi, mnew = 4, 128, 8, 48, 10
+    rng = np.random.default_rng(4242)
+    reqs = _stream(rng, CFG, n, phi, mnew)
+    params = registry.get_family(CFG).init(jax.random.key(0), CFG)
+    base = _run(CFG, params, "paged", reqs, mb, ms, mesh=mesh,
+                pool_pages=64)
+    # limit = 0.5 * 16 = 8 pages vs ~4 pages per active sequence: the
+    # shedder MUST preempt, so the tier MUST see spill traffic
+    tiered = _run(CFG, params, "paged", reqs, mb, ms, mesh=mesh,
+                  pool_pages=16, high_watermark=0.5, host_tier_pages=64)
+    ht = tiered["host_tier"]
+    same = base["tokens"] == tiered["tokens"]
+    spilled = ht["spills"] > 0 and ht["restores"] > 0
+    return dict(requests=n, pool_pages=16, high_watermark=0.5,
+                host_tier_pages=64,
+                all_hbm_kv_mb=base["peak_kv_bytes"] / 1e6,
+                tiered_hbm_kv_mb=tiered["peak_kv_bytes"] / 1e6,
+                host_tier_peak_mb=ht["peak_bytes"] / 1e6,
+                spills=ht["spills"], spilled_pages=ht["spilled_pages"],
+                prefetches=ht["prefetches"], restores=ht["restores"],
+                restored_pages=ht["restored_pages"],
+                evictions=ht["evictions"],
+                all_hbm_tok_s=base["tok_s"], tiered_tok_s=tiered["tok_s"],
+                tokens_match=same,
+                ok=same and spilled)
+
+
 def run(families=None, impl=None, ppb=1, attn_hlo=False,
-        shards: int = 1, sampling: bool = False) -> dict:
+        shards: int = 1, sampling: bool = False, kv_dtype: str | None = None,
+        quant: bool = False, host_tier: bool = False) -> dict:
     families = families or list(FAMILY_CFGS)
     mesh = None
     if shards > 1:
@@ -244,6 +338,10 @@ def run(families=None, impl=None, ppb=1, attn_hlo=False,
         cfg = FAMILY_CFGS[fam]
         if impl:
             cfg = cfg.replace(attention_impl=impl)
+        if kv_dtype:
+            # paged side only — the contiguous oracle keeps the default
+            # cache dtype, so a quantized run is gated quant-vs-oracle
+            cfg = cfg.replace(kv_dtype=kv_dtype)
         return cfg.replace(attn_pages_per_block=ppb)
 
     rows, ok = [], True
@@ -275,11 +373,20 @@ def run(families=None, impl=None, ppb=1, attn_hlo=False,
               "rows": rows,
               "attention_impl": impl or CFG.attention_impl,
               "pages_per_block": ppb,
+              "kv_dtype": kv_dtype or "bf16",
               "shard_topology": {"shards": shards,
                                  "mesh_axis": "mem" if mesh is not None
                                  else None,
                                  "devices": jax.device_count(),
                                  "backend": jax.default_backend()}}
+    if quant:
+        result["quant"] = _quant_sweep(mesh=mesh, impl=impl, ppb=ppb)
+        ok = ok and result["quant"]["ok"]
+        result["ok"] = ok
+    if host_tier:
+        result["host_tier"] = _tier_sweep(mesh=mesh)
+        ok = ok and result["host_tier"]["ok"]
+        result["ok"] = ok
     if sampling:
         cfg = cfg_of("dense")
         params = registry.get_family(cfg).init(jax.random.key(0), cfg)
@@ -302,6 +409,7 @@ def pretty(result: dict):
     topo = result["shard_topology"]
     print(f"   attention_impl={result['attention_impl']} "
           f"pages_per_block={result['pages_per_block']} "
+          f"kv_dtype={result['kv_dtype']} "
           f"shards={topo['shards']} ({topo['devices']} "
           f"{topo['backend']} devices)")
     print(f"{'family':>8}{'batch':>6}{'max_seq':>8}{'reqs':>6}"
@@ -317,6 +425,20 @@ def pretty(result: dict):
               f"{r['contig_kv_mb']:>14.3f}{r['paged_kv_mb']:>13.3f}"
               f"{r['kv_ratio']:>10.2f}  "
               f"{'==' if r['tokens_match'] else 'DIFFER'}{shard}")
+    q = result.get("quant")
+    if q:
+        print(f"   quantized arena (head_dim {q['head_dim']}): bf16 "
+              f"{q['bf16_kv_mb']:.3f} MB -> int8 {q['int8_kv_mb']:.3f} MB "
+              f"({q['bytes_ratio']:.3f}x, gate <= 0.55); tokens "
+              f"{'==' if q['tokens_match'] else 'DIFFER'}")
+    t = result.get("host_tier")
+    if t:
+        print(f"   host tier (pool {t['pool_pages']} pages @ watermark "
+              f"{t['high_watermark']}): HBM {t['tiered_hbm_kv_mb']:.3f} MB "
+              f"(all-HBM run {t['all_hbm_kv_mb']:.3f} MB), host peak "
+              f"{t['host_tier_peak_mb']:.3f} MB; {t['spills']} spills / "
+              f"{t['prefetches']} prefetches / {t['restores']} restores; "
+              f"tokens {'==' if t['tokens_match'] else 'DIFFER'}")
     s = result.get("sampling")
     if s:
         print(f"   in-step sampling [{s['mode']}]: greedy "
@@ -357,10 +479,25 @@ if __name__ == "__main__":
                     help="add the in-step sampling sweep (per-request "
                          "temperature + top-p + seeds on the dense "
                          "stream; gated on seed-replay determinism)")
+    ap.add_argument("--kv-dtype", default=None,
+                    choices=("bf16", "int8", "fp8"),
+                    help="page-arena storage dtype for the paged side of "
+                         "the main sweep (quantize-on-write + in-kernel "
+                         "dequant; the contiguous oracle stays bf16)")
+    ap.add_argument("--quant", action="store_true",
+                    help="add the quantized-arena sweep: int8 vs bf16 "
+                         "page bytes at head_dim 64, gated on ratio "
+                         "<= 0.55 AND identical greedy tokens")
+    ap.add_argument("--host-tier", action="store_true",
+                    help="add the host-tier spill smoke: forced-"
+                         "watermark pool with a DRAM cold bank, gated "
+                         "on nonzero spill+restore traffic AND tokens "
+                         "identical to an all-HBM run")
     ap.add_argument("--json", nargs="?", const="BENCH_serve.json",
                     default=None, metavar="PATH",
-                    help="write machine-readable results (schema 3: "
-                         "tokens/s, peak KV bytes, shard topology, "
+                    help="write machine-readable results (schema 4: "
+                         "tokens/s, peak KV bytes per tier, kv_dtype, "
+                         "shard topology, spill/prefetch counts, "
                          "sampling-mode sweep, attention HBM bytes "
                          "before/after the kernel fusion) to PATH")
     args = ap.parse_args()
@@ -374,7 +511,8 @@ if __name__ == "__main__":
     try:
         res = run(fams, impl=args.impl, ppb=args.ppb,
                   attn_hlo=bool(args.json), shards=args.shards,
-                  sampling=args.sampling)
+                  sampling=args.sampling, kv_dtype=args.kv_dtype,
+                  quant=args.quant, host_tier=args.host_tier)
         pretty(res)
     finally:
         # write even when run() raises: the (partial) record is exactly

@@ -81,7 +81,8 @@ def demo_stream(cfg, params, sp, seed: int, mesh=None):
 
 
 def main(devices: int = 1, stream: bool = False, temperature: float = 0.0,
-         top_k: int = 0, top_p: float = 1.0, seed: int = 0):
+         top_k: int = 0, top_p: float = 1.0, seed: int = 0,
+         kv_dtype: str | None = None, host_tier_pages: int | None = None):
     import numpy as np
     import jax
 
@@ -99,6 +100,8 @@ def main(devices: int = 1, stream: bool = False, temperature: float = 0.0,
 
     spec = get_arch("internlm2-1.8b")
     cfg = reduced_for_smoke(spec.model, max_seq=128)
+    if kv_dtype:
+        cfg = cfg.replace(kv_dtype=kv_dtype)    # quantized page arena
     fam = registry.get_family(cfg)
     params = fam.init(jax.random.key(0), cfg)
     sp = SamplingParams(temperature=temperature, top_k=top_k, top_p=top_p,
@@ -109,7 +112,8 @@ def main(devices: int = 1, stream: bool = False, temperature: float = 0.0,
         return
 
     engine = ServingEngine(cfg, params, max_batch=4, max_seq=128,
-                           page_size=16, mesh=mesh)
+                           page_size=16, mesh=mesh,
+                           host_tier_pages=host_tier_pages)
     rng = np.random.default_rng(seed)
     for uid in range(12):
         plen = int(rng.integers(4, 80))
@@ -139,6 +143,10 @@ def main(devices: int = 1, stream: bool = False, temperature: float = 0.0,
         print("near-memory banks: peak pages per shard "
               f"{[s['peak_allocated_pages'] for s in shards]} | "
               f"resident KV bytes per shard {engine.arena.shard_kv_bytes()}")
+    if engine.host_tier is not None:
+        ht = engine.stats()["host_tier"]
+        print(f"host tier: {ht['spills']} spills / {ht['restores']} "
+              f"restores ({ht['peak_bytes'] / 1e6:.2f} MB peak resident)")
 
     # --- prefix sharing: same 64-token prompt, pages reused on device
     prompt = rng.integers(0, cfg.vocab_size, 64).astype(np.int32)
@@ -187,6 +195,14 @@ if __name__ == "__main__":
                     help="nucleus mass (1.0 = off)")
     ap.add_argument("--seed", type=int, default=0,
                     help="base sampling seed (uid added per request)")
+    ap.add_argument("--kv-dtype", default=None,
+                    choices=("bf16", "int8", "fp8"),
+                    help="page-arena storage dtype (int8/fp8 quantize on "
+                         "write, dequantize inside the attention kernels)")
+    ap.add_argument("--host-tier-pages", type=int, default=None,
+                    help="enable the host-DRAM cold tier with this many "
+                         "pages: preempted sequences spill there and "
+                         "restore on readmission instead of recomputing")
     args = ap.parse_args()
     if args.devices > 1:
         # host-platform shim: must land before jax initializes, which is
@@ -195,4 +211,5 @@ if __name__ == "__main__":
             os.environ.get("XLA_FLAGS", "")
             + f" --xla_force_host_platform_device_count={args.devices}")
     main(args.devices, stream=args.stream, temperature=args.temperature,
-         top_k=args.top_k, top_p=args.top_p, seed=args.seed)
+         top_k=args.top_k, top_p=args.top_p, seed=args.seed,
+         kv_dtype=args.kv_dtype, host_tier_pages=args.host_tier_pages)

@@ -9,15 +9,87 @@ prefix sharing), and freed back to the one pool.
 
 This module is the host-side control plane (page tables, free lists,
 refcounts); the device-side arena itself is a jnp array owned by
-`serve/kv_cache.py`.
+`serve/kv_cache.py`.  It also owns the two capacity levers layered on
+top of the pool (DESIGN.md §7):
+
+* **Quantized pages** — `quantize_kv`/`dequantize_kv` define the storage
+  contract for int8/fp8 page banks: per-token-per-head f32 scales live
+  in sibling `k_scale`/`v_scale` arena leaves, written by the paged
+  write paths and consumed in-register by the fused kernels.
+* **Host tier** — `HostTier` is an LRU bank of host-DRAM page parcels
+  behind the device pool: preempted sequences spill their exact KV
+  bytes instead of dropping them, and readmission restores (optionally
+  through an async `jax.device_put` prefetch) instead of recomputing.
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass, field
+
+import jax.numpy as jnp
 
 
 class UniMemOOM(RuntimeError):
     pass
+
+
+# ------------------------------------------------------- quantized pages
+
+# Arena leaves holding physical KV pages (page-slot axis 1) and, in the
+# quantized modes, their per-token-per-head f32 scales.  Any OTHER leaf a
+# family puts in its paged cache (hybrid: "conv"/"ssm") is contiguous
+# per-engine-slot state.
+PAGED_KV_KEYS = ("k", "v")
+PAGED_SCALE_KEYS = ("k_scale", "v_scale")
+
+# clip targets of the quantized stores: int8 is the symmetric integer
+# range; fp8 (e4m3fn) MUST be clipped to its finite max before the cast
+# — out-of-range f32 -> e4m3fn casts produce NaN, not saturation.
+KV_QMAX = {"int8": 127.0, "fp8": 448.0}
+
+
+def is_page_leaf(name: str) -> bool:
+    """True for arena leaves with the page-slot axis at position 1
+    (K/V banks and their scale siblings) — the leaves that shard over
+    the mem axis, COW-copy, and spill to the host tier."""
+    return name in PAGED_KV_KEYS or name in PAGED_SCALE_KEYS
+
+
+def scale_key(kv_key: str) -> str:
+    return f"{kv_key}_scale"
+
+
+def quantize_kv(x, store_dtype):
+    """Quantize K or V activations to `store_dtype` with one f32 scale
+    per (token, kv head) — amax over the head_dim lane axis.
+
+    x: (..., hkv, hd) floating -> (q (..., hkv, hd) store_dtype,
+    scale (..., hkv) f32).  Zero rows get scale 0 (and quantize to 0),
+    so null-page garbage dequantizes to exact zeros.
+    """
+    store_dtype = jnp.dtype(store_dtype)
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)                       # (..., hkv)
+    if store_dtype == jnp.int8:
+        qmax = KV_QMAX["int8"]
+    elif store_dtype == jnp.dtype(jnp.float8_e4m3fn):
+        qmax = KV_QMAX["fp8"]
+    else:
+        raise ValueError(f"not a quantized KV dtype: {store_dtype}")
+    scale = amax / qmax
+    inv = jnp.where(scale > 0, 1.0 / jnp.where(scale > 0, scale, 1.0), 0.0)
+    y = xf * inv[..., None]
+    if store_dtype == jnp.int8:
+        q = jnp.clip(jnp.round(y), -qmax, qmax).astype(jnp.int8)
+    else:
+        q = jnp.clip(y, -qmax, qmax).astype(store_dtype)
+    return q, scale
+
+
+def dequantize_kv(q, scale):
+    """Inverse of `quantize_kv`: q (..., hkv, hd) x scale (..., hkv)
+    -> f32 (..., hkv, hd)."""
+    return q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]
 
 
 @dataclass
@@ -282,3 +354,94 @@ class SequencePageTable:
     def release(self) -> None:
         self.pool.free(self.pages)
         self.pages, self.num_tokens = [], 0
+
+
+# ------------------------------------------------------------- host tier
+
+@dataclass
+class HostParcel:
+    """One spilled sequence: its page payloads (host numpy arrays, one
+    leading axis entry per page) plus the engine metadata needed to
+    rebuild the slot exactly (token count, rotation, generated tail)."""
+    uid: int
+    num_pages: int
+    data: dict                     # leaf name -> (L, npages, ...) host array
+    meta: dict = field(default_factory=dict)
+
+
+class HostTier:
+    """LRU host-DRAM cold bank behind the device page pool (the paper's
+    near-memory hierarchy in software): capacity is counted in PAGES, so
+    the binding constraint becomes host memory, not HBM.  Parcels are
+    whole per-sequence spills — pages of one sequence live and die
+    together, which keeps restore a straight per-page write-back with no
+    host-side compaction.
+
+    Eviction (capacity pressure) drops the oldest parcel; its sequence
+    falls back to the engine's replay/recompute admission path, so the
+    tier is purely a fast path — never a correctness dependency."""
+
+    def __init__(self, capacity_pages: int):
+        self.capacity_pages = int(capacity_pages)
+        self._parcels: "OrderedDict[int, HostParcel]" = OrderedDict()
+        self._resident = 0
+        self._peak = 0
+        self.spills = 0
+        self.spilled_pages = 0
+        self.prefetches = 0
+        self.restores = 0
+        self.restored_pages = 0
+        self.evictions = 0
+        self.evicted_pages = 0
+
+    def __contains__(self, uid: int) -> bool:
+        return uid in self._parcels
+
+    @property
+    def resident_pages(self) -> int:
+        return self._resident
+
+    def put(self, parcel: HostParcel) -> bool:
+        """Spill a parcel, evicting LRU parcels to make room.  Returns
+        False (and stores nothing) when the parcel alone exceeds
+        capacity."""
+        if parcel.num_pages > self.capacity_pages:
+            return False
+        self.take(parcel.uid)                     # replace, don't double-count
+        while self._resident + parcel.num_pages > self.capacity_pages:
+            _, old = self._parcels.popitem(last=False)
+            self._resident -= old.num_pages
+            self.evictions += 1
+            self.evicted_pages += old.num_pages
+        self._parcels[parcel.uid] = parcel
+        self._resident += parcel.num_pages
+        self._peak = max(self._peak, self._resident)
+        self.spills += 1
+        self.spilled_pages += parcel.num_pages
+        return True
+
+    def peek(self, uid: int) -> HostParcel | None:
+        """Touch (LRU move-to-end) and return the parcel, still resident."""
+        p = self._parcels.get(uid)
+        if p is not None:
+            self._parcels.move_to_end(uid)
+        return p
+
+    def take(self, uid: int) -> HostParcel | None:
+        """Remove and return the parcel (restore or invalidation)."""
+        p = self._parcels.pop(uid, None)
+        if p is not None:
+            self._resident -= p.num_pages
+        return p
+
+    def stats(self) -> dict:
+        return dict(capacity_pages=self.capacity_pages,
+                    resident_pages=self._resident,
+                    peak_resident_pages=self._peak,
+                    parcels=len(self._parcels),
+                    spills=self.spills, spilled_pages=self.spilled_pages,
+                    prefetches=self.prefetches,
+                    restores=self.restores,
+                    restored_pages=self.restored_pages,
+                    evictions=self.evictions,
+                    evicted_pages=self.evicted_pages)

@@ -126,12 +126,23 @@ def reset_carry(m_scr, l_scr, acc_scr):
     acc_scr[...] = jnp.zeros_like(acc_scr)
 
 
-def load_kv_block(kv_refs, ppb: int, d: int, d_pad: int):
+def load_kv_block(kv_refs, ppb: int, d: int, d_pad: int, scale_refs=None):
     """Concatenate a grid cell's ppb page tiles into one (ppb*page, d_pad)
-    K and V, lane-padding in-register (the arena is never copied)."""
+    K and V, lane-padding in-register (the arena is never copied).
+
+    With `scale_refs` (quantized arena: K scales in slots [0, ppb), V
+    scales in [ppb, 2*ppb)), the int8/fp8 tiles are dequantized here —
+    f32 multiply against the (ppb*page, 1) per-token scale column while
+    the tile is already in VMEM, so the dequant costs no HBM traffic."""
     k = jnp.concatenate([kv_refs[j][0, :, 0, :] for j in range(ppb)], axis=0)
     v = jnp.concatenate([kv_refs[ppb + j][0, :, 0, :] for j in range(ppb)],
                         axis=0)
+    if scale_refs is not None:
+        ks = jnp.concatenate([scale_refs[j][0] for j in range(ppb)], axis=0)
+        vs = jnp.concatenate([scale_refs[ppb + j][0] for j in range(ppb)],
+                             axis=0)
+        k = k.astype(jnp.float32) * ks                 # (ppb*page, d) * (.., 1)
+        v = v.astype(jnp.float32) * vs
     if d_pad != d:
         k = jnp.pad(k, ((0, 0), (0, d_pad - d)))
         v = jnp.pad(v, ((0, 0), (0, d_pad - d)))
@@ -188,10 +199,23 @@ def kv_block_specs(page: int, d: int, ppb: int):
     return [spec(j) for j in range(ppb)] * 2
 
 
+def scale_block_specs(page: int, ppb: int):
+    """BlockSpecs of the per-page scale tiles ((P, page, hkv) arrays) a
+    quantized arena streams beside its K/V pages — same block-table
+    walk, one (1, page, 1) column per page slot."""
+    def spec(j):
+        return pl.BlockSpec(
+            (1, page, 1),
+            lambda bi, h, pi, bt, *rest, j=j: (bt[bi, pi * ppb + j], 0, h))
+    return [spec(j) for j in range(ppb)] * 2
+
+
 def _paged_kernel(bt_ref, pos_ref, ppos_ref, q_ref, *refs,
                   page_size: int, ppb: int, nb: int, d: int, d_pad: int,
-                  partials: bool):
-    kv_refs, rest = refs[:2 * ppb], refs[2 * ppb:]
+                  partials: bool, nscale: int = 0):
+    kv_refs = refs[:2 * ppb]
+    scale_refs = refs[2 * ppb:2 * ppb + nscale] if nscale else None
+    rest = refs[2 * ppb + nscale:]
     if partials:
         acc_ref, m_ref, l_ref, m_scr, l_scr, acc_scr = rest
     else:
@@ -204,7 +228,7 @@ def _paged_kernel(bt_ref, pos_ref, ppos_ref, q_ref, *refs,
         reset_carry(m_scr, l_scr, acc_scr)
 
     q = q_ref[0, 0]                                        # (g_pad, d_pad)
-    k, v = load_kv_block(kv_refs, ppb, d, d_pad)
+    k, v = load_kv_block(kv_refs, ppb, d, d_pad, scale_refs)
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
     s = s / math.sqrt(d)                                   # (g_pad, ppb*page)
     kv_pos = block_kv_positions(ppos_ref, bi, pi, ppb, page_size, s.shape[0])
@@ -221,6 +245,7 @@ def _paged_kernel(bt_ref, pos_ref, ppos_ref, q_ref, *refs,
 def paged_decode_attention_pallas(q, k_pages, v_pages, block_table,
                                   positions, *, pages_per_block: int = 1,
                                   page_positions=None, partials: bool = False,
+                                  k_scale=None, v_scale=None,
                                   interpret: bool = False):
     """q: (b, hq, d); k_pages/v_pages: (P, page, hkv, d) physical arena
     for ONE layer; block_table: (b, max_pages) int32 physical page ids
@@ -229,10 +254,12 @@ def paged_decode_attention_pallas(q, k_pages, v_pages, block_table,
     page_positions: optional (b, max_pages) absolute first-token
     position per table slot (default: slot i == logical page i — a
     sharded walk passes its resident pages' true positions, POS_PAD for
-    holes).  Returns (b, hq, d) directly — no per-page partials touch
-    HBM — or, with `partials=True`, the raw carry as
-    (m (b, hq), l (b, hq), acc (b, hq, d)) f32 for a cross-shard
-    log-sum-exp merge."""
+    holes); k_scale/v_scale: optional (P, page, hkv) f32 per-token
+    scales of a quantized (int8/fp8) arena — page tiles are dequantized
+    in-register inside the page loop, the softmax math stays f32.
+    Returns (b, hq, d) directly — no per-page partials touch HBM — or,
+    with `partials=True`, the raw carry as (m (b, hq), l (b, hq),
+    acc (b, hq, d)) f32 for a cross-shard log-sum-exp merge."""
     b, hq, d = q.shape
     page = k_pages.shape[1]
     hkv = k_pages.shape[2]
@@ -265,6 +292,10 @@ def paged_decode_attention_pallas(q, k_pages, v_pages, block_table,
         out_specs = [pl.BlockSpec((1, 1, g_pad, d_pad),
                                   lambda bi, h, pi, *pref: (bi, h, 0, 0))]
 
+    quant = k_scale is not None
+    nscale = 2 * ppb if quant else 0
+    scale_args = ((*([k_scale] * ppb), *([v_scale] * ppb)) if quant else ())
+
     # NOTE jax 0.4.x index-map convention: grid indices first, then the
     # scalar-prefetch refs.
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -272,7 +303,8 @@ def paged_decode_attention_pallas(q, k_pages, v_pages, block_table,
         grid=(b, hkv, nb),
         in_specs=[pl.BlockSpec((1, 1, g_pad, d_pad),
                                lambda bi, h, pi, *pref: (bi, h, 0, 0))]
-                 + kv_block_specs(page, d, ppb),
+                 + kv_block_specs(page, d, ppb)
+                 + (scale_block_specs(page, ppb) if quant else []),
         out_specs=out_specs,
         scratch_shapes=[
             pltpu.VMEM((g_pad, 1), jnp.float32),       # running max
@@ -282,7 +314,8 @@ def paged_decode_attention_pallas(q, k_pages, v_pages, block_table,
     )
     out = pl.pallas_call(
         functools.partial(_paged_kernel, page_size=page, ppb=ppb, nb=nb,
-                          d=d, d_pad=d_pad, partials=partials),
+                          d=d, d_pad=d_pad, partials=partials,
+                          nscale=nscale),
         grid_spec=grid_spec,
         out_shape=out_shape,
         compiler_params=pltpu.TPUCompilerParams(
@@ -292,7 +325,7 @@ def paged_decode_attention_pallas(q, k_pages, v_pages, block_table,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(bt, positions.astype(jnp.int32), ppos, qg,
-      *([k_pages] * ppb), *([v_pages] * ppb))
+      *([k_pages] * ppb), *([v_pages] * ppb), *scale_args)
     if partials:
         acc, m, l = out
         return (m[:, :, :group, 0].reshape(b, hq),

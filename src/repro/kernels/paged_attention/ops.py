@@ -17,7 +17,8 @@ def _on_tpu() -> bool:
                                    "interpret"))
 def paged_decode_attention(q, k_pages, v_pages, block_table, positions,
                            pages_per_block=1, page_positions=None,
-                           partials=False, interpret=None):
+                           partials=False, k_scale=None, v_scale=None,
+                           interpret=None):
     """q: (b, hq, d); k_pages/v_pages: (P, page, hkv, d) one layer's
     arena; block_table: (b, max_pages); positions: (b,) inclusive newest
     index.  Single pass — the kernel carries the online softmax in VMEM
@@ -31,9 +32,14 @@ def paged_decode_attention(q, k_pages, v_pages, block_table, positions,
     the online-softmax carry as (m (b, hq), l (b, hq), acc (b, hq, d))
     f32 — the summary-sized per-shard state a log-sum-exp merge
     (`distribution.collectives.combine_shard_partials`) folds into the
-    exact global attention output."""
+    exact global attention output.
+
+    `k_scale`/`v_scale` (optional (P, page, hkv) f32) are the per-token
+    scale banks of a quantized (int8/fp8) arena — the kernel dequantizes
+    each page tile in-register inside the page loop."""
     interpret = (not _on_tpu()) if interpret is None else interpret
     return K.paged_decode_attention_pallas(
         q, k_pages, v_pages, block_table, positions,
         pages_per_block=pages_per_block, page_positions=page_positions,
-        partials=partials, interpret=interpret)
+        partials=partials, k_scale=k_scale, v_scale=v_scale,
+        interpret=interpret)

@@ -22,7 +22,8 @@ NEG_INF = -1e30
 
 
 def paged_decode_attention_ref(q, k_pages, v_pages, block_table, positions,
-                               page_positions=None, partials=False):
+                               page_positions=None, partials=False,
+                               k_scale=None, v_scale=None):
     """q: (b, hq, d); k_pages/v_pages: (P, page, hkv, d) one layer's
     physical arena; block_table: (b, max_pages) int32; positions: (b,)
     inclusive newest index.  Returns (b, hq, d).
@@ -32,7 +33,12 @@ def paged_decode_attention_ref(q, k_pages, v_pages, block_table, positions,
     can attend over a compacted table of just its resident pages.
     `partials=True` returns the unnormalized softmax summary
     (m (b, hq), l (b, hq), acc (b, hq, d)) f32 instead — the per-shard
-    state of the distributed log-sum-exp merge."""
+    state of the distributed log-sum-exp merge.
+
+    `k_scale`/`v_scale` ((P, page, hkv) f32, quantized arenas only)
+    dequantize the gathered pages before the f32 attention math — the
+    dequant-after-gather oracle the in-kernel dequant is tested
+    against."""
     b, hq, d = q.shape
     page, hkv = k_pages.shape[1], k_pages.shape[2]
     mp = block_table.shape[1]
@@ -42,6 +48,11 @@ def paged_decode_attention_ref(q, k_pages, v_pages, block_table, positions,
         page_positions = default_page_positions(block_table, page)
     k = k_pages[block_table].reshape(b, S, hkv, d)     # (b, mp, page,..) view
     v = v_pages[block_table].reshape(b, S, hkv, d)
+    if k_scale is not None:
+        k = k.astype(jnp.float32) * k_scale[block_table].reshape(
+            b, S, hkv)[..., None]
+        v = v.astype(jnp.float32) * v_scale[block_table].reshape(
+            b, S, hkv)[..., None]
     qg = q.reshape(b, hkv, g, d)
     s = jnp.einsum("bhgd,bshd->bhgs", qg, k).astype(jnp.float32)
     s = s / math.sqrt(d)

@@ -45,13 +45,15 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.paged_attention.kernel import (
     LANE, SUBLANE, _pad_block_table, _round_up, accumulate_block,
     block_kv_positions, emit_output, emit_partials, kv_block_specs,
-    load_kv_block, reset_carry, default_page_positions)
+    load_kv_block, reset_carry, default_page_positions, scale_block_specs)
 
 
 def _prefill_kernel(bt_ref, start_ref, clen_ref, ppos_ref, q_ref, *refs,
                     page_size: int, ppb: int, nb: int, group: int,
-                    d: int, d_pad: int, partials: bool):
-    kv_refs, rest = refs[:2 * ppb], refs[2 * ppb:]
+                    d: int, d_pad: int, partials: bool, nscale: int = 0):
+    kv_refs = refs[:2 * ppb]
+    scale_refs = refs[2 * ppb:2 * ppb + nscale] if nscale else None
+    rest = refs[2 * ppb + nscale:]
     if partials:
         acc_ref, m_ref, l_ref, m_scr, l_scr, acc_scr = rest
     else:
@@ -64,7 +66,7 @@ def _prefill_kernel(bt_ref, start_ref, clen_ref, ppos_ref, q_ref, *refs,
         reset_carry(m_scr, l_scr, acc_scr)
 
     q = q_ref[0, 0]                                        # (R, d_pad)
-    k, v = load_kv_block(kv_refs, ppb, d, d_pad)
+    k, v = load_kv_block(kv_refs, ppb, d, d_pad, scale_refs)
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
     s = s / math.sqrt(d)                                   # (R, ppb*page)
     # the decode kernel's machine with the chunk mask: start-offset
@@ -88,6 +90,7 @@ def _prefill_kernel(bt_ref, start_ref, clen_ref, ppos_ref, q_ref, *refs,
 def paged_prefill_attention_pallas(q, k_pages, v_pages, block_table, start,
                                    chunk_len, *, pages_per_block: int = 1,
                                    page_positions=None, partials: bool = False,
+                                   k_scale=None, v_scale=None,
                                    interpret: bool = False):
     """q: (b, c, hq, d) chunk queries at absolute positions
     start[i]..start[i]+c-1; k_pages/v_pages: (P, page, hkv, d) ONE
@@ -99,7 +102,9 @@ def paged_prefill_attention_pallas(q, k_pages, v_pages, block_table, start,
     `page_positions` maps table slots to absolute positions (sharded
     walks pass a compacted table of resident pages, POS_PAD for holes);
     `partials=True` returns the carry (m (b, c, hq), l (b, c, hq),
-    acc (b, c, hq, d)) f32 for the cross-shard log-sum-exp merge."""
+    acc (b, c, hq, d)) f32 for the cross-shard log-sum-exp merge;
+    `k_scale`/`v_scale` ((P, page, hkv) f32) dequantize an int8/fp8
+    arena's page tiles in-register inside the page loop."""
     b, c, hq, d = q.shape
     page = k_pages.shape[1]
     hkv = k_pages.shape[2]
@@ -137,12 +142,17 @@ def paged_prefill_attention_pallas(q, k_pages, v_pages, block_table, start,
         out_specs = [pl.BlockSpec((1, 1, R, d_pad),
                                   lambda bi, h, pi, *pref: (bi, h, 0, 0))]
 
+    quant = k_scale is not None
+    nscale = 2 * ppb if quant else 0
+    scale_args = ((*([k_scale] * ppb), *([v_scale] * ppb)) if quant else ())
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,
         grid=(b, hkv, nb),
         in_specs=[pl.BlockSpec((1, 1, R, d_pad),
                                lambda bi, h, pi, *pref: (bi, h, 0, 0))]
-                 + kv_block_specs(page, d, ppb),
+                 + kv_block_specs(page, d, ppb)
+                 + (scale_block_specs(page, ppb) if quant else []),
         out_specs=out_specs,
         scratch_shapes=[
             pltpu.VMEM((R, 1), jnp.float32),       # running max
@@ -152,7 +162,8 @@ def paged_prefill_attention_pallas(q, k_pages, v_pages, block_table, start,
     )
     out = pl.pallas_call(
         functools.partial(_prefill_kernel, page_size=page, ppb=ppb, nb=nb,
-                          group=group, d=d, d_pad=d_pad, partials=partials),
+                          group=group, d=d, d_pad=d_pad, partials=partials,
+                          nscale=nscale),
         grid_spec=grid_spec,
         out_shape=out_shape,
         compiler_params=pltpu.TPUCompilerParams(
@@ -161,7 +172,7 @@ def paged_prefill_attention_pallas(q, k_pages, v_pages, block_table, start,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(bt, start.astype(jnp.int32), chunk_len.astype(jnp.int32), ppos, qg,
-      *([k_pages] * ppb), *([v_pages] * ppb))
+      *([k_pages] * ppb), *([v_pages] * ppb), *scale_args)
 
     def unpack(x, dd):
         x = x[:, :, :rows, :dd].reshape(b, hkv, c, group, dd)

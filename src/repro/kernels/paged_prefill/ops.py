@@ -18,7 +18,7 @@ def _on_tpu() -> bool:
 def paged_prefill_attention(q, k_pages, v_pages, block_table, start,
                             chunk_len, pages_per_block=1,
                             page_positions=None, partials=False,
-                            interpret=None):
+                            k_scale=None, v_scale=None, interpret=None):
     """q: (b, c, hq, d) chunk queries; k_pages/v_pages: (P, page, hkv, d)
     one layer's arena; block_table: (b, max_pages); start/chunk_len: (b,)
     chunk geometry.  Returns (b, c, hq, d); rows past chunk_len are
@@ -29,9 +29,14 @@ def paged_prefill_attention(q, k_pages, v_pages, block_table, start,
     table of just its resident pages; `partials=True` returns the
     online-softmax carry (m (b, c, hq), l (b, c, hq), acc (b, c, hq, d))
     f32 for the cross-shard log-sum-exp merge instead of the normalized
-    output."""
+    output.
+
+    `k_scale`/`v_scale` (optional (P, page, hkv) f32) are a quantized
+    arena's per-token scale banks — dequantized in-register inside the
+    kernel's page loop."""
     interpret = (not _on_tpu()) if interpret is None else interpret
     return K.paged_prefill_attention_pallas(
         q, k_pages, v_pages, block_table, start, chunk_len,
         pages_per_block=pages_per_block, page_positions=page_positions,
-        partials=partials, interpret=interpret)
+        partials=partials, k_scale=k_scale, v_scale=v_scale,
+        interpret=interpret)

@@ -14,7 +14,7 @@ NEG_INF = -1e30
 
 def paged_prefill_attention_ref(q, k_pages, v_pages, block_table, start,
                                 chunk_len, page_positions=None,
-                                partials=False):
+                                partials=False, k_scale=None, v_scale=None):
     """q: (b, c, hq, d) chunk queries at absolute positions
     start[i]..start[i]+c-1; k_pages/v_pages: (P, page, hkv, d) one
     layer's arena; block_table: (b, max_pages) int32; chunk_len: (b,)
@@ -23,7 +23,9 @@ def paged_prefill_attention_ref(q, k_pages, v_pages, block_table, start,
     `page_positions` ((b, max_pages), default slot i == logical page i)
     lets a shard attend over a compacted table of its resident pages;
     `partials=True` returns the unnormalized summary (m (b, c, hq),
-    l (b, c, hq), acc (b, c, hq, d)) f32 for the cross-shard merge."""
+    l (b, c, hq), acc (b, c, hq, d)) f32 for the cross-shard merge;
+    `k_scale`/`v_scale` ((P, page, hkv) f32) dequantize a quantized
+    arena's gathered pages before the f32 attention math."""
     b, c, hq, d = q.shape
     page, hkv = k_pages.shape[1], k_pages.shape[2]
     mp = block_table.shape[1]
@@ -33,6 +35,11 @@ def paged_prefill_attention_ref(q, k_pages, v_pages, block_table, start,
         page_positions = default_page_positions(block_table, page)
     k = k_pages[block_table].reshape(b, S, hkv, d)
     v = v_pages[block_table].reshape(b, S, hkv, d)
+    if k_scale is not None:
+        k = k.astype(jnp.float32) * k_scale[block_table].reshape(
+            b, S, hkv)[..., None]
+        v = v.astype(jnp.float32) * v_scale[block_table].reshape(
+            b, S, hkv)[..., None]
     positions = start[:, None] + jnp.arange(c)[None, :]        # (b, c)
     qg = q.reshape(b, c, hkv, g, d)
     s = jnp.einsum("bchgd,bshd->bhgcs", qg, k).astype(jnp.float32)

@@ -2,7 +2,8 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
         --reduced --requests 16 --max-new 24 [--layout paged|contiguous] \
-        [--shards N] [--temperature T --top-k K --top-p P --sample-seed S]
+        [--shards N] [--temperature T --top-k K --top-p P --sample-seed S] \
+        [--kv-dtype int8] [--host-tier-pages N --high-watermark F]
 
 Sampling flags build per-request `SamplingParams` (serve/sampling.py)
 executed INSIDE the jitted step — each request gets its own seed
@@ -64,12 +65,27 @@ def main(argv=None):
                     help="per-request nucleus mass (1.0 = off)")
     ap.add_argument("--sample-seed", type=int, default=0,
                     help="base sampling seed (request uid is added)")
+    ap.add_argument("--kv-dtype", default=None,
+                    choices=["bf16", "int8", "fp8"],
+                    help="page-arena storage dtype: int8/fp8 quantize "
+                         "K/V on write (per-page scales) and dequantize "
+                         "inside the attention kernels")
+    ap.add_argument("--host-tier-pages", type=int, default=None,
+                    help="host-DRAM cold tier capacity in pages: "
+                         "preempted sequences spill there and restore "
+                         "on readmission instead of recomputing (paged "
+                         "layout only)")
+    ap.add_argument("--high-watermark", type=float, default=None,
+                    help="pool fraction above which the engine "
+                         "proactively preempts youngest slots")
     args = ap.parse_args(argv)
 
     spec = get_arch(args.arch)
     cfg = spec.model
     if args.reduced:
         cfg = reduced_for_smoke(cfg, max_seq=args.max_seq)
+    if args.kv_dtype:
+        cfg = cfg.replace(kv_dtype=args.kv_dtype)
     fam = registry.get_family(cfg)
     if fam.decode_step is None:
         raise SystemExit(f"{args.arch} is encoder-only: nothing to serve")
@@ -94,7 +110,9 @@ def main(argv=None):
     engine = ServingEngine(cfg, params, max_batch=args.max_batch,
                            max_seq=args.max_seq, page_size=args.page_size,
                            layout=args.layout,
-                           prefill_chunk=args.prefill_chunk, mesh=mesh)
+                           prefill_chunk=args.prefill_chunk, mesh=mesh,
+                           high_watermark=args.high_watermark,
+                           host_tier_pages=args.host_tier_pages)
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
         plen = int(rng.integers(4, budget))

@@ -8,6 +8,11 @@ import jax.numpy as jnp
 
 DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float16": jnp.float16}
 
+# paged-KV storage dtypes (core/unimem.py owns the quantize/dequantize
+# contract; fp8 is float8_e4m3fn, clipped to its finite range on write)
+KV_DTYPES = {"bf16": jnp.bfloat16, "int8": jnp.int8,
+             "fp8": jnp.float8_e4m3fn}
+
 
 @dataclass(frozen=True)
 class ModelConfig:
@@ -69,6 +74,11 @@ class ModelConfig:
     # numerics / execution
     dtype: str = "float32"
     param_dtype: str = "float32"
+    # storage dtype of the paged KV arena (None = compute dtype).  "bf16"
+    # is a bare dtype change; "int8"/"fp8" add per-token-per-head scale
+    # leaves beside the K/V banks, quantize on write and dequantize
+    # in-register inside the fused page-loop kernels.
+    kv_dtype: str | None = None          # None | bf16 | int8 | fp8
     remat: str = "none"                  # none | full | dots
     logits_chunk: int = 0                # 0 = unchunked loss
     scan_layers: bool = True
@@ -83,6 +93,18 @@ class ModelConfig:
     @property
     def params_dtype(self):
         return DTYPES[self.param_dtype]
+
+    @property
+    def kv_store_dtype(self):
+        """Element dtype of the paged KV page banks."""
+        if self.kv_dtype is None:
+            return self.compute_dtype
+        return KV_DTYPES[self.kv_dtype]
+
+    @property
+    def kv_quantized(self) -> bool:
+        """True when the arena carries per-page scale leaves (int8/fp8)."""
+        return self.kv_dtype in ("int8", "fp8")
 
     @property
     def q_dim(self) -> int:
@@ -114,6 +136,8 @@ class ModelConfig:
         return dataclasses.replace(self, **kw)
 
     def validate(self) -> None:
+        assert self.kv_dtype in (None, *KV_DTYPES), \
+            f"kv_dtype must be one of {(None, *KV_DTYPES)}, got {self.kv_dtype!r}"
         if self.family in ("dense", "moe", "encoder", "vlm", "hybrid"):
             assert self.num_heads > 0 and self.head_dim > 0
             assert self.num_heads % max(1, self.num_kv_heads) == 0

@@ -16,6 +16,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.unimem import PAGED_SCALE_KEYS, is_page_leaf
 from repro.models.config import ModelConfig
 from repro.models import layers as L
 from repro.models import transformer as T
@@ -267,27 +268,36 @@ def decode_step(params, cfg: ModelConfig, cache, tokens):
 
 def init_paged_cache(cfg: ModelConfig, num_slots: int, page_size: int,
                      max_batch: int = 1, dtype=None):
-    dtype = dtype or cfg.compute_dtype
+    state_dtype = dtype or cfg.compute_dtype
+    dtype = dtype or cfg.kv_store_dtype
     G = cfg.num_layers // cfg.shared_attn_period
     P = cfg.shared_attn_period
     kv_shape = (G, num_slots, page_size, cfg.num_kv_heads, cfg.head_dim)
-    return {
+    arena = {
         "k": jnp.zeros(kv_shape, dtype),
         "v": jnp.zeros(kv_shape, dtype),
         "conv": jnp.zeros((G, P, max_batch, cfg.conv_width - 1,
-                           cfg.conv_channels), dtype),
+                           cfg.conv_channels), state_dtype),
         "ssm": jnp.zeros((G, P, max_batch, cfg.ssm_heads, cfg.ssm_head_dim,
-                          cfg.ssm_state), dtype),
+                          cfg.ssm_state), state_dtype),
     }
+    if cfg.kv_quantized:
+        for name in PAGED_SCALE_KEYS:
+            arena[name] = jnp.zeros(kv_shape[:-1], jnp.float32)
+    return arena
 
 
-def paged_cache_axes():
+def paged_cache_axes(cfg: ModelConfig | None = None):
     kv = (None, None, None, "act_kv_heads", None)
-    return {
+    axes = {
         "k": kv, "v": kv,
         "conv": (None, None, "act_batch", None, "ssm_inner"),
         "ssm": (None, None, "act_batch", "act_ssm_heads", None, None),
     }
+    if cfg is not None and cfg.kv_quantized:
+        for name in PAGED_SCALE_KEYS:
+            axes[name] = kv[:-1]
+    return axes
 
 
 def paged_prefill(params, cfg: ModelConfig, chunk, arena, block_table,
@@ -319,35 +329,37 @@ def paged_prefill(params, cfg: ModelConfig, chunk, arena, block_table,
         return h + y, (conv_c.astype(arena["conv"].dtype),
                        ssm_c.astype(arena["ssm"].dtype))
 
+    pages0 = {n: a for n, a in arena.items() if is_page_leaf(n)}
+
     def group(carry, xs):
         h, g = carry
-        mamba_g, proj_g, conv_g, ssm_g, k_g, v_g = xs
+        mamba_g, proj_g, conv_g, ssm_g, pg = xs
         h, (conv_new, ssm_new) = jax.lax.scan(inner, h, (mamba_g, conv_g,
                                                          ssm_g))
         sp = _select_shared(params, cfg, g)
         cat = jnp.concatenate([h, x0], axis=-1)
         hn = L.rmsnorm_apply(sp["ln1"], cat, cfg.norm_eps)
         q, k, v = L.attention_qkv(sp["attn"], scfg, hn, positions)
-        k_g = T._paged_write(k_g, k, wbt, start, valid)
-        v_g = T._paged_write(v_g, v, wbt, start, valid)
+        pg = T._paged_write_kv(scfg, pg, k, v, wbt, start, valid)
         # block-table walk inside the kernel — no gathered page copy
-        o = L.run_paged_prefill_attention(scfg, q, k_g, v_g, block_table,
-                                          start, chunk_len)
+        o = L.run_paged_prefill_attention(scfg, q, pg["k"], pg["v"],
+                                          block_table, start, chunk_len,
+                                          k_scale=pg.get("k_scale"),
+                                          v_scale=pg.get("v_scale"))
         cat = cat + o @ sp["attn"]["wo"]
         h2 = L.rmsnorm_apply(sp["ln2"], cat, cfg.norm_eps)
         cat = cat + L.mlp_apply(sp["mlp"], scfg, h2)
         h = h + cat @ proj_g
-        return (h, g + 1), (conv_new, ssm_new, k_g, v_g)
+        return (h, g + 1), (conv_new, ssm_new, pg)
 
-    (x, _), (conv, ssm, k, v) = jax.lax.scan(
+    (x, _), (conv, ssm, pages) = jax.lax.scan(
         group, (x, jnp.int32(0)),
-        (params["mamba"], params["group_proj"], conv0, ssm0,
-         arena["k"], arena["v"]))
+        (params["mamba"], params["group_proj"], conv0, ssm0, pages0))
     # state writeback only where the row actually advanced this call
     adv = chunk_len > 0
     conv = jnp.where(adv[None, None, :, None, None], conv, arena["conv"])
     ssm = jnp.where(adv[None, None, :, None, None, None], ssm, arena["ssm"])
-    arena = {"k": k, "v": v, "conv": conv, "ssm": ssm}
+    arena = {**pages, "conv": conv, "ssm": ssm}
     h = L.rmsnorm_apply(params["ln_f"], T._last_valid(x, chunk_len),
                         cfg.norm_eps)
     logits = L.logits_from_hidden(T.head_weights(params, cfg), cfg, h)
@@ -373,33 +385,36 @@ def paged_decode_step(params, cfg: ModelConfig, arena, block_table,
         return h + y, (conv_c.astype(arena["conv"].dtype),
                        ssm_c.astype(arena["ssm"].dtype))
 
+    pages0 = {n: a for n, a in arena.items() if is_page_leaf(n)}
+
     def group(carry, xs):
         h, g = carry
-        mamba_g, proj_g, conv_g, ssm_g, k_g, v_g = xs
+        mamba_g, proj_g, conv_g, ssm_g, pg = xs
         h, (conv_new, ssm_new) = jax.lax.scan(inner, h, (mamba_g, conv_g,
                                                          ssm_g))
         sp = _select_shared(params, cfg, g)
         cat = jnp.concatenate([h, x0], axis=-1)[:, None, :]           # (b,1,2d)
         hn = L.rmsnorm_apply(sp["ln1"], cat, cfg.norm_eps)
         q, k, v = L.attention_qkv(sp["attn"], scfg, hn, positions[:, None])
-        k_g = T._paged_write(k_g, k, wbt, positions)
-        v_g = T._paged_write(v_g, v, wbt, positions)
-        o = L.run_paged_decode_attention(scfg, q[:, 0], k_g, v_g,
-                                         block_table, positions)
+        pg = T._paged_write_kv(scfg, pg, k, v, wbt, positions)
+        o = L.run_paged_decode_attention(scfg, q[:, 0], pg["k"], pg["v"],
+                                         block_table, positions,
+                                         k_scale=pg.get("k_scale"),
+                                         v_scale=pg.get("v_scale"))
         cat = cat[:, 0] + o @ sp["attn"]["wo"]
         h2 = L.rmsnorm_apply(sp["ln2"], cat, cfg.norm_eps)
         cat = cat + L.mlp_apply(sp["mlp"], scfg, h2[:, None, :])[:, 0]
         h = h + cat @ proj_g
-        return (h, g + 1), (conv_new, ssm_new, k_g, v_g)
+        return (h, g + 1), (conv_new, ssm_new, pg)
 
-    (x, _), (conv, ssm, k, v) = jax.lax.scan(
+    (x, _), (conv, ssm, pages) = jax.lax.scan(
         group, (x, jnp.int32(0)),
         (params["mamba"], params["group_proj"], arena["conv"],
-         arena["ssm"], arena["k"], arena["v"]))
+         arena["ssm"], pages0))
     act = positions > 0          # inactive rows keep their stored state
     conv = jnp.where(act[None, None, :, None, None], conv, arena["conv"])
     ssm = jnp.where(act[None, None, :, None, None, None], ssm, arena["ssm"])
-    arena = {"k": k, "v": v, "conv": conv, "ssm": ssm}
+    arena = {**pages, "conv": conv, "ssm": ssm}
     h = L.rmsnorm_apply(params["ln_f"], x[:, None], cfg.norm_eps)
     logits = L.logits_from_hidden(T.head_weights(params, cfg), cfg, h)
     return arena, logits[:, 0]

@@ -227,7 +227,8 @@ def _shard_local_walk(mem_axis: str, block_table, page_size: int,
 
 
 def run_paged_decode_attention(cfg: ModelConfig, q, k_pages, v_pages,
-                               block_table, positions):
+                               block_table, positions,
+                               k_scale=None, v_scale=None):
     """Config-dispatched paged decode attention over the UniMem arena.
 
     q: (b, hq, d); k_pages/v_pages: (P, page, hkv, d) ONE layer's
@@ -243,15 +244,21 @@ def run_paged_decode_attention(cfg: ModelConfig, q, k_pages, v_pages,
     recovers the sequence's placement rotation from the table, attends
     over its RESIDENT pages only in partials mode, and the
     (b, hq(, d))-sized summaries are log-sum-exp-merged across the mesh
-    — the near-memory dataflow: pages stay put, summaries travel."""
+    — the near-memory dataflow: pages stay put, summaries travel.
+
+    `k_scale`/`v_scale` ((P, page, hkv) f32, quantized arenas) ride the
+    same block-table walk — the sharded compacted table indexes the
+    LOCAL scale banks exactly as it indexes the local pages."""
     b, hq, d = q.shape
     kw = {}
+    if k_scale is not None:
+        kw = dict(k_scale=k_scale, v_scale=v_scale)
     if cfg.mem_axis is not None:
         lbt, page_pos = _shard_local_walk(
             cfg.mem_axis, block_table, k_pages.shape[1],
             local_null=k_pages.shape[0] - 1)
         block_table = lbt
-        kw = dict(page_positions=page_pos, partials=True)
+        kw.update(page_positions=page_pos, partials=True)
     if cfg.attention_impl == "flash_pallas":
         from repro.kernels.paged_attention.ops import paged_decode_attention
         o = paged_decode_attention(q, k_pages, v_pages, block_table, positions,
@@ -268,7 +275,8 @@ def run_paged_decode_attention(cfg: ModelConfig, q, k_pages, v_pages,
 
 
 def run_paged_prefill_attention(cfg: ModelConfig, q, k_pages, v_pages,
-                                block_table, start, chunk_len):
+                                block_table, start, chunk_len,
+                                k_scale=None, v_scale=None):
     """Config-dispatched causal chunk-prefill attention over the arena.
 
     q: (b, c, hq, d) chunk queries at absolute positions
@@ -283,15 +291,17 @@ def run_paged_prefill_attention(cfg: ModelConfig, q, k_pages, v_pages,
     With `cfg.mem_axis` set (sharded serving step, GLOBAL block table),
     each chip walks only its resident pages (rotation-aware stride) and
     the (b, c, hq(, d)) chunk summaries merge across the mesh — see
-    `run_paged_decode_attention`."""
+    `run_paged_decode_attention` (scale banks included)."""
     b, c, hq, d = q.shape
     kw = {}
+    if k_scale is not None:
+        kw = dict(k_scale=k_scale, v_scale=v_scale)
     if cfg.mem_axis is not None:
         lbt, page_pos = _shard_local_walk(
             cfg.mem_axis, block_table, k_pages.shape[1],
             local_null=k_pages.shape[0] - 1)
         block_table = lbt
-        kw = dict(page_positions=page_pos, partials=True)
+        kw.update(page_positions=page_pos, partials=True)
     if cfg.attention_impl == "flash_pallas":
         from repro.kernels.paged_prefill.ops import paged_prefill_attention
         o = paged_prefill_attention(q, k_pages, v_pages, block_table,

@@ -17,6 +17,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core.unimem import PAGED_SCALE_KEYS, is_page_leaf, quantize_kv
 from repro.models.config import ModelConfig
 from repro.models import layers as L
 from repro.distribution.sharding import with_logical_constraint
@@ -233,19 +234,31 @@ def init_paged_cache(cfg: ModelConfig, num_slots: int, page_size: int,
     """Physical page arena: `num_slots` includes any null/trash slots the
     caller reserves (the serving arena keeps one for inactive rows).
     `max_batch` is unused here — attention-only families carry no
-    per-slot contiguous state (hybrid does)."""
+    per-slot contiguous state (hybrid does).  Under a quantized
+    `cfg.kv_dtype` the K/V banks store int8/fp8 and per-token-per-head
+    f32 scale leaves ride beside them (same slot layout, no lane axis)."""
     del max_batch
-    dtype = dtype or cfg.compute_dtype
+    dtype = dtype or cfg.kv_store_dtype
     shape = (cfg.num_layers, num_slots, page_size,
              cfg.num_kv_heads, cfg.head_dim)
-    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    arena = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if cfg.kv_quantized:
+        for name in PAGED_SCALE_KEYS:
+            arena[name] = jnp.zeros(shape[:-1], jnp.float32)
+    return arena
 
 
-def paged_cache_axes():
+def paged_cache_axes(cfg: ModelConfig | None = None):
     # one pooled arena; kv heads may shard over "model" (TP), pages stay
-    # whole — a page is the unit of residency.
+    # whole — a page is the unit of residency.  Scale leaves (quantized
+    # arenas; present only when a cfg says so) follow the same layout
+    # minus the lane axis.
     kv = (None, None, None, "act_kv_heads", None)
-    return {"k": kv, "v": kv}
+    axes = {"k": kv, "v": kv}
+    if cfg is not None and cfg.kv_quantized:
+        for name in PAGED_SCALE_KEYS:
+            axes[name] = kv[:-1]
+    return axes
 
 
 def _paged_write(arena_l, kv, block_table, start, valid=None):
@@ -266,6 +279,28 @@ def _paged_write(arena_l, kv, block_table, start, valid=None):
     off = pos % page
     return arena_l.at[phys.reshape(-1), off.reshape(-1)].set(
         kv.reshape(b * c, *kv.shape[2:]).astype(arena_l.dtype))
+
+
+def _paged_write_kv(cfg: ModelConfig, leaves, k, v, block_table, start,
+                    valid=None):
+    """Write a chunk's K/V into one layer's page leaves, quantizing on
+    write when the arena stores int8/fp8: the banks get the quantized
+    tiles, the `k_scale`/`v_scale` siblings get the per-token-per-head
+    f32 scales (same block-table scatter — `_paged_write` is generic in
+    the trailing dims, and the scale leaves' null slot absorbs invalid
+    rows identically)."""
+    out = dict(leaves)
+    if cfg.kv_quantized:
+        qk, sk = quantize_kv(k, cfg.kv_store_dtype)
+        qv, sv = quantize_kv(v, cfg.kv_store_dtype)
+        out["k_scale"] = _paged_write(leaves["k_scale"], sk, block_table,
+                                      start, valid)
+        out["v_scale"] = _paged_write(leaves["v_scale"], sv, block_table,
+                                      start, valid)
+        k, v = qk, qv
+    out["k"] = _paged_write(leaves["k"], k, block_table, start, valid)
+    out["v"] = _paged_write(leaves["v"], v, block_table, start, valid)
+    return out
 
 
 def _last_valid(x, chunk_len):
@@ -297,24 +332,26 @@ def paged_prefill_embeds(params, cfg: ModelConfig, x, arena, block_table,
     # it recovers the sequence's shard rotation from it
     wbt = L.localize_block_table(cfg, block_table, arena["k"].shape[1] - 1)
 
+    pages = {n: a for n, a in arena.items() if is_page_leaf(n)}
+
     def body(h, xs):
-        p, k_l, v_l = xs
+        p, pg = xs
         hn = L.rmsnorm_apply(p["ln1"], h, cfg.norm_eps)
         q, k, v = L.attention_qkv(p["attn"], cfg, hn, positions)
-        k_l = _paged_write(k_l, k, wbt, start, valid)
-        v_l = _paged_write(v_l, v, wbt, start, valid)
+        pg = _paged_write_kv(cfg, pg, k, v, wbt, start, valid)
         # chunk queries attend through the block table IN PLACE — no
         # contiguous (b, max_pages*page, hkv, hd) copy of the pages
-        o = L.run_paged_prefill_attention(cfg, q, k_l, v_l, block_table,
-                                          start, chunk_len)
+        o = L.run_paged_prefill_attention(cfg, q, pg["k"], pg["v"],
+                                          block_table, start, chunk_len,
+                                          k_scale=pg.get("k_scale"),
+                                          v_scale=pg.get("v_scale"))
         h = h + o @ p["attn"]["wo"]
         hn = L.rmsnorm_apply(p["ln2"], h, cfg.norm_eps)
         h = h + ffn_fn(p, cfg, hn, valid)
-        return h, (k_l, v_l)
+        return h, pg
 
-    x, (k_new, v_new) = jax.lax.scan(
-        body, x, (params["layers"], arena["k"], arena["v"]))
-    arena = {"k": k_new, "v": v_new}
+    x, pages_new = jax.lax.scan(body, x, (params["layers"], pages))
+    arena = {**arena, **pages_new}
     h = L.rmsnorm_apply(params["ln_f"], _last_valid(x, chunk_len),
                         cfg.norm_eps)
     logits = L.logits_from_hidden(head_weights(params, cfg), cfg, h)
@@ -351,22 +388,24 @@ def paged_decode_step(params, cfg: ModelConfig, arena, block_table,
     valid = (positions > 0)[:, None]                            # (b, 1)
     wbt = L.localize_block_table(cfg, block_table, arena["k"].shape[1] - 1)
 
+    pages = {n: a for n, a in arena.items() if is_page_leaf(n)}
+
     def body(h, xs):
-        p, k_l, v_l = xs
+        p, pg = xs
         hn = L.rmsnorm_apply(p["ln1"], h, cfg.norm_eps)
         q, k, v = L.attention_qkv(p["attn"], cfg, hn, positions[:, None])
-        k_l = _paged_write(k_l, k, wbt, positions)
-        v_l = _paged_write(v_l, v, wbt, positions)
-        o = L.run_paged_decode_attention(cfg, q[:, 0], k_l, v_l,
-                                         block_table, positions)
+        pg = _paged_write_kv(cfg, pg, k, v, wbt, positions)
+        o = L.run_paged_decode_attention(cfg, q[:, 0], pg["k"], pg["v"],
+                                         block_table, positions,
+                                         k_scale=pg.get("k_scale"),
+                                         v_scale=pg.get("v_scale"))
         h = h + (o @ p["attn"]["wo"])[:, None, :]
         hn = L.rmsnorm_apply(p["ln2"], h, cfg.norm_eps)
         h = h + ffn_fn(p, cfg, hn, valid)
-        return h, (k_l, v_l)
+        return h, pg
 
-    x, (k_new, v_new) = jax.lax.scan(
-        body, x, (params["layers"], arena["k"], arena["v"]))
-    arena = {"k": k_new, "v": v_new}
+    x, pages_new = jax.lax.scan(body, x, (params["layers"], pages))
+    arena = {**arena, **pages_new}
     h = L.rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
     logits = L.logits_from_hidden(head_weights(params, cfg), cfg, h)
     return arena, logits[:, 0]

@@ -94,7 +94,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.unimem import UniMemPool, SequencePageTable, UniMemOOM
+from repro.core.unimem import (HostParcel, HostTier, SequencePageTable,
+                               UniMemOOM, UniMemPool)
 from repro.models.config import ModelConfig
 from repro.models import registry
 from repro.serve.kv_cache import PagedKVArena, insert_slot, clear_slot
@@ -222,7 +223,8 @@ class ServingEngine:
                  layout: str | None = None, prefill_chunk: int | None = None,
                  mesh=None, high_watermark: float | None = None,
                  prefill_decode_ratio: float | None = None,
-                 tick_token_budget: int | None = None):
+                 tick_token_budget: int | None = None,
+                 host_tier_pages: int | None = None):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -308,7 +310,19 @@ class ServingEngine:
             # page-content hash -> physical page id (prompt prefix reuse)
             self._prefix_cache: dict[int, int] = {}
             self._page_hash: dict[int, int] = {}
+            # host-DRAM cold tier: preempted slots spill their written KV
+            # pages here instead of burning a full recompute on
+            # readmission (families with per-slot recurrent state keep
+            # the replay path — their conv/SSM rows can't be restored
+            # into a different slot)
+            self.host_tier = (HostTier(host_tier_pages)
+                              if host_tier_pages else None)
+            # uid -> (parcel, device-resident copy of its page data);
+            # filled by the async head-of-queue prefetch in step()
+            self._prefetched: dict[int, tuple] = {}
         else:
+            self.host_tier = None
+            self._prefetched = {}
             self.arena = None
             self.cache = fam.init_cache(cfg, max_batch, max_seq)
             self.cache_ax = fam.cache_axes()
@@ -560,6 +574,15 @@ class ServingEngine:
         free = self._free_slots()
         while free and self.pending:
             req = self.pending[0]
+            if self.host_tier is not None and req.uid in self.host_tier:
+                verdict = self._restore_from_tier(req, free)
+                if verdict == "restored":
+                    continue
+                if verdict == "wait":
+                    break               # pool must drain first
+                # "recompute": parcel dropped, fall through to normal
+                # admission (replay pinned at preemption still replays
+                # the already-published tokens)
             plen = req.virtual_len
             written, adopted, hashes = self._match_prefix(req)
             rot = self._rotation_of(req)
@@ -766,6 +789,7 @@ class ServingEngine:
         # forced context (never re-samples published history)
         if len(victim.generated) > len(victim.request.replay or ()):
             victim.request.replay = list(victim.generated)
+        self._spill_slot(victim)                 # host tier, if enabled
         self._release_pages(victim.pages)
         del self.slots[idx]
         self.pending.insert(0, victim.request)
@@ -780,6 +804,108 @@ class ServingEngine:
         idx, victim = max(victims, key=lambda kv: kv[1].order)
         self._preempt_slot(idx, victim)
         return True
+
+    # --------------------------------------------------------- host tier
+
+    def _spill_slot(self, victim: _Slot) -> None:
+        """Copy the victim's WRITTEN KV pages to the host-DRAM cold tier
+        so readmission restores them instead of recomputing.  Families
+        with per-slot recurrent state (hybrid conv/SSM) never spill —
+        their state rows can't be rebuilt in a different slot, so they
+        keep the replay path."""
+        tier = self.host_tier
+        if tier is None or self._slot_state:
+            return
+        if victim.prefilling:
+            valid = victim.prefill_pos
+        elif victim.generated:
+            # the LAST generated token's KV is written next decode tick
+            valid = victim.request.virtual_len + len(victim.generated) - 1
+        else:
+            valid = 0
+        if valid <= 0:
+            return
+        npages = self.pool.pages_for(valid)
+        pages = victim.pages.pages[:npages]
+        if len(pages) < npages:
+            return
+        data = self.arena.read_pages(pages)
+        meta = dict(tokens=valid, prefill_pos=victim.prefill_pos,
+                    rotation=victim.pages.rotation,
+                    generated=list(victim.generated),
+                    last_token=victim.last_token,
+                    page_hashes=list(victim.page_hashes))
+        self._prefetched.pop(victim.request.uid, None)   # stale copy
+        tier.put(HostParcel(uid=victim.request.uid, num_pages=npages,
+                            data=data, meta=meta))
+
+    def _restore_from_tier(self, req, free: list[int]) -> str:
+        """Readmission fast path: rebuild the slot from its spilled
+        parcel — fresh pages on the SAME shard rotation, page contents
+        written back (prefetched device copy when the async prefetch
+        landed), generation state resumed exactly.  Returns "restored",
+        "wait" (pool must drain first) or "recompute" (parcel unusable —
+        dropped; caller falls through to normal admission)."""
+        tier = self.host_tier
+        parcel = tier.peek(req.uid)
+        rot = parcel.meta["rotation"]
+        npages = parcel.num_pages
+        # thrash guard: restoring straight past the shedder's limit
+        # would preempt (and re-spill) somebody next tick
+        if self.high_watermark is not None and self.slots:
+            limit = int(self.high_watermark * self.pool.num_pages)
+            if (self.pool.num_pages - self.pool.free_pages) + npages > limit:
+                return "wait"
+        if not self.pool.fits(rot, npages):
+            if self.slots:
+                return "wait"
+            tier.take(req.uid)          # pool genuinely too small
+            return "recompute"
+        tier.take(req.uid)
+        tier.restores += 1
+        tier.restored_pages += npages
+        pre = self._prefetched.pop(req.uid, None)
+        payload = pre[1] if pre is not None and pre[0] is parcel \
+            else parcel.data
+        self.pending.pop(0)
+        slot = free.pop(0)
+        seq = SequencePageTable(self.pool, rotation=rot)
+        seq.append_tokens(parcel.meta["tokens"])
+        for j, pg in enumerate(seq.pages):
+            self.arena.write_page(pg, {n: a[:, j] for n, a in
+                                       payload.items()})
+        s = _Slot(request=req, pages=seq,
+                  generated=list(parcel.meta["generated"]),
+                  last_token=parcel.meta["last_token"],
+                  admitted_at=time.perf_counter(), order=self._admitted,
+                  prefill_pos=parcel.meta["prefill_pos"],
+                  page_hashes=list(parcel.meta["page_hashes"]))
+        self._admitted += 1
+        # KV restored byte-for-byte: published history needs no replay
+        req.replay = None
+        self.slots[slot] = s
+        self._register_prefix(s)
+        log.info("engine: restored uid=%d from host tier (%d pages)",
+                 req.uid, npages)
+        return "restored"
+
+    def _tier_prefetch(self) -> None:
+        """Async readmission prefetch: start moving the head-of-queue
+        request's parcel back to device while this tick's compute runs
+        (`jax.device_put` is asynchronous — the copy overlaps)."""
+        tier = self.host_tier
+        if tier is None or not self.pending:
+            return
+        uid = self.pending[0].uid
+        if uid in self._prefetched:
+            return
+        parcel = tier.peek(uid)
+        if parcel is None:
+            return
+        self._prefetched[uid] = (parcel, {
+            n: jax.device_put(jnp.asarray(a))
+            for n, a in parcel.data.items()})
+        tier.prefetches += 1
 
     def _decode_rows(self) -> dict[int, _Slot]:
         """Active decode rows for this tick, throttled oldest-first by
@@ -877,6 +1003,7 @@ class ServingEngine:
 
     def step(self):
         self._admit()
+        self._tier_prefetch()       # overlap host->device copy with compute
         self._prefill_tick()
         self._enforce_high_watermark()
         if self.layout == "paged":
@@ -976,4 +1103,9 @@ class ServingEngine:
         if self.mesh is not None:               # near-memory sharded arena
             out["shards"] = self.pool.shard_stats()
             out["shard_kv_bytes"] = self.arena.shard_kv_bytes()
+        if self.host_tier is not None:          # DRAM cold tier traffic
+            tier = self.host_tier.stats()
+            tier["peak_bytes"] = (tier["peak_resident_pages"]
+                                  * self.arena.page_bytes)
+            out["host_tier"] = tier
         return out

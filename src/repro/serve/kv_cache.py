@@ -34,7 +34,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.unimem import UniMemPool, SequencePageTable
+from repro.core.unimem import (PAGED_KV_KEYS, PAGED_SCALE_KEYS,  # noqa: F401
+                               SequencePageTable, UniMemPool, is_page_leaf)
 from repro.models.config import ModelConfig
 
 NEG_INF = -1e30
@@ -42,11 +43,12 @@ NEG_INF = -1e30
 
 # ------------------------------------------------------------ paged arena
 
-# Arena leaves holding physical KV pages (page-slot axis 1).  Any OTHER
-# leaf a family puts in its paged cache (hybrid: "conv"/"ssm") is
-# contiguous per-ENGINE-SLOT state with the slot axis at position
-# STATE_SLOT_AXIS — pages COW-copy, state rows copy on fork.
-PAGED_KV_KEYS = ("k", "v")
+# Arena leaves holding physical KV pages (page-slot axis 1) — and, under
+# a quantized `cfg.kv_dtype`, their f32 scale siblings (PAGED_SCALE_KEYS,
+# same slot axis; both re-exported from core/unimem).  Any OTHER leaf a
+# family puts in its paged cache (hybrid: "conv"/"ssm") is contiguous
+# per-ENGINE-SLOT state with the slot axis at position STATE_SLOT_AXIS —
+# pages COW-copy, state rows copy on fork.
 STATE_SLOT_AXIS = 2
 
 
@@ -79,8 +81,11 @@ class PagedKVArena:
                 c = self.cfg
                 shape = (c.num_layers, self.num_pages + 1, self.page_size,
                          c.num_kv_heads, c.head_dim)
-                self.kv = {"k": jnp.zeros(shape, c.compute_dtype),
-                           "v": jnp.zeros(shape, c.compute_dtype)}
+                self.kv = {"k": jnp.zeros(shape, c.kv_store_dtype),
+                           "v": jnp.zeros(shape, c.kv_store_dtype)}
+                if c.kv_quantized:
+                    for name in PAGED_SCALE_KEYS:
+                        self.kv[name] = jnp.zeros(shape[:-1], jnp.float32)
         if self.pool is None:
             self.pool = UniMemPool(self.num_pages, self.page_size)
 
@@ -104,9 +109,10 @@ class PagedKVArena:
 
     @property
     def page_bytes(self) -> int:
-        """Device bytes of ONE page across all layers and both of K/V."""
-        kv = sum(int(self.kv[n].size) * self.kv[n].dtype.itemsize
-                 for n in PAGED_KV_KEYS)
+        """Device bytes of ONE page across all layers, K/V, and (when
+        quantized) the scale leaves."""
+        kv = sum(int(a.size) * a.dtype.itemsize
+                 for n, a in self.kv.items() if is_page_leaf(n))
         return kv // (self.num_pages + 1)
 
     @property
@@ -114,7 +120,7 @@ class PagedKVArena:
         """Bytes of the contiguous per-slot state (non-page leaves) —
         zero for attention-only families, SSM/conv rows for hybrid."""
         return sum(int(a.size) * a.dtype.itemsize
-                   for n, a in self.kv.items() if n not in PAGED_KV_KEYS)
+                   for n, a in self.kv.items() if not is_page_leaf(n))
 
     def new_sequence(self) -> SequencePageTable:
         return SequencePageTable(self.pool)
@@ -127,12 +133,17 @@ class PagedKVArena:
             bt[i, :len(s.pages)] = s.pages
         return bt
 
+    def phys_slot(self, page: int) -> int:
+        """Device-array slot of pool page id `page` (identity on the
+        single arena; the sharded arena interleaves per-shard nulls)."""
+        return page
+
     def copy_page(self, src: int, dst: int) -> None:
         """Device-side page copy (the COW fixup after
         `SequencePageTable.cow_last_page`).  Only the page leaves move;
         per-slot state is not page-structured."""
         self.kv = {name: (a.at[:, dst].set(a[:, src])
-                          if name in PAGED_KV_KEYS else a)
+                          if is_page_leaf(name) else a)
                    for name, a in self.kv.items()}
 
     def copy_slot_state(self, src_slot: int, dst_slot: int) -> None:
@@ -141,12 +152,31 @@ class PagedKVArena:
         sharing for state that cannot be paged."""
         out = {}
         for name, a in self.kv.items():
-            if name in PAGED_KV_KEYS:
+            if is_page_leaf(name):
                 out[name] = a
             else:
                 idx = (slice(None),) * STATE_SLOT_AXIS
                 out[name] = a.at[idx + (dst_slot,)].set(a[idx + (src_slot,)])
         self.kv = out
+
+    # ------------------------------------------------- host-tier traffic
+
+    def read_pages(self, pages: list[int]) -> dict:
+        """Pull the page leaves of `pages` to host numpy arrays (the
+        spill payload): leaf name -> (L, len(pages), ...)."""
+        idx = np.asarray([self.phys_slot(p) for p in pages], np.int32)
+        return {name: np.asarray(jax.device_get(a[:, idx]))
+                for name, a in self.kv.items() if is_page_leaf(name)}
+
+    def write_page(self, page: int, data: dict) -> None:
+        """Write one page's leaves back into the arena (the restore
+        path).  `data` maps leaf name -> (L, ...) single-page payload —
+        host numpy or already-device arrays (the prefetch fast path)."""
+        slot = self.phys_slot(page)
+        self.kv = {name: (a.at[:, slot].set(
+                              jnp.asarray(data[name]).astype(a.dtype))
+                          if name in data else a)
+                   for name, a in self.kv.items()}
 
     def cow_for_write(self, seq: SequencePageTable) -> bool:
         """Make `seq`'s last page privately owned before a write lands in

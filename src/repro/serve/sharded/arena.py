@@ -28,10 +28,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.unimem import ShardedUniMemPool
+from repro.core.unimem import ShardedUniMemPool, is_page_leaf
 from repro.launch.mesh import MEM_AXIS
-from repro.serve.kv_cache import (PAGED_KV_KEYS, STATE_SLOT_AXIS,
-                                  PagedKVArena)
+from repro.serve.kv_cache import STATE_SLOT_AXIS, PagedKVArena
 
 
 @dataclass
@@ -42,6 +41,7 @@ class ShardedPagedKVArena(PagedKVArena):
     mesh: Mesh = None
     _copy_page_jit: object = field(default=None, repr=False, compare=False)
     _copy_state_jit: object = field(default=None, repr=False, compare=False)
+    _write_page_jit: object = field(default=None, repr=False, compare=False)
 
     def __post_init__(self):
         assert self.mesh is not None and MEM_AXIS in self.mesh.axis_names
@@ -58,7 +58,7 @@ class ShardedPagedKVArena(PagedKVArena):
         self.kv = {
             name: jax.device_put(
                 a, NamedSharding(self.mesh,
-                                 P(None, MEM_AXIS) if name in PAGED_KV_KEYS
+                                 P(None, MEM_AXIS) if is_page_leaf(name)
                                  else P()))
             for name, a in self.kv.items()}
         if self.pool is None:
@@ -83,8 +83,8 @@ class ShardedPagedKVArena(PagedKVArena):
 
     @property
     def page_bytes(self) -> int:
-        kv = sum(int(self.kv[n].size) * self.kv[n].dtype.itemsize
-                 for n in PAGED_KV_KEYS)
+        kv = sum(int(a.size) * a.dtype.itemsize
+                 for n, a in self.kv.items() if is_page_leaf(n))
         return kv // (self.num_shards * (self.pages_per_shard + 1))
 
     def shard_kv_bytes(self) -> list[int]:
@@ -92,8 +92,10 @@ class ShardedPagedKVArena(PagedKVArena):
         shard (from the arrays' own placement, not arithmetic)."""
         n = self.num_shards
         totals = [0] * n
-        for name in PAGED_KV_KEYS:
-            for i, s in enumerate(self.kv[name].addressable_shards):
+        for name, a in self.kv.items():
+            if not is_page_leaf(name):
+                continue
+            for i, s in enumerate(a.addressable_shards):
                 totals[i % n] += int(s.data.size) * s.data.dtype.itemsize
         return totals
 
@@ -109,11 +111,28 @@ class ShardedPagedKVArena(PagedKVArena):
                 return {name: (a.at[:, pd].set(
                             jax.lax.dynamic_index_in_dim(a, ps, 1,
                                                          keepdims=False))
-                               if name in PAGED_KV_KEYS else a)
+                               if is_page_leaf(name) else a)
                         for name, a in kv.items()}
             self._copy_page_jit = jax.jit(f, out_shardings=self._shardings())
         self.kv = self._copy_page_jit(self.kv, jnp.int32(self.phys_slot(src)),
                                       jnp.int32(self.phys_slot(dst)))
+
+    def write_page(self, page: int, data: dict) -> None:
+        """Host-tier restore write-back, sharded: one jitted setter with
+        pinned output shardings (the eager `.at[].set` of the base class
+        would silently re-gather the banks onto one device).  One
+        compiled shape regardless of parcel size — the engine loops it
+        per page."""
+        if self._write_page_jit is None:
+            def f(kv, slot, payload):
+                return {name: (a.at[:, slot].set(
+                                   payload[name].astype(a.dtype))
+                               if name in payload else a)
+                        for name, a in kv.items()}
+            self._write_page_jit = jax.jit(f, out_shardings=self._shardings())
+        payload = {n: jnp.asarray(v) for n, v in data.items()}
+        self.kv = self._write_page_jit(
+            self.kv, jnp.int32(self.phys_slot(page)), payload)
 
     def copy_slot_state(self, src_slot: int, dst_slot: int) -> None:
         """fork() state copy on the REPLICATED non-page leaves."""
@@ -123,7 +142,7 @@ class ShardedPagedKVArena(PagedKVArena):
             def f(kv, src, dst):
                 out = {}
                 for name, a in kv.items():
-                    if name in PAGED_KV_KEYS:
+                    if is_page_leaf(name):
                         out[name] = a
                     else:
                         row = jax.lax.dynamic_index_in_dim(

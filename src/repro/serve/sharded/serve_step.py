@@ -34,6 +34,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.core.unimem import is_page_leaf
 from repro.launch.mesh import MEM_AXIS
 from repro.models.config import ModelConfig
 from repro.models import registry
@@ -55,7 +56,7 @@ def make_sharded_serve_fns(cfg: ModelConfig, mesh: Mesh, num_pages: int,
     if num_pages % n:
         raise ValueError(f"num_pages {num_pages} must divide over {n} shards")
     scfg = cfg.replace(mem_axis=MEM_AXIS)
-    arena_specs = {k: (P(None, MEM_AXIS) if k in PAGED_KV_KEYS else P())
+    arena_specs = {k: (P(None, MEM_AXIS) if is_page_leaf(k) else P())
                    for k in arena_keys}
     rep = P()
     cpu = jax.default_backend() == "cpu"

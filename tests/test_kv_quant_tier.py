@@ -1,0 +1,415 @@
+"""Quantized KV pages + the host-DRAM cold tier (capacity wall, round 2).
+
+In-process: the quantize/dequantize contract (scale shapes, fp8 clip —
+no NaN from out-of-range casts, zero rows stay exactly zero), in-kernel
+dequant parity for both fused kernel triads against the dequantizing
+refs, the HostTier LRU unit contract, engine-level int8 token parity +
+the 0.55x page-bytes gate at head_dim 64, and single-device
+spill/restore token identity under a forced watermark.  Subprocess
+(8 forced host devices): the sharded arena quantized end-to-end, and
+spill/restore across the mesh — readmitted sequences keep their shard
+rotation, per-bank peaks stay within pages_per_shard, and
+`ShardedUniMemPool.fits` stays exact under preemption + spill churn.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core.unimem import (HostParcel, HostTier, dequantize_kv,
+                               quantize_kv)
+from repro.kernels.paged_attention.ops import paged_decode_attention
+from repro.kernels.paged_attention.ref import paged_decode_attention_ref
+from repro.kernels.paged_prefill.ops import paged_prefill_attention
+from repro.kernels.paged_prefill.ref import paged_prefill_attention_ref
+from repro.models import registry
+from repro.models.config import ModelConfig
+from repro.serve.engine import Request, ServingEngine
+
+from conftest import TINY
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+DTYPES = {"int8": jnp.int8, "fp8": jnp.float8_e4m3fn}
+
+
+def run_with_devices(body: str, n: int = 8, timeout: int = 560) -> str:
+    code = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n}"
+        import sys
+        sys.path.insert(0, {os.path.join(REPO, "src")!r})
+        sys.path.insert(0, {os.path.join(REPO, "tests")!r})
+    """) + textwrap.dedent(body)
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, timeout=timeout, cwd=REPO)
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    return proc.stdout
+
+
+# ------------------------------------------------- quantization contract
+
+@pytest.mark.parametrize("name", ["int8", "fp8"])
+def test_quantize_roundtrip_error_bounded(name):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((3, 8, 2, 32)) * 5, jnp.float32)
+    q, scale = quantize_kv(x, DTYPES[name])
+    assert q.dtype == DTYPES[name]
+    assert scale.shape == x.shape[:-1] and scale.dtype == jnp.float32
+    y = dequantize_kv(q, scale)
+    # per-row amax scaling: worst-case error is half a quantization step
+    step = np.asarray(scale)[..., None]
+    tol = step * (0.51 if name == "int8" else 0.07 * 448)
+    assert np.all(np.abs(np.asarray(y) - np.asarray(x)) <= tol + 1e-6)
+
+
+@pytest.mark.parametrize("name", ["int8", "fp8"])
+def test_quantize_zero_rows_stay_exactly_zero(name):
+    """A null page full of zeros must dequantize to EXACT zeros — the
+    masked-garbage contract the kernels rely on."""
+    x = jnp.zeros((2, 4, 1, 16), jnp.float32)
+    q, scale = quantize_kv(x, DTYPES[name])
+    assert np.all(np.asarray(scale) == 0.0)
+    assert np.all(np.asarray(dequantize_kv(q, scale)) == 0.0)
+
+
+def test_fp8_quantize_never_nan():
+    """Out-of-range f32 -> e4m3 casts produce NaN; the clip-before-cast
+    in quantize_kv must keep every huge outlier finite."""
+    x = jnp.asarray([[1e30, -1e30, 1e-30, 0.0]], jnp.float32)
+    q, scale = quantize_kv(x, jnp.float8_e4m3fn)
+    assert np.all(np.isfinite(np.asarray(q, np.float32)))
+    assert np.all(np.isfinite(np.asarray(dequantize_kv(q, scale))))
+
+
+# ------------------------------------------- in-kernel dequant == ref
+
+def _quant_arena(name, seed=0, b=2, hkv=2, hd=16, page=8, mp=4):
+    rng = np.random.default_rng(seed)
+    P = b * mp + 1
+    k = jnp.asarray(rng.standard_normal((P, page, hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((P, page, hkv, hd)), jnp.float32)
+    qk, ks = quantize_kv(k, DTYPES[name])
+    qv, vs = quantize_kv(v, DTYPES[name])
+    bt = jnp.asarray(rng.permutation(P - 1)[:b * mp].reshape(b, mp), jnp.int32)
+    return rng, qk, qv, ks, vs, bt
+
+
+@pytest.mark.parametrize("name,ppb", [("int8", 1), ("int8", 2),
+                                      ("fp8", 1), ("fp8", 2)])
+def test_decode_kernel_dequantizes_in_register(name, ppb):
+    rng, qk, qv, ks, vs, bt = _quant_arena(name)
+    b, page, mp, hq, hd = 2, 8, 4, 4, 16
+    pos = jnp.asarray([mp * page - 1, 11], jnp.int32)
+    q = jnp.asarray(rng.standard_normal((b, hq, hd)), jnp.float32)
+    got = paged_decode_attention(q, qk, qv, bt, pos, pages_per_block=ppb,
+                                 k_scale=ks, v_scale=vs, interpret=True)
+    want = paged_decode_attention_ref(q, qk, qv, bt, pos,
+                                      k_scale=ks, v_scale=vs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("name,ppb", [("int8", 1), ("int8", 2),
+                                      ("fp8", 1), ("fp8", 2)])
+def test_prefill_kernel_dequantizes_in_register(name, ppb):
+    rng, qk, qv, ks, vs, bt = _quant_arena(name, seed=1)
+    b, page, mp, hq, hd, c = 2, 8, 4, 4, 16, 8
+    start = jnp.asarray([0, 9], jnp.int32)
+    clen = jnp.asarray([c, c - 3], jnp.int32)
+    q = jnp.asarray(rng.standard_normal((b, c, hq, hd)), jnp.float32)
+    got = paged_prefill_attention(q, qk, qv, bt, start, clen,
+                                  pages_per_block=ppb,
+                                  k_scale=ks, v_scale=vs, interpret=True)
+    want = paged_prefill_attention_ref(q, qk, qv, bt, start, clen,
+                                       k_scale=ks, v_scale=vs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_quantized_attention_tracks_f32_oracle():
+    """Quantize -> in-kernel dequant must stay CLOSE to the unquantized
+    attention (bounded logit error, not bit equality)."""
+    rng = np.random.default_rng(3)
+    b, hkv, hd, page, mp, hq = 2, 2, 32, 8, 4, 4
+    P = b * mp + 1
+    k = jnp.asarray(rng.standard_normal((P, page, hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((P, page, hkv, hd)), jnp.float32)
+    bt = jnp.asarray(rng.permutation(P - 1)[:b * mp].reshape(b, mp),
+                     jnp.int32)
+    pos = jnp.asarray([mp * page - 1, 17], jnp.int32)
+    q = jnp.asarray(rng.standard_normal((b, hq, hd)), jnp.float32)
+    oracle = paged_decode_attention_ref(q, k, v, bt, pos)
+    qk, ks = quantize_kv(k, jnp.int8)
+    qv, vs = quantize_kv(v, jnp.int8)
+    got = paged_decode_attention(q, qk, qv, bt, pos, k_scale=ks, v_scale=vs,
+                                 interpret=True)
+    err = np.max(np.abs(np.asarray(got) - np.asarray(oracle)))
+    assert err < 0.05, f"int8 attention drifted {err} from f32 oracle"
+
+
+# ------------------------------------------------------- HostTier LRU
+
+def _parcel(uid, npages):
+    return HostParcel(uid=uid, num_pages=npages,
+                      data={"k": np.zeros((1, npages, 2))}, meta={})
+
+
+def test_host_tier_lru_evicts_oldest_first():
+    tier = HostTier(8)
+    for uid in range(3):
+        assert tier.put(_parcel(uid, 3))        # 9 > 8: uid 0 evicted
+    assert 0 not in tier and 1 in tier and 2 in tier
+    assert tier.resident_pages == 6
+    assert tier.evictions == 1 and tier.evicted_pages == 3
+    tier.peek(1)                                # touch: 1 is now MRU
+    tier.put(_parcel(3, 3))                     # evicts 2, not 1
+    assert 2 not in tier and 1 in tier and 3 in tier
+
+
+def test_host_tier_refuses_oversize_and_replaces_in_place():
+    tier = HostTier(4)
+    assert not tier.put(_parcel(0, 5))          # alone > capacity
+    assert 0 not in tier and tier.resident_pages == 0
+    assert tier.put(_parcel(1, 2))
+    assert tier.put(_parcel(1, 4))              # replace, not double-count
+    assert tier.resident_pages == 4
+    assert tier.take(1).num_pages == 4
+    assert tier.resident_pages == 0 and tier.take(1) is None
+    s = tier.stats()
+    assert s["spills"] == 2 and s["peak_resident_pages"] == 4
+
+
+# ------------------------------------- engine: quantized arena parity
+
+def _serve(cfg, params, reqs, **kw):
+    eng = ServingEngine(cfg, params, max_batch=4, max_seq=64, page_size=8,
+                        **kw)
+    for uid, prompt, mnew in reqs:
+        eng.submit(Request(uid=uid, prompt=np.asarray(prompt, np.int32),
+                           max_new_tokens=mnew))
+    res = eng.run()
+    return {r.uid: tuple(r.tokens) for r in res}, eng
+
+
+def _reqs(cfg, n=6, seed=0, mnew=10):
+    rng = np.random.default_rng(seed)
+    return [(uid, rng.integers(1, cfg.vocab_size - 1,
+                               int(rng.integers(8, 28))), mnew)
+            for uid in range(n)]
+
+
+def test_engine_int8_pages_keep_greedy_tokens():
+    cfg = TINY["dense"]
+    params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+    reqs = _reqs(cfg)
+    base, _ = _serve(cfg.replace(kv_dtype="bf16"), params, reqs)
+    got, eng = _serve(cfg.replace(kv_dtype="int8"), params, reqs)
+    assert got == base
+    assert eng.arena.kv["k"].dtype == jnp.int8
+    assert eng.arena.kv["k_scale"].dtype == jnp.float32
+
+
+def test_engine_int8_page_bytes_under_055x_at_head_dim_64():
+    cfg = ModelConfig(
+        name="q64", family="dense", num_layers=2, d_model=128,
+        vocab_size=128, num_heads=2, num_kv_heads=1, head_dim=64, d_ff=128,
+        attn_chunk=32, max_seq=64)
+    params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+    reqs = _reqs(cfg, n=4, mnew=6)
+    peaks = {}
+    toks = {}
+    for name in ("bf16", "int8"):
+        toks[name], eng = _serve(cfg.replace(kv_dtype=name), params, reqs)
+        peaks[name] = eng.peak_kv_bytes()
+    assert toks["int8"] == toks["bf16"]
+    ratio = peaks["int8"] / peaks["bf16"]
+    assert ratio <= 0.55, f"int8 arena ratio {ratio} over the 0.55 gate"
+
+
+@pytest.mark.parametrize("fam", ["hybrid", "vlm"])
+def test_engine_quantized_pages_other_families(fam):
+    """hybrid (paged KV + contiguous conv/SSM rows) and vlm (patch
+    frontend) quantize their attention pages through the same writer."""
+    cfg = TINY[fam]
+    params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+    rng = np.random.default_rng(1)
+    reqs = []
+    for uid in range(3):
+        prompt = rng.integers(1, cfg.vocab_size - 1, 12)
+        reqs.append((uid, prompt, 5))
+
+    def serve(c):
+        eng = ServingEngine(c, params, max_batch=2, max_seq=64, page_size=8)
+        for uid, prompt, mnew in reqs:
+            pe = (rng.standard_normal((cfg.num_patches, cfg.frontend_dim))
+                  .astype(np.float32) if cfg.frontend == "patch" else None)
+            eng.submit(Request(uid=uid, prompt=np.asarray(prompt, np.int32),
+                               max_new_tokens=mnew, patch_embeds=pe))
+        return {r.uid: tuple(r.tokens) for r in eng.run()}
+
+    rng = np.random.default_rng(1)      # same patches both runs
+    base = serve(cfg.replace(kv_dtype="bf16"))
+    rng = np.random.default_rng(1)
+    got = serve(cfg.replace(kv_dtype="int8"))
+    assert got == base
+
+
+# ------------------------------------------ engine: host-tier spill
+
+def test_spill_restore_tokens_identical_to_all_hbm():
+    cfg = TINY["dense"]
+    params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+    reqs = _reqs(cfg, n=6, mnew=12)
+    base, _ = _serve(cfg, params, reqs, pool_pages=64)
+    got, eng = _serve(cfg, params, reqs, pool_pages=16,
+                      high_watermark=0.75, host_tier_pages=64)
+    assert got == base
+    ht = eng.stats()["host_tier"]
+    assert ht["spills"] > 0 and ht["restores"] > 0, ht
+    assert ht["restored_pages"] <= ht["spilled_pages"]
+    assert ht["resident_pages"] == 0        # every parcel restored
+
+
+def test_spill_restore_quantized_pages():
+    cfg = TINY["dense"].replace(kv_dtype="int8")
+    params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+    reqs = _reqs(cfg, n=6, mnew=12)
+    base, _ = _serve(cfg, params, reqs, pool_pages=64)
+    got, eng = _serve(cfg, params, reqs, pool_pages=16,
+                      high_watermark=0.75, host_tier_pages=64)
+    assert got == base
+    assert eng.stats()["host_tier"]["spills"] > 0
+
+
+def test_tier_eviction_falls_back_to_recompute():
+    """A tier too small to hold every parcel must still finish with
+    identical tokens — evicted sequences recompute via replay."""
+    cfg = TINY["dense"]
+    params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+    reqs = _reqs(cfg, n=6, mnew=12)
+    base, _ = _serve(cfg, params, reqs, pool_pages=64)
+    got, eng = _serve(cfg, params, reqs, pool_pages=16,
+                      high_watermark=0.75, host_tier_pages=4)
+    assert got == base
+    ht = eng.stats()["host_tier"]
+    assert ht["spills"] > 0
+
+
+def test_hybrid_never_spills_but_stays_correct():
+    """Per-slot conv/SSM state can't be restored into a different slot:
+    hybrid keeps the replay path, the tier stays untouched."""
+    cfg = TINY["hybrid"]
+    params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+    reqs = _reqs(cfg, n=4, mnew=8)
+    base, _ = _serve(cfg, params, reqs, pool_pages=64)
+    got, eng = _serve(cfg, params, reqs, pool_pages=24,
+                      high_watermark=0.6, host_tier_pages=64)
+    assert got == base
+    assert eng.stats()["host_tier"]["spills"] == 0
+
+
+# --------------------------------------- sharded: quant + tier on mesh
+
+def test_sharded_int8_parity_and_spill_keeps_rotation():
+    run_with_devices("""
+        import numpy as np, jax
+        from conftest import TINY
+        from repro.launch.mesh import make_mem_mesh
+        from repro.models import registry
+        from repro.serve.engine import ServingEngine, Request
+
+        cfg = TINY["dense"]
+        params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+
+        def serve(c, mesh=None, **kw):
+            eng = ServingEngine(c, params, max_batch=4, max_seq=64,
+                                page_size=8, mesh=mesh, **kw)
+            rng = np.random.default_rng(0)
+            for uid in range(6):
+                eng.submit(Request(
+                    uid=uid,
+                    prompt=np.asarray(rng.integers(1, 127,
+                                      int(rng.integers(8, 28))), np.int32),
+                    max_new_tokens=12))
+            return {r.uid: tuple(r.tokens) for r in eng.run()}, eng
+
+        mesh = make_mem_mesh(8)
+        # int8 pages, sharded == single-device == bf16 single-device
+        base, _ = serve(cfg.replace(kv_dtype="bf16"))
+        q1, _ = serve(cfg.replace(kv_dtype="int8"))
+        q8, eng8 = serve(cfg.replace(kv_dtype="int8"), mesh=mesh)
+        assert q1 == base, "int8 single-device diverged"
+        assert q8 == base, "int8 sharded diverged"
+        assert eng8.arena.kv["k_scale"].dtype == jax.numpy.float32
+
+        # spill/restore over the mesh: same tokens, rotation preserved
+        t8, engt = serve(cfg, mesh=mesh, pool_pages=16,
+                         high_watermark=0.5, host_tier_pages=64)
+        assert t8 == base, "tiered sharded run diverged"
+        ht = engt.stats()["host_tier"]
+        assert ht["spills"] > 0 and ht["restores"] > 0, ht
+        # restored slots were rebuilt on their original rotation, so no
+        # bank ever exceeded its share of the pool
+        pps = engt.pool.pages_per_shard
+        for s in engt.pool.shard_stats():
+            assert 0 < s["peak_allocated_pages"] <= pps, s
+            assert s["free_pages"] == pps      # drained clean
+        print("SHARDED-QUANT-TIER-OK")
+    """)
+
+
+def test_sharded_fits_exact_under_preempt_spill_churn():
+    """`fits` must agree with alloc success per shard while slots churn
+    through preempt -> spill -> restore (the admission guard the tier
+    leans on)."""
+    run_with_devices("""
+        from repro.core.unimem import (SequencePageTable, ShardedUniMemPool,
+                                       UniMemOOM)
+
+        pool = ShardedUniMemPool(16, 8, num_shards=4)
+
+        # three sequences on distinct rotations fill most banks
+        seqs = [SequencePageTable(pool, rotation=r) for r in (0, 1, 2)]
+        for s in seqs:
+            s.append_tokens(4 * 8)                 # 4 pages each, strided
+        assert [d["allocated_pages"] for d in pool.shard_stats()] == [3] * 4
+
+        # fits is per-bank exact: one page per bank left
+        assert pool.fits(0, 4)
+        assert not pool.fits(0, 5)
+
+        # preempt (spill) one sequence -> its banks free up strided
+        victim = seqs.pop(1)
+        rot = victim.rotation
+        victim.release()
+        assert pool.fits(rot, 4)
+
+        # restore on the SAME rotation lands on the same banks
+        restored = SequencePageTable(pool, rotation=rot)
+        restored.append_tokens(4 * 8)
+        shards = sorted(p // pool.pages_per_shard for p in restored.pages)
+        assert shards == [0, 1, 2, 3]
+        peaks = [d["peak_allocated_pages"] for d in pool.shard_stats()]
+        assert all(p <= pool.pages_per_shard for p in peaks)
+
+        # a 4th rotation's demand concentrates on the fullest bank: fits
+        # must refuse exactly when a bank would overflow
+        assert pool.fits(3, 4)
+        extra = SequencePageTable(pool, rotation=3)
+        extra.append_tokens(4 * 8)
+        assert not pool.fits(0, 1) and pool.free_pages == 0
+        try:
+            SequencePageTable(pool, rotation=0).append_tokens(1)
+            raise AssertionError("alloc past a full pool must raise")
+        except UniMemOOM:
+            pass
+        print("FITS-CHURN-OK")
+    """)
