@@ -28,16 +28,21 @@ in-kernel dequant); `--quant` adds the capacity sweep gating the int8
 arena at <= 0.55x bf16 page bytes with identical greedy tokens, and
 `--host-tier` adds the forced-watermark spill smoke (DRAM cold bank
 behind the pool; gated on nonzero spill+restore traffic and token
-identity with an all-HBM run).  `--json PATH` additionally writes a
-machine-readable `BENCH_serve.json` (`"schema": 4` — tokens/s, peak KV
+identity with an all-HBM run).  `--prefix-trace` adds the SHARED SYSTEM
+PROMPT trace: sequential requests with a common 96-token prefix served
+through the persistent prefix store, gated on nonzero cross-request
+hits, fewer prompt tokens computed, steady-state TTFT below the cold
+run, and identical greedy tokens.  `--json PATH` additionally writes a
+machine-readable `BENCH_serve.json` (`"schema": 5` — tokens/s, peak KV
 bytes per tier, kv_dtype, shard topology + per-shard KV high-water,
-spill/prefetch counts, the sampling-mode sweep, and the compiled-HLO
-attention traffic of the jitted steps before/after the kernel fusion).
+spill/prefetch counts, the sampling-mode sweep, prefix hit rate + TTFT,
+and the compiled-HLO attention traffic of the jitted steps before/after
+the kernel fusion).
 
     PYTHONPATH=src python benchmarks/serve_throughput.py \
         [--family dense,moe,hybrid,vlm] [--impl flash_pallas] [--ppb 2] \
         [--shards 8] [--sampling] [--kv-dtype int8] [--quant] \
-        [--host-tier] [--json BENCH_serve.json]
+        [--host-tier] [--prefix-trace] [--json BENCH_serve.json]
 """
 from __future__ import annotations
 
@@ -51,15 +56,17 @@ import jax
 
 from repro.models.config import ModelConfig
 from repro.models import registry
-from repro.serve import ServingEngine, Request, SamplingParams
+from repro.serve import ServingEngine, Request, SamplingParams, TokenEvent
 
 # machine-readable result schema, versioned so trajectory tooling can
 # evolve: 2 added shard topology + per-shard KV high-water; 3 added the
 # --sampling sweep (mode, greedy vs sampled tokens/s, determinism gate);
 # 4 added kv_dtype + the quantized-arena sweep (int8 page bytes <= 0.55x
 # bf16 at identical greedy tokens) and the host-tier spill smoke (HBM +
-# host arena bytes, spill/prefetch/restore traffic)
-SCHEMA = 4
+# host arena bytes, spill/prefetch/restore traffic); 5 added the
+# --prefix-trace shared-system-prompt sweep (prefix hit rate, prompt
+# pages prefilled vs reused, steady-state TTFT cached vs cold)
+SCHEMA = 5
 
 CFG = ModelConfig(
     name="bench-dense", family="dense", num_layers=2, d_model=64,
@@ -320,9 +327,74 @@ def _tier_sweep(mesh=None) -> dict:
                 ok=same and spilled)
 
 
+def _prefix_sweep(mesh=None) -> dict:
+    """--prefix-trace: N requests sharing one SYSTEM PROMPT, served
+    strictly sequentially — every donor fully retires before the next
+    request arrives, so any page reuse crosses request lifetimes through
+    the persistent prefix store (serve/prefix_store.py), never through a
+    live co-resident donor.
+
+    The cached run must (a) actually hit — nonzero cross-request store
+    hits and strictly fewer prompt tokens computed than the cold run,
+    (b) stay byte-identical to the cold run on every request's greedy
+    tokens, and (c) beat the cold run on steady-state TTFT (median over
+    requests >= 2, past jit warmup): with a 96-token system prompt and
+    16-token prefill chunks, a hit replaces six prefill dispatches per
+    request with page adoption."""
+    n, sys_len, tail_len, mnew = 8, 96, 8, 6
+    rng = np.random.default_rng(909)
+    system = rng.integers(0, CFG.vocab_size, sys_len).astype(np.int32)
+    prompts = [np.concatenate(
+        [system, rng.integers(0, CFG.vocab_size, tail_len).astype(np.int32)])
+        for _ in range(n)]
+    params = registry.get_family(CFG).init(jax.random.key(0), CFG)
+
+    def serve(cached):
+        eng = ServingEngine(CFG, params, max_batch=2, max_seq=256,
+                            page_size=16, prefill_chunk=16, pool_pages=64,
+                            mesh=mesh, prefix_cache=cached)
+        ttft = {}
+        for uid, p in enumerate(prompts):
+            t0 = time.perf_counter()
+            eng.submit(Request(uid=uid, prompt=p.copy(),
+                               max_new_tokens=mnew))
+            for ev in eng.stream():     # runs this request to retirement
+                if (isinstance(ev, TokenEvent) and ev.uid == uid
+                        and ev.index == 0):
+                    ttft[uid] = time.perf_counter() - t0
+        toks = {r.uid: tuple(r.tokens) for r in eng.results}
+        steady = float(np.median([ttft[u] for u in range(2, n)]))
+        return dict(tokens=toks, ttft=ttft, steady_ttft_s=steady,
+                    prefill_tokens=eng.prefill_tokens,
+                    store=eng.prefix_store.stats())
+
+    cold = serve(cached=False)
+    warm = serve(cached=True)
+    st = warm["store"]
+    hit_rate = st["reused_pages"] / max(1, st["reused_pages"]
+                                        + st["registered_pages"])
+    same = cold["tokens"] == warm["tokens"]
+    faster = warm["steady_ttft_s"] < cold["steady_ttft_s"]
+    return dict(requests=n, system_tokens=sys_len, page_size=16,
+                prefill_chunk=16,
+                cross_request_hits=st["cross_request_hits"],
+                pages_reused=st["reused_pages"],
+                pages_prefilled=st["registered_pages"],
+                prefix_hit_rate=hit_rate,
+                prefill_tokens_cached=warm["prefill_tokens"],
+                prefill_tokens_cold=cold["prefill_tokens"],
+                steady_ttft_cached_s=warm["steady_ttft_s"],
+                steady_ttft_cold_s=cold["steady_ttft_s"],
+                ttft_speedup=cold["steady_ttft_s"] / warm["steady_ttft_s"],
+                tokens_match=same,
+                ok=(same and faster and st["cross_request_hits"] > 0
+                    and warm["prefill_tokens"] < cold["prefill_tokens"]))
+
+
 def run(families=None, impl=None, ppb=1, attn_hlo=False,
         shards: int = 1, sampling: bool = False, kv_dtype: str | None = None,
-        quant: bool = False, host_tier: bool = False) -> dict:
+        quant: bool = False, host_tier: bool = False,
+        prefix_trace: bool = False) -> dict:
     families = families or list(FAMILY_CFGS)
     mesh = None
     if shards > 1:
@@ -387,6 +459,10 @@ def run(families=None, impl=None, ppb=1, attn_hlo=False,
         result["host_tier"] = _tier_sweep(mesh=mesh)
         ok = ok and result["host_tier"]["ok"]
         result["ok"] = ok
+    if prefix_trace:
+        result["prefix"] = _prefix_sweep(mesh=mesh)
+        ok = ok and result["prefix"]["ok"]
+        result["ok"] = ok
     if sampling:
         cfg = cfg_of("dense")
         params = registry.get_family(cfg).init(jax.random.key(0), cfg)
@@ -431,6 +507,20 @@ def pretty(result: dict):
               f"{q['bf16_kv_mb']:.3f} MB -> int8 {q['int8_kv_mb']:.3f} MB "
               f"({q['bytes_ratio']:.3f}x, gate <= 0.55); tokens "
               f"{'==' if q['tokens_match'] else 'DIFFER'}")
+    p = result.get("prefix")
+    if p:
+        print(f"   prefix cache ({p['requests']} sequential requests, "
+              f"{p['system_tokens']}-token shared system prompt): "
+              f"hit rate {p['prefix_hit_rate']:.2f} "
+              f"({p['pages_reused']} pages reused / "
+              f"{p['pages_prefilled']} prefilled, "
+              f"{p['cross_request_hits']} cross-request hits); prompt "
+              f"tokens computed {p['prefill_tokens_cached']} vs cold "
+              f"{p['prefill_tokens_cold']}; steady TTFT "
+              f"{p['steady_ttft_cached_s']*1e3:.1f} ms vs cold "
+              f"{p['steady_ttft_cold_s']*1e3:.1f} ms "
+              f"({p['ttft_speedup']:.2f}x); tokens "
+              f"{'==' if p['tokens_match'] else 'DIFFER'}")
     t = result.get("host_tier")
     if t:
         print(f"   host tier (pool {t['pool_pages']} pages @ watermark "
@@ -493,9 +583,16 @@ if __name__ == "__main__":
                          "watermark pool with a DRAM cold bank, gated "
                          "on nonzero spill+restore traffic AND tokens "
                          "identical to an all-HBM run")
+    ap.add_argument("--prefix-trace", action="store_true",
+                    help="add the shared-system-prompt trace: N "
+                         "sequential requests with one system prompt "
+                         "through the persistent prefix store; gated on "
+                         "nonzero cross-request hits, fewer prompt "
+                         "tokens computed, steady-state TTFT below the "
+                         "cold run, AND identical greedy tokens")
     ap.add_argument("--json", nargs="?", const="BENCH_serve.json",
                     default=None, metavar="PATH",
-                    help="write machine-readable results (schema 4: "
+                    help="write machine-readable results (schema 5: "
                          "tokens/s, peak KV bytes per tier, kv_dtype, "
                          "shard topology, spill/prefetch counts, "
                          "sampling-mode sweep, attention HBM bytes "
@@ -512,7 +609,8 @@ if __name__ == "__main__":
         res = run(fams, impl=args.impl, ppb=args.ppb,
                   attn_hlo=bool(args.json), shards=args.shards,
                   sampling=args.sampling, kv_dtype=args.kv_dtype,
-                  quant=args.quant, host_tier=args.host_tier)
+                  quant=args.quant, host_tier=args.host_tier,
+                  prefix_trace=args.prefix_trace)
         pretty(res)
     finally:
         # write even when run() raises: the (partial) record is exactly

@@ -4,6 +4,12 @@ sharded serving.
 
     PYTHONPATH=src python examples/serve_lm.py [--devices N] [--stream]
         [--temperature T] [--top-k K] [--top-p P] [--seed S]
+        [--kv-dtype int8] [--host-tier-pages N] [--prefix-cache]
+
+`--prefix-cache` turns on the PERSISTENT cross-request prefix store
+(serve/prefix_store.py): after the batch loop the same request stream
+reruns against the retained prompt pages and the example prints the
+cross-request hit and eviction counts.
 
 `--stream` demonstrates the public API (`repro.serve.LLMServer`):
 `generate(prompt, SamplingParams(...))` returns a `GenerationStream`
@@ -82,7 +88,8 @@ def demo_stream(cfg, params, sp, seed: int, mesh=None):
 
 def main(devices: int = 1, stream: bool = False, temperature: float = 0.0,
          top_k: int = 0, top_p: float = 1.0, seed: int = 0,
-         kv_dtype: str | None = None, host_tier_pages: int | None = None):
+         kv_dtype: str | None = None, host_tier_pages: int | None = None,
+         prefix_cache: bool = False):
     import numpy as np
     import jax
 
@@ -113,7 +120,8 @@ def main(devices: int = 1, stream: bool = False, temperature: float = 0.0,
 
     engine = ServingEngine(cfg, params, max_batch=4, max_seq=128,
                            page_size=16, mesh=mesh,
-                           host_tier_pages=host_tier_pages)
+                           host_tier_pages=host_tier_pages,
+                           prefix_cache=prefix_cache)
     rng = np.random.default_rng(seed)
     for uid in range(12):
         plen = int(rng.integers(4, 80))
@@ -147,6 +155,26 @@ def main(devices: int = 1, stream: bool = False, temperature: float = 0.0,
         ht = engine.stats()["host_tier"]
         print(f"host tier: {ht['spills']} spills / {ht['restores']} "
               f"restores ({ht['peak_bytes'] / 1e6:.2f} MB peak resident)")
+    if prefix_cache:
+        # resubmit the SAME stream: with the persistent cache the prompt
+        # pages of wave 1 are still resident, so wave 2 adopts them
+        rng = np.random.default_rng(seed)
+        for uid in range(12):
+            plen = int(rng.integers(4, 80))
+            engine.submit(Request(
+                uid=100 + uid,
+                prompt=rng.integers(0, cfg.vocab_size,
+                                    plen).astype(np.int32),
+                sampling=SamplingParams(
+                    temperature=temperature, top_k=top_k, top_p=top_p,
+                    seed=seed + uid,
+                    max_new_tokens=int(rng.integers(4, 16)))))
+        engine.run()
+        ps = engine.stats()["prefix_store"]
+        print(f"prefix store: wave-2 rerun reused {ps['reused_pages']} "
+              f"pages ({ps['cross_request_hits']} cross-request hits, "
+              f"{ps['entries']} entries resident, "
+              f"{ps['evictions']} evicted)")
 
     # --- prefix sharing: same 64-token prompt, pages reused on device
     prompt = rng.integers(0, cfg.vocab_size, 64).astype(np.int32)
@@ -203,6 +231,10 @@ if __name__ == "__main__":
                     help="enable the host-DRAM cold tier with this many "
                          "pages: preempted sequences spill there and "
                          "restore on readmission instead of recomputing")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="persistent cross-request prefix cache: prompt "
+                         "pages survive retirement and a rerun of the "
+                         "same stream adopts them instead of prefilling")
     args = ap.parse_args()
     if args.devices > 1:
         # host-platform shim: must land before jax initializes, which is
@@ -212,4 +244,5 @@ if __name__ == "__main__":
             + f" --xla_force_host_platform_device_count={args.devices}")
     main(args.devices, stream=args.stream, temperature=args.temperature,
          top_k=args.top_k, top_p=args.top_p, seed=args.seed,
-         kv_dtype=args.kv_dtype, host_tier_pages=args.host_tier_pages)
+         kv_dtype=args.kv_dtype, host_tier_pages=args.host_tier_pages,
+         prefix_cache=args.prefix_cache)

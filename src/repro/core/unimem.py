@@ -100,6 +100,14 @@ class PoolStats:
     shared_pages: int
     utilization: float
     peak_allocated_pages: int = 0
+    # pages held ONLY by the persistent prefix cache (refcount-0 store
+    # entries): allocated but idle — reclaimable by LRU eviction, never
+    # by slot preemption
+    pinned_pages: int = 0
+    # high-water mark of allocated MINUS pinned pages: the memory the
+    # live working set actually required (cache-resident pages are
+    # evictable on demand, so they are capacity spent, not needed)
+    peak_hot_pages: int = 0
 
 
 @dataclass
@@ -115,6 +123,8 @@ class UniMemPool:
         self._free = list(range(self.num_pages - 1, -1, -1))
         self._refcount = {}
         self._peak = 0
+        self._pinned: set[int] = set()  # cache-resident, refcount-0 pages
+        self._peak_hot = 0              # high-water mark of allocated-pinned
 
     # ------------------------------------------------------------- alloc
 
@@ -131,8 +141,13 @@ class UniMemPool:
         pages = [self._free.pop() for _ in range(n)]
         for p in pages:
             self._refcount[p] = 1
-        self._peak = max(self._peak, self.num_pages - len(self._free))
+        self._note_peak()
         return pages
+
+    def _note_peak(self) -> None:
+        alloc = self.num_pages - len(self._free)
+        self._peak = max(self._peak, alloc)
+        self._peak_hot = max(self._peak_hot, alloc - len(self._pinned))
 
     def fits(self, start: int, n: int) -> bool:
         """Would `alloc(n, start)` succeed right now?  (Admission check —
@@ -155,16 +170,50 @@ class UniMemPool:
             if rc is None:
                 raise KeyError(f"double free of page {p}")
             if rc == 1:
+                if p in self._pinned:
+                    raise RuntimeError(
+                        f"freeing pinned page {p}: cache-resident pages must "
+                        f"be unpinned (evicted from the prefix store) before "
+                        f"their last reference drops")
                 del self._refcount[p]
                 self._free.append(p)
             else:
                 self._refcount[p] = rc - 1
+
+    # ----------------------------------------------------------- pinning
+    #
+    # A pinned page is allocated but IDLE: it is held only by the
+    # persistent prefix cache (refcount-0 store entry), so `fits()` sees
+    # it as occupied (not free) while the scheduler treats it as
+    # reclaimable headroom — LRU cache eviction, never slot preemption,
+    # is what turns it back into a free page.
+
+    def pin(self, page: int) -> None:
+        if page not in self._refcount:
+            raise KeyError(f"page {page} is not allocated")
+        self._pinned.add(page)
+
+    def unpin(self, page: int) -> None:
+        self._pinned.discard(page)
+        self._note_peak()
+
+    def is_pinned(self, page: int) -> bool:
+        return page in self._pinned
+
+    @property
+    def pinned_pages(self) -> int:
+        return len(self._pinned)
 
     def is_shared(self, page: int) -> bool:
         return self._refcount.get(page, 0) > 1
 
     def is_allocated(self, page: int) -> bool:
         return page in self._refcount
+
+    def shard_of(self, page: int) -> int:
+        """Physical owner bank — a single pool is one bank (the sharded
+        pool overrides with its blocked id layout)."""
+        return 0
 
     # ------------------------------------------------------------- stats
 
@@ -188,6 +237,8 @@ class UniMemPool:
             shared_pages=shared,
             utilization=alloc / self.num_pages if self.num_pages else 0.0,
             peak_allocated_pages=self._peak,
+            pinned_pages=len(self._pinned),
+            peak_hot_pages=self._peak_hot,
         )
 
 
@@ -291,14 +342,20 @@ class ShardedUniMemPool(UniMemPool):
             self._shard_peak[s] = max(self._shard_peak[s],
                                       self.pages_per_shard
                                       - self._free_counts[s])
-        self._peak = max(self._peak, self.num_pages - len(self._free))
+        self._note_peak()
         return pages
 
     def shard_stats(self) -> list[dict]:
-        """Per-shard (free, allocated, peak) page counts."""
+        """Per-shard (free, allocated, pinned, peak) page counts.  Pinned
+        pages count as allocated (they occupy their bank) but the engine's
+        watermark paths read them as reclaimable-by-eviction headroom."""
         free = self._shard_free()
+        pinned = [0] * self.num_shards
+        for p in self._pinned:
+            pinned[self.shard_of(p)] += 1
         return [dict(shard=s, free_pages=free[s],
                      allocated_pages=self.pages_per_shard - free[s],
+                     pinned_pages=pinned[s],
                      peak_allocated_pages=self._shard_peak[s])
                 for s in range(self.num_shards)]
 

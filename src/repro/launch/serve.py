@@ -3,7 +3,8 @@
     PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
         --reduced --requests 16 --max-new 24 [--layout paged|contiguous] \
         [--shards N] [--temperature T --top-k K --top-p P --sample-seed S] \
-        [--kv-dtype int8] [--host-tier-pages N --high-watermark F]
+        [--kv-dtype int8] [--host-tier-pages N --high-watermark F] \
+        [--prefix-cache --shared-prefix 64]
 
 Sampling flags build per-request `SamplingParams` (serve/sampling.py)
 executed INSIDE the jitted step — each request gets its own seed
@@ -78,6 +79,16 @@ def main(argv=None):
     ap.add_argument("--high-watermark", type=float, default=None,
                     help="pool fraction above which the engine "
                          "proactively preempts youngest slots")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="keep full prompt pages alive after their "
+                         "request retires (serve/prefix_store.py): later "
+                         "requests sharing the prefix adopt the cached "
+                         "pages instead of re-prefilling; idle entries "
+                         "are evicted LRU under memory pressure")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend this many SHARED system-prompt tokens "
+                         "to every request (makes --prefix-cache hits "
+                         "visible in stats()['prefix_store'])")
     args = ap.parse_args(argv)
 
     spec = get_arch(args.arch)
@@ -112,11 +123,18 @@ def main(argv=None):
                            layout=args.layout,
                            prefill_chunk=args.prefill_chunk, mesh=mesh,
                            high_watermark=args.high_watermark,
-                           host_tier_pages=args.host_tier_pages)
+                           host_tier_pages=args.host_tier_pages,
+                           prefix_cache=args.prefix_cache)
     rng = np.random.default_rng(args.seed)
+    if args.shared_prefix >= budget:
+        raise SystemExit(f"--shared-prefix {args.shared_prefix} leaves no "
+                         f"room for a per-request tail (budget {budget})")
+    system = rng.integers(0, cfg.vocab_size,
+                          (args.shared_prefix,)).astype(np.int32)
     for i in range(args.requests):
-        plen = int(rng.integers(4, budget))
+        plen = int(rng.integers(4, budget - args.shared_prefix))
         prompt = rng.integers(0, cfg.vocab_size, (plen,)).astype(np.int32)
+        prompt = np.concatenate([system, prompt])
         pe = (rng.standard_normal((patches, cfg.frontend_dim))
               .astype(np.float32) if patches else None)
         engine.submit(Request(

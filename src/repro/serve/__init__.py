@@ -12,6 +12,9 @@ Architecture (one pooled memory, the paper's form):
     serve/sampling.py        SamplingParams -> per-slot SamplingState;
                              greedy/temperature/top-k/top-p compiled
                              into the step (tokens, not logits, leave)
+    serve/prefix_store.py    refcounted cross-request prefix cache:
+                             parent-linked hash chains, LRU eviction
+                             under the watermark, host-DRAM cold spill
     serve/engine.py          continuous batching: lazy allocation,
                              chunked prefill, prefix sharing, preemption,
                              the TokenEvent/FinishEvent stream
@@ -39,6 +42,7 @@ from repro.serve.serve_step import (
 from repro.serve.sampling import (
     SamplingParams, SamplingState, sample_tokens, state_for_slots,
     greedy_state)
+from repro.serve.prefix_store import PrefixStore, PrefixEntry
 from repro.serve.engine import (
     ServingEngine, Request, Result, TokenEvent, FinishEvent)
 from repro.serve.api import LLMServer, GenerationStream

@@ -99,6 +99,7 @@ from repro.core.unimem import (HostParcel, HostTier, SequencePageTable,
 from repro.models.config import ModelConfig
 from repro.models import registry
 from repro.serve.kv_cache import PagedKVArena, insert_slot, clear_slot
+from repro.serve.prefix_store import PrefixStore
 from repro.serve.sampling import (SamplingParams, state_for_slots,
                                   sample as sample_on_device)
 from repro.serve.serve_step import make_serve_fns, make_paged_serve_fns
@@ -190,6 +191,9 @@ class _Slot:
     prefill_pos: int = 0                     # prompt tokens already in pages
     shared_tokens: int = 0                   # of which reused from the prefix cache
     page_hashes: list[int] = field(default_factory=list)
+    # prefix-store hashes this slot holds a reference on (acquired at
+    # admission / absorb / self-registration, released at retire/preempt)
+    store_refs: set[int] = field(default_factory=set)
 
     @property
     def prefilling(self) -> bool:
@@ -224,7 +228,8 @@ class ServingEngine:
                  mesh=None, high_watermark: float | None = None,
                  prefill_decode_ratio: float | None = None,
                  tick_token_budget: int | None = None,
-                 host_tier_pages: int | None = None):
+                 host_tier_pages: int | None = None,
+                 prefix_cache: bool = False):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -307,9 +312,6 @@ class ServingEngine:
             # skipped tokens' state would not exist for the new slot
             self._slot_state = self.arena.state_bytes > 0
             self.cache = None
-            # page-content hash -> physical page id (prompt prefix reuse)
-            self._prefix_cache: dict[int, int] = {}
-            self._page_hash: dict[int, int] = {}
             # host-DRAM cold tier: preempted slots spill their written KV
             # pages here instead of burning a full recompute on
             # readmission (families with per-slot recurrent state keep
@@ -317,11 +319,22 @@ class ServingEngine:
             # into a different slot)
             self.host_tier = (HostTier(host_tier_pages)
                               if host_tier_pages else None)
+            # refcounted prompt-page cache keyed by chained content
+            # hashes (DESIGN.md §8).  persistent=True keeps entries
+            # alive at refcount 0 — pinned in the pool, reclaimed by LRU
+            # eviction under the watermark/OOM shed paths — so a request
+            # can hit the prefix of a donor that retired long ago;
+            # persistent=False (default) reproduces the legacy
+            # donor-lifetime semantics through the same store.
+            self.prefix_store = PrefixStore(
+                self.pool, persistent=prefix_cache, arena=self.arena,
+                host_tier=self.host_tier)
             # uid -> (parcel, device-resident copy of its page data);
             # filled by the async head-of-queue prefetch in step()
             self._prefetched: dict[int, tuple] = {}
         else:
             self.host_tier = None
+            self.prefix_store = None
             self._prefetched = {}
             self.arena = None
             self.cache = fam.init_cache(cfg, max_batch, max_seq)
@@ -337,6 +350,7 @@ class ServingEngine:
         self.results: list[Result] = []
         self.steps = 0
         self.tokens_out = 0
+        self.prefill_tokens = 0          # prompt tokens actually computed
         self._admitted = 0
         self._events: deque = deque()
         self._emitted: dict[int, int] = {}       # uid -> tokens published
@@ -467,23 +481,37 @@ class ServingEngine:
         return zlib.crc32(head) % n
 
     def _match_prefix(self, req: Request) -> tuple[list[int], list[int],
+                                                   list[int], int | None,
                                                    list[int]]:
         """Longest run of shareable full pages for this prompt, capped so
         at least one prompt position is always re-prefilled (it produces
-        the first-token logits).  Returns (written, adopted, hashes):
-        `written` pages hold published K/V the new sequence can skip;
-        `adopted` pages extend the run with pages a PREFILLING slot has
-        allocated for identical content — not yet (fully) written, so
-        the new sequence still prefills through them, but both rows
-        write the same values into the same physical pages (batched
-        co-prefill is pure memory dedup; once the leader publishes a
-        page the follower's `_absorb_shared` skips the recompute)."""
+        the first-token logits).  Returns (written, adopted, hashes,
+        rot_hint, store_hashes): `written` pages hold published K/V the
+        new sequence can skip; `adopted` pages extend the run with pages
+        a PREFILLING slot has allocated for identical content — not yet
+        (fully) written, so the new sequence still prefills through
+        them, but both rows write the same values into the same physical
+        pages (batched co-prefill is pure memory dedup; once the leader
+        publishes a page the follower's `_absorb_shared` skips the
+        recompute).  Store matches may come from retired donors
+        (persistent cache) and even from cold host-tier parcels restored
+        on the spot; `rot_hint` is the donor's shard rotation the
+        follower must adopt, and `store_hashes` names the matched
+        entries the admitting slot must acquire references on."""
         hashes = self._page_hashes(req)
         limit = (req.virtual_len - 1) // self.page_size
-        written, adopted = [], []
+        written, adopted, store_hashes = [], [], []
+        rot_hint = None
+        store = self.prefix_store
         for i, h in enumerate(hashes[:limit]):
-            page = self._prefix_cache.get(h)
-            if page is not None and self.pool.is_allocated(page):
+            page = store.page_of(h)
+            if page is None and not adopted and not self._slot_state:
+                # device miss: a cold copy may still sit in the host tier
+                page = store.restore_cold(h, i)
+            if page is not None:
+                if rot_hint is None:
+                    rot_hint = store.rotation_of(h)
+                store_hashes.append(h)
                 # per-slot-state families (hybrid) must recompute every
                 # prompt token — published pages are adopted, not skipped
                 if not adopted and not self._slot_state:
@@ -498,19 +526,30 @@ class ServingEngine:
             if page is None:
                 break
             adopted.append(page)
-        return written, adopted, hashes
+        return written, adopted, hashes, rot_hint, store_hashes
 
     def _register_prefix(self, slot: _Slot):
         """Publish the slot's prompt pages for future sharing — only the
         pages whose K/V the prefill has fully WRITTEN (registering at
         admission would let a second request attend to still-empty
-        pages)."""
+        pages).  The store takes its own pool reference per entry and
+        the slot acquires one for itself, so refcounts stay the
+        number-of-live-tables invariant the law battery pins."""
+        store = self.prefix_store
         full = min(slot.request.virtual_len, slot.prefill_pos) // self.page_size
         for i, h in enumerate(slot.page_hashes[:full]):
-            if h not in self._prefix_cache:
-                page = slot.pages.pages[i]
-                self._prefix_cache[h] = page
-                self._page_hash[page] = h
+            if i >= len(slot.pages.pages):
+                break
+            mine = slot.pages.pages[i]
+            page = store.page_of(h)
+            if page is None:
+                parent = slot.page_hashes[i - 1] if i else None
+                store.register(h, mine, parent=parent, index=i,
+                               rotation=slot.pages.rotation)
+                page = mine
+            if page == mine and h not in slot.store_refs:
+                store.acquire(h)
+                slot.store_refs.add(h)
 
     def _absorb_shared(self, s: _Slot):
         """Late-binding prefix sharing: a slot that was admitted before a
@@ -522,37 +561,87 @@ class ServingEngine:
         if self._slot_state:
             return
         ps = self.page_size
+        store = self.prefix_store
         limit = (s.request.virtual_len - 1) // ps
         while s.prefill_pos % ps == 0:
             i = s.prefill_pos // ps
             if i >= limit or i >= len(s.page_hashes) \
                     or i >= len(s.pages.pages):
                 break
-            page = self._prefix_cache.get(s.page_hashes[i])
-            if page is None or not self.pool.is_allocated(page):
+            h = s.page_hashes[i]
+            page = store.page_of(h)
+            if page is None:
                 break
             if page == s.pages.pages[i]:
                 # co-prefill adoption: the page is already ours and the
                 # donor has now fully written it — skip the recompute,
-                # keep the ref we took at admission
+                # keep the pool ref we took at admission, and take a
+                # store ref now that we lean on the published entry
+                if h not in s.store_refs:
+                    store.acquire(h, reuse=True)
+                    s.store_refs.add(h)
                 s.prefill_pos += ps
                 s.shared_tokens += ps
                 continue
             self.pool.share([page])
             self.pool.free([s.pages.pages[i]])   # ours was never written
             s.pages.pages[i] = page
+            store.acquire(h, reuse=True)
+            s.store_refs.add(h)
             s.prefill_pos += ps
             s.shared_tokens += ps
 
+    def _drop_store_refs(self, s: _Slot) -> None:
+        """The slot's table is going away: release its prefix-store
+        references.  Persistent entries outlive the slot (pinned idle at
+        refcount 0, LRU-evictable); transient entries die with the last
+        referencing slot — the legacy lifetime, one code path."""
+        for h in s.store_refs:
+            self.prefix_store.release(h)
+        s.store_refs.clear()
+
     def _release_pages(self, seq: SequencePageTable):
-        """Free a table and purge prefix-cache entries whose page died."""
-        pages = list(seq.pages)
+        """Free a table.  Prefix-store entries hold their own pool
+        reference, so registered pages can never dangle behind the
+        store's back — a dying table just drops its refs and the
+        hash<->page maps stay consistent by construction (the stale
+        `_page_hash` bug of the flat-dict cache is structurally gone;
+        tests/test_prefix_store.py pins the invariant)."""
         seq.release()
-        for p in pages:
-            if not self.pool.is_allocated(p):
-                h = self._page_hash.pop(p, None)
-                if h is not None and self._prefix_cache.get(h) == p:
-                    del self._prefix_cache[h]
+
+    # ---------------------------------------------------- cache reclaim
+
+    def _reclaim_idle(self, need: int = 1, start: int | None = None,
+                      protect: set[int] | None = None) -> int:
+        """LRU-evict idle (refcount-0) prefix-store pages to make room —
+        the watermark/OOM shed paths try this BEFORE preempting live
+        slots, because dropping cached prefixes costs a future
+        re-prefill while preemption costs a present one.  `start` aims
+        eviction at the banks a strided alloc at that logical index
+        would demand (sharded pools); a pool-wide pass backstops it.
+        Returns pages actually freed."""
+        store = self.prefix_store
+        if store is None or not len(store):
+            return 0
+        shards = None
+        n = getattr(self.pool, "num_shards", 1)
+        if start is not None and n > 1:
+            shards = {(start + k) % n for k in range(min(need, n))}
+        freed = store.evict(need, shards=shards, protect=protect)
+        if freed < need and shards is not None:
+            freed += store.evict(need - freed, protect=protect)
+        return freed
+
+    def _fits_or_reclaim(self, start: int, need: int,
+                         protect: set[int] | None = None) -> bool:
+        """`pool.fits`, with idle cache pages counted as reclaimable
+        headroom: evict-and-retry until the alloc fits or the idle set
+        is dry (matched entries in `protect` are never victims — their
+        pages are about to be adopted)."""
+        while not self.pool.fits(start, need):
+            if not self._reclaim_idle(need, start, protect=protect):
+                return False
+        return True
 
     # ------------------------------------------------------------- admit
 
@@ -584,8 +673,14 @@ class ServingEngine:
                 # admission (replay pinned at preemption still replays
                 # the already-published tokens)
             plen = req.virtual_len
-            written, adopted, hashes = self._match_prefix(req)
-            rot = self._rotation_of(req)
+            written, adopted, hashes, rot_hint, store_hashes = \
+                self._match_prefix(req)
+            # a store hit binds the follower to the DONOR's shard
+            # rotation: the cached pages live on the donor's banks, and
+            # the jitted walk recovers rotation from the first block
+            # table column — content-derived hashing makes the two
+            # values equal, the adoption makes the invariant structural
+            rot = rot_hint if rot_hint is not None else self._rotation_of(req)
             shared_tokens = len(written) * self.page_size
             # adopted pages are held but still prefilled through (their
             # content lands when this row — or the co-prefilling donor —
@@ -594,18 +689,22 @@ class ServingEngine:
             first = min(self.prefill_chunk, plen - held)
             need = (self.pool.pages_for(held + first)
                     - len(written) - len(adopted))
-            if not self.pool.fits(rot + len(written) + len(adopted), need):
+            if not self._fits_or_reclaim(rot + len(written) + len(adopted),
+                                         need, protect=set(store_hashes)):
                 break                            # UniMem backpressure
             self.pending.pop(0)
             slot = free.pop(0)
             if written or adopted:
                 self.pool.share(written + adopted)
+            for h in store_hashes:
+                self.prefix_store.acquire(h, reuse=True)
             seq = SequencePageTable(self.pool, written + adopted, held,
                                     rotation=rot)
             seq.append_tokens(first)
             s = _Slot(request=req, pages=seq, admitted_at=time.perf_counter(),
                       order=self._admitted, prefill_pos=shared_tokens,
-                      shared_tokens=shared_tokens, page_hashes=hashes)
+                      shared_tokens=shared_tokens, page_hashes=hashes,
+                      store_refs=set(store_hashes))
             self._admitted += 1
             self.slots[slot] = s
             self._register_prefix(s)    # shared pages are already written
@@ -626,6 +725,7 @@ class ServingEngine:
             if req.patch_embeds is not None:
                 batch["patch_embeds"] = jnp.asarray(req.patch_embeds)[None]
             one_cache, logits = self.prefill_fn(self.params, batch, one_cache)
+            self.prefill_tokens += req.virtual_len
             self.cache = insert_slot(self.cache, one_cache, slot, self.cache_ax)
             s = _Slot(request=req, pages=pages,
                       admitted_at=time.perf_counter(), order=self._admitted,
@@ -737,6 +837,7 @@ class ServingEngine:
             jnp.asarray(start), jnp.asarray(clen),
             self._sampling_state(dict(pre)))
         self.prefill_shapes.add((b, c))
+        self.prefill_tokens += int(clen.sum())
         first = np.asarray(first)
         for i, s in pre:
             s.prefill_pos += int(clen[i])
@@ -763,6 +864,10 @@ class ServingEngine:
                 fn()
                 return True
             except UniMemOOM:
+                # idle cached prefixes go first: reclaiming them costs a
+                # future re-prefill, preempting a live slot costs one now
+                if self._reclaim_idle():
+                    continue
                 if self._preempt_youngest(but=s):
                     continue
                 if len(self.slots) > 1:          # yield to the elders
@@ -790,6 +895,7 @@ class ServingEngine:
         if len(victim.generated) > len(victim.request.replay or ()):
             victim.request.replay = list(victim.generated)
         self._spill_slot(victim)                 # host tier, if enabled
+        self._drop_store_refs(victim)
         self._release_pages(victim.pages)
         del self.slots[idx]
         self.pending.insert(0, victim.request)
@@ -851,12 +957,16 @@ class ServingEngine:
         rot = parcel.meta["rotation"]
         npages = parcel.num_pages
         # thrash guard: restoring straight past the shedder's limit
-        # would preempt (and re-spill) somebody next tick
+        # would preempt (and re-spill) somebody next tick.  Pinned-but-
+        # idle cache pages do not count against the limit — they are
+        # reclaimable headroom, evicted (not preempted) on demand.
         if self.high_watermark is not None and self.slots:
             limit = int(self.high_watermark * self.pool.num_pages)
-            if (self.pool.num_pages - self.pool.free_pages) + npages > limit:
+            hot = (self.pool.num_pages - self.pool.free_pages
+                   - self.pool.pinned_pages)
+            if hot + npages > limit:
                 return "wait"
-        if not self.pool.fits(rot, npages):
+        if not self._fits_or_reclaim(rot, npages):
             if self.slots:
                 return "wait"
             tier.take(req.uid)          # pool genuinely too small
@@ -981,6 +1091,7 @@ class ServingEngine:
                                             result=result))
             self._emitted.pop(s.request.uid, None)
             if self.layout == "paged":
+                self._drop_store_refs(s)
                 self._release_pages(s.pages)
             else:
                 s.pages.release()               # pages back to the one pool
@@ -995,8 +1106,17 @@ class ServingEngine:
         if self.high_watermark is None or self.layout != "paged":
             return
         limit = int(self.high_watermark * self.pool.num_pages)
-        while (self.pool.num_pages - self.pool.free_pages) > limit \
-                and len(self.slots) > 1:
+
+        def over():
+            return (self.pool.num_pages - self.pool.free_pages) > limit
+
+        # idle cache pages shed first — this is the LRU-under-watermark
+        # reclaim of the persistent prefix store (cheapest memory to
+        # give back: no live slot loses work, the cost is a possible
+        # future re-prefill, softened by the host-tier cold spill)
+        while over() and self._reclaim_idle():
+            pass
+        while over() and len(self.slots) > 1:
             oldest = min(self.slots.values(), key=lambda s: s.order)
             if not self._preempt_youngest(but=oldest):
                 break
@@ -1065,7 +1185,13 @@ class ServingEngine:
                       last_token=src.last_token,
                       admitted_at=time.perf_counter(), order=self._admitted,
                       prefill_pos=child_req.virtual_len,
-                      shared_tokens=src.pages.num_tokens)
+                      shared_tokens=src.pages.num_tokens,
+                      store_refs=set(src.store_refs))
+        # the child's table references the same registered prefix pages
+        # as the parent — it takes its own store refs so eviction
+        # accounting keeps seeing one reference per live table
+        for h in child.store_refs:
+            self.prefix_store.acquire(h)
         self._admitted += 1
         # inherited tokens were the parent's — the child's stream starts
         # at the fork point
@@ -1092,6 +1218,7 @@ class ServingEngine:
             "layout": self.layout,
             "steps": self.steps,
             "tokens_out": self.tokens_out,
+            "prefill_tokens": self.prefill_tokens,
             "active_slots": len(self.slots),
             "pending": len(self.pending),
             "peak_kv_bytes": self.peak_kv_bytes(),
@@ -1100,6 +1227,8 @@ class ServingEngine:
             "prefill_decode_ratio": self.prefill_decode_ratio,
             "pool": self.pool.stats().__dict__,
         }
+        if self.prefix_store is not None:       # prompt-page reuse traffic
+            out["prefix_store"] = self.prefix_store.stats()
         if self.mesh is not None:               # near-memory sharded arena
             out["shards"] = self.pool.shard_stats()
             out["shard_kv_bytes"] = self.arena.shard_kv_bytes()

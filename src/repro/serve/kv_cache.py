@@ -168,6 +168,13 @@ class PagedKVArena:
         return {name: np.asarray(jax.device_get(a[:, idx]))
                 for name, a in self.kv.items() if is_page_leaf(name)}
 
+    def read_page(self, page: int) -> dict:
+        """Single-page spill payload: leaf name -> (L, ...) host array,
+        the exact shape `write_page` takes back.  The prefix store's
+        cold-tier parcels ride this pair (one page per parcel), the
+        per-sequence spill path batches `read_pages` instead."""
+        return {name: a[:, 0] for name, a in self.read_pages([page]).items()}
+
     def write_page(self, page: int, data: dict) -> None:
         """Write one page's leaves back into the arena (the restore
         path).  `data` maps leaf name -> (L, ...) single-page payload —

@@ -37,7 +37,16 @@ from repro.serve.kv_cache import STATE_SLOT_AXIS, PagedKVArena
 class ShardedPagedKVArena(PagedKVArena):
     """PagedKVArena whose page banks live one-per-device on `mesh`'s
     "mem" axis.  `num_pages` is the GLOBAL pool size (must divide over
-    the axis); the device arrays carry one extra null slot PER SHARD."""
+    the axis); the device arrays carry one extra null slot PER SHARD.
+
+    Pages never migrate between banks — this includes persistent
+    prefix-cache pages, which keep the bank (and hence the shard
+    rotation) of the request that originally wrote them even after that
+    request retires.  A follower hitting the cache therefore ADOPTS the
+    donor's rotation (engine `_match_prefix`), so the jitted walk's
+    rotation recovery from `block_table[:, 0] // pps` stays exact, and
+    a cold page restored from the host tier reallocates at its original
+    `rotation + index` stride to land back on the same bank."""
     mesh: Mesh = None
     _copy_page_jit: object = field(default=None, repr=False, compare=False)
     _copy_state_jit: object = field(default=None, repr=False, compare=False)

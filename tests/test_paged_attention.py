@@ -542,14 +542,16 @@ def test_engine_walk_fork_preempt_retire_drains_pool():
             if len(eng.slots) < eng.max_batch:
                 eng.fork(0, new_uid=3)
                 forked = True
-        # prefix cache must never point at freed (or re-purposed) pages
-        for h, page in eng._prefix_cache.items():
+        # prefix store must never point at freed (or re-purposed) pages
+        store = eng.prefix_store
+        for h in list(store._entries):
+            page = store.page_of(h)
             assert eng.pool.is_allocated(page)
-            assert eng._page_hash.get(page) == h
+            assert store.hash_of(page) == h
     uids = sorted(r.uid for r in eng.results)
     assert set(uids) >= {0, 1, 2}
     assert eng.pool.stats().allocated_pages == 0
-    assert not eng._prefix_cache and not eng._page_hash
+    assert len(eng.prefix_store) == 0 and not eng.prefix_store._by_page
 
 
 def test_arena_null_page_is_never_allocated():

@@ -1,0 +1,622 @@
+"""Law battery for the persistent cross-request prefix cache (PR 7).
+
+Model level (no jax): an exhaustive 5^6 walk over the allocator moves
+the engine makes against the store — admit (with store hits and
+cold-tier restores), retire, fork, preempt, evict — asserting after
+EVERY op the four cache laws: a page is never simultaneously
+free-listed and cache-resident; store refcounts equal the number of
+live referencing tables; eviction never touches a refcount>0 entry;
+and re-registering a hash to a new page leaves no stale reverse-map
+entry (the flat-dict purge bug this store replaces).
+
+Engine level: a randomized submit/fork/step walk on a real tiny engine
+re-checking the same laws against live slots, then the byte-identity
+parity matrix — cache on/off x {dense, moe, hybrid, vlm} x kv_dtype
+{bf16, int8}, donor fully retired before the followers arrive — plus
+hit-from-host-tier, organic watermark eviction, and fork interaction.
+Subprocess (8 forced host devices): sharded parity, rotation adoption
+and per-bank pinned accounting.
+"""
+from __future__ import annotations
+
+import itertools
+import os
+import subprocess
+import sys
+import textwrap
+from collections import Counter
+
+import numpy as np
+import pytest
+import jax
+
+from repro.core.unimem import (HostTier, ShardedUniMemPool, UniMemOOM,
+                               UniMemPool)
+from repro.models import registry
+from repro.serve.engine import Request, ServingEngine
+from repro.serve.prefix_store import PrefixStore
+
+from conftest import TINY
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_with_devices(body: str, n: int = 8, timeout: int = 560) -> str:
+    code = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n}"
+        import sys
+        sys.path.insert(0, {os.path.join(REPO, "src")!r})
+        sys.path.insert(0, {os.path.join(REPO, "tests")!r})
+    """) + textwrap.dedent(body)
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, timeout=timeout, cwd=REPO)
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    return proc.stdout
+
+
+# ----------------------------------------------------- model-level walk
+
+class _ByteArena:
+    """Just enough of PagedKVArena for the store's cold spill path: one
+    payload cell per physical page, so the walk can assert restored
+    bytes are the bytes that were spilled."""
+
+    def __init__(self):
+        self.mem: dict[int, int] = {}
+
+    def read_page(self, page):
+        return {"k": self.mem[page]}
+
+    def write_page(self, page, data):
+        self.mem[page] = data["k"]
+
+
+def _store_laws(pool, store, tables):
+    """The invariants of DESIGN.md §8, checked against ground truth."""
+    free = set(pool._free)
+    resident = set(store._by_page)
+    # law 1: never simultaneously free-listed and cache-resident
+    assert not (free & resident), "page both free and cache-resident"
+    # hash<->page maps stay bijective (the stale-_page_hash law)
+    assert {e.page for e in store._entries.values()} == resident
+    for p, h in store._by_page.items():
+        assert store._entries[h].page == p
+    # law 2: store refcounts == number of live referencing tables
+    want = Counter(h for t in tables for h in t["refs"])
+    got = {h: e.refs for h, e in store._entries.items() if e.refs}
+    assert got == dict(want)
+    # pinned set == exactly the idle (refcount-0) entries
+    assert pool._pinned == {e.page for e in store._entries.values()
+                            if e.refs == 0}
+    # pool refcount conservation: table holds + one store ref per entry
+    held = Counter(p for t in tables for p in t["pages"])
+    for e in store._entries.values():
+        held[e.page] += 1
+    assert dict(held) == pool._refcount
+    # parent links: children counts match the resident chain structure
+    kids = Counter(e.parent for e in store._entries.values()
+                   if e.parent in store._entries)
+    for h, e in store._entries.items():
+        assert e.children == kids.get(h, 0)
+
+
+def _model_admit(pool, store, arena, tables, chain):
+    """The engine's admission against the store, in miniature: match the
+    chain head (device hit, else cold restore), then allocate + register
+    the tail, evicting idle pages under OOM — exactly the order
+    `_admit_paged`/`_register_prefix` use."""
+    n = getattr(pool, "num_shards", 1)
+    rot = chain[0] % n
+    pages, refs = [], []
+    matching = True
+    for i, h in enumerate(chain):
+        if matching:
+            p = store.page_of(h)
+            if p is None:
+                p = store.restore_cold(h, i)
+                if p is not None:
+                    assert arena.mem[p] == h    # bytes round-tripped
+            if p is not None:
+                pool.share([p])
+                store.acquire(h, reuse=True)
+                pages.append(p)
+                refs.append(h)
+                continue
+            matching = False
+        try:
+            p = pool.alloc(1, start=rot + i)[0]
+        except UniMemOOM:
+            if not store.evict(1):
+                break                            # genuine backpressure
+            try:
+                p = pool.alloc(1, start=rot + i)[0]
+            except UniMemOOM:
+                break
+        arena.mem[p] = h                         # "prefill" writes content
+        store.register(h, p, parent=chain[i - 1] if i else None,
+                       index=i, rotation=rot)
+        store.acquire(h)
+        pages.append(p)
+        refs.append(h)
+    if pages:
+        tables.append(dict(pages=pages, refs=refs))
+
+
+def _model_release(pool, store, table):
+    for h in table["refs"]:
+        store.release(h)
+    pool.free(table["pages"])
+
+
+@pytest.mark.parametrize("persistent", [True, False])
+@pytest.mark.parametrize("sharded", [False, True])
+def test_store_exhaustive_walk_holds_cache_laws(persistent, sharded):
+    """Exhaustive walk over EVERY sequence of 6 ops from {admit, retire,
+    fork, preempt, evict} (restore-from-cold rides admit: evicted pages
+    spill to the host tier and later admits of the same chain pull them
+    back).  5^6 = 15625 deterministic sequences per pool/persistence
+    combination; the four cache laws hold in every reachable state and
+    draining always returns the pool to empty."""
+    OPS = ("admit", "retire", "fork", "preempt", "evict")
+    CHAINS = [(101, 102, 103), (101, 102, 204), (305, 306)]
+
+    def make():
+        pool = (ShardedUniMemPool(6, 1, num_shards=3) if sharded
+                else UniMemPool(6, 1))
+        arena = _ByteArena()
+        store = PrefixStore(pool, persistent=persistent, arena=arena,
+                            host_tier=HostTier(8))
+        return pool, store, arena
+
+    for seq in itertools.product(OPS, repeat=6):
+        pool, store, arena = make()
+        tables: list[dict] = []
+        for step, op in enumerate(seq):
+            if op == "admit":
+                _model_admit(pool, store, arena, tables,
+                             CHAINS[step % len(CHAINS)])
+            elif op == "retire" and tables:
+                _model_release(pool, store, tables.pop(step % len(tables)))
+            elif op == "preempt" and tables:   # same reclaim, newest first
+                _model_release(pool, store, tables.pop())
+            elif op == "fork" and tables:
+                t = tables[step % len(tables)]
+                pool.share(t["pages"])
+                for h in t["refs"]:
+                    store.acquire(h)
+                tables.append(dict(pages=list(t["pages"]),
+                                   refs=list(t["refs"])))
+            elif op == "evict":
+                before = {h: e.refs for h, e in store._entries.items()}
+                store.evict(2)
+                for h, r in before.items():    # law 3: refs>0 untouched
+                    if r > 0:
+                        assert h in store._entries, seq
+            _store_laws(pool, store, tables)
+        while tables:
+            _model_release(pool, store, tables.pop())
+            _store_laws(pool, store, tables)
+        store.drop_all()
+        assert pool.free_pages == pool.num_pages, seq
+        assert not pool._refcount and not pool._pinned, seq
+
+
+# ------------------------------------------------- store unit contracts
+
+def test_reregistered_hash_leaves_no_stale_reverse_entry():
+    """The flat-dict purge bug, pinned as a regression: after a hash is
+    evicted and re-registered onto a NEW page, the old page id must
+    carry no reverse-map entry — recycling it through an unrelated
+    sequence can never orphan or clobber the live registration."""
+    H = 0xBEEF
+    pool = UniMemPool(4, 2)
+    store = PrefixStore(pool, persistent=True)
+    p1 = pool.alloc(1)[0]
+    store.register(H, p1, parent=None, index=0, rotation=0)
+    store.acquire(H)
+    store.release(H)                     # donor retires; entry idles
+    pool.free([p1])                      # donor's table ref
+    assert store.evict(1) == 1 and not pool.is_allocated(p1)
+    # same content returns on a DIFFERENT page (pool free list is LIFO,
+    # so park the recycled id under an unrelated allocation first)
+    blocker = pool.alloc(1)[0]
+    p2 = pool.alloc(1)[0]
+    if p2 == p1:
+        blocker, p2 = p2, blocker
+    assert p2 != p1
+    store.register(H, p2, parent=None, index=0, rotation=0)
+    assert store.page_of(H) == p2
+    assert store.hash_of(p2) == H and store.hash_of(p1) is None
+    # the old id cycles through an unrelated sequence and dies again:
+    # the registration must be untouched and the maps stay bijective
+    p3 = pool.alloc(1)[0]
+    pool.free([p3])
+    assert store.page_of(H) == p2
+    assert store._by_page == {p2: H}
+    # re-registration of a still-resident hash is a no-op returning the
+    # resident page, never a second entry
+    p4 = pool.alloc(1)[0]
+    assert store.register(H, p4, parent=None, index=0, rotation=0) == p2
+    assert len(store) == 1
+    pool.free([p4, blocker])
+
+
+def test_evict_is_lru_leaf_first_and_respects_protect():
+    pool = UniMemPool(8, 1)
+    store = PrefixStore(pool, persistent=True)
+    A, B, C = 1, 2, 3
+    pa, pb, pc = pool.alloc(3)
+    store.register(A, pa, parent=None, index=0, rotation=0)
+    store.register(B, pb, parent=A, index=1, rotation=0)
+    store.register(C, pc, parent=None, index=0, rotation=0)
+    pool.free([pa, pb, pc])              # tables gone; all idle
+    # A is LRU-oldest but has a child: the leaf B goes first
+    assert store.evict(1) == 1
+    assert A in store and C in store and B not in store
+    # now A is a leaf and older than C
+    assert store.evict(1) == 1
+    assert C in store and A not in store
+    # protect: the only candidate is shielded -> nothing freed
+    assert store.evict(1, protect={C}) == 0
+    assert C in store
+    assert store.evict(1) == 1 and len(store) == 0
+
+
+def test_evict_targets_requested_shards_first():
+    pool = ShardedUniMemPool(6, 1, num_shards=3)
+    store = PrefixStore(pool, persistent=True)
+    pages = {}
+    for i, h in enumerate((10, 11, 12)):     # one entry per bank
+        p = pool.alloc(1, start=i)[0]
+        store.register(h, p, parent=None, index=0, rotation=0)
+        pages[h] = p
+        pool.free([p])
+    assert store.evict(1, shards={pool.shard_of(pages[11])}) == 1
+    assert 11 not in store and 10 in store and 12 in store
+
+
+def test_cold_spill_restore_roundtrip_and_counters():
+    pool = UniMemPool(4, 1)
+    arena = _ByteArena()
+    tier = HostTier(4)
+    store = PrefixStore(pool, persistent=True, arena=arena, host_tier=tier)
+    H = 77
+    p = pool.alloc(1)[0]
+    arena.mem[p] = H
+    store.register(H, p, parent=None, index=0, rotation=0)
+    pool.free([p])
+    assert store.evict(1) == 1
+    assert store.cold_spills == 1 and len(store) == 0
+    assert not pool.is_allocated(p)
+    # restore pulls the parcel back into a fresh page, re-registered
+    q = store.restore_cold(H, 0)
+    assert q is not None and pool.is_allocated(q)
+    assert arena.mem[q] == H
+    assert store.page_of(H) == q and store.cold_restores == 1
+    assert tier.restores == 1
+    # the parcel was consumed; a second miss finds nothing
+    assert store.restore_cold(H + 1, 0) is None
+
+
+def test_pool_refuses_to_free_a_pinned_page():
+    pool = UniMemPool(2, 1)
+    p = pool.alloc(1)[0]
+    pool.pin(p)
+    with pytest.raises(RuntimeError):
+        pool.free([p])
+    assert pool.is_allocated(p)          # the guard fired before mutation
+    pool.unpin(p)
+    pool.free([p])
+    assert pool.free_pages == 2
+
+
+def test_pinned_and_peak_hot_accounting():
+    pool = ShardedUniMemPool(8, 1, num_shards=2)
+    a = pool.alloc(4, start=0)
+    for p in a[:2]:
+        pool.pin(p)
+    st = pool.stats()
+    assert st.pinned_pages == 2 and st.allocated_pages == 4
+    # hot peak tracks allocated-minus-pinned, not raw allocation
+    assert st.peak_hot_pages <= st.peak_allocated_pages
+    ss = pool.shard_stats()
+    assert sum(d["pinned_pages"] for d in ss) == 2
+    for p in a[:2]:
+        pool.unpin(p)
+    pool.free(a)
+
+
+# ------------------------------------------------- engine-level walk
+
+def _params(cfg):
+    return registry.get_family(cfg).init(jax.random.key(0), cfg)
+
+
+def _engine_laws(eng):
+    pool, store = eng.pool, eng.prefix_store
+    assert not (set(pool._free) & set(store._by_page))
+    assert {e.page for e in store._entries.values()} == set(store._by_page)
+    for p, h in store._by_page.items():
+        assert store._entries[h].page == p
+    want = Counter(h for s in eng.slots.values() for h in s.store_refs)
+    got = {h: e.refs for h, e in store._entries.items() if e.refs}
+    assert got == dict(want)
+    assert pool._pinned == {e.page for e in store._entries.values()
+                            if e.refs == 0}
+
+
+def test_engine_randomized_walk_holds_store_laws():
+    """Submit/fork/step churn on a real engine with the persistent cache
+    under pool pressure (watermark + host tier live): the store laws
+    hold after every tick, the drained pool holds exactly the pinned
+    cache pages, and every non-forked request's tokens are identical to
+    a cache-off oracle."""
+    cfg = TINY["dense"]
+    params = _params(cfg)
+    rng = np.random.default_rng(11)
+    system = rng.integers(1, cfg.vocab_size - 1, 16)
+    prompts = {}
+    for uid in range(8):
+        tail = rng.integers(1, cfg.vocab_size - 1, 4)
+        prompts[uid] = np.concatenate([system, tail]).astype(np.int32)
+
+    eng = ServingEngine(cfg, params, max_batch=3, max_seq=64, page_size=8,
+                        pool_pages=14, prefix_cache=True,
+                        high_watermark=0.85, host_tier_pages=16)
+    submitted, forked = 0, 0
+    for step in range(400):
+        r = rng.random()
+        if r < 0.3 and submitted < len(prompts):
+            eng.submit(Request(uid=submitted,
+                               prompt=prompts[submitted].copy(),
+                               max_new_tokens=5))
+            submitted += 1
+        elif r < 0.38 and forked < 2 and len(eng.slots) < eng.max_batch:
+            cand = [s.request.uid for s in eng.slots.values()
+                    if not s.prefilling and s.generated
+                    and s.request.uid < 100]
+            if cand:
+                eng.fork(cand[0], new_uid=100 + forked)
+                forked += 1
+        eng.step()
+        _engine_laws(eng)
+        if submitted == len(prompts) and not eng.pending and not eng.slots:
+            break
+    assert submitted == len(prompts) and not eng.slots and not eng.pending
+    got = {r.uid: tuple(r.tokens) for r in eng.results if r.uid < 100}
+    assert set(got) == set(prompts)
+
+    # the persistent store retained idle entries past full drain, and
+    # they are exactly what the pool still holds
+    st = eng.pool.stats()
+    assert len(eng.prefix_store) > 0
+    assert st.allocated_pages == st.pinned_pages == len(eng.prefix_store)
+
+    # oracle: same workload, cache off
+    ref = ServingEngine(cfg, params, max_batch=3, max_seq=64, page_size=8,
+                        pool_pages=14, high_watermark=0.85,
+                        host_tier_pages=16)
+    for uid, p in prompts.items():
+        ref.submit(Request(uid=uid, prompt=p.copy(), max_new_tokens=5))
+    base = {r.uid: tuple(r.tokens) for r in ref.run()}
+    assert got == base
+
+
+# ------------------------------------------------ byte-identity matrix
+
+def _wave_requests(cfg, seed, n_followers=3):
+    """A donor plus followers sharing the leading system prompt (and,
+    for vlm, identical patch embeddings — the virtual prefix)."""
+    rng = np.random.default_rng(seed)
+    system = rng.integers(1, cfg.vocab_size - 1, 24)
+    patches = (rng.standard_normal((cfg.num_patches, cfg.frontend_dim))
+               .astype(np.float32) if cfg.frontend == "patch" else None)
+    out = []
+    for uid in range(1 + n_followers):
+        tail = rng.integers(1, cfg.vocab_size - 1, 6)
+        prompt = np.concatenate([system, tail]).astype(np.int32)
+        out.append(Request(uid=uid, prompt=prompt, max_new_tokens=6,
+                           patch_embeds=None if patches is None
+                           else patches.copy()))
+    return out
+
+
+def _serve_waves(cfg, params, on, **kw):
+    """Wave 1: the donor alone, run to full retirement.  Wave 2: the
+    followers — every store hit is a hit AFTER the donor retired."""
+    eng = ServingEngine(cfg, params, max_batch=2, max_seq=64, page_size=8,
+                        pool_pages=48, prefix_cache=on, **kw)
+    reqs = _wave_requests(cfg, seed=21)
+    eng.submit(reqs[0])
+    eng.run()
+    assert not eng.slots and not eng.pending     # donor fully retired
+    for q in reqs[1:]:
+        eng.submit(q)
+    eng.run()
+    return {r.uid: tuple(r.tokens) for r in eng.results}, eng
+
+
+@pytest.mark.parametrize("fam", ["dense", "moe", "hybrid", "vlm"])
+@pytest.mark.parametrize("kv", ["bf16", "int8"])
+def test_prefix_cache_parity_matrix_hit_after_retire(fam, kv):
+    cfg = TINY[fam].replace(kv_dtype=kv)
+    params = _params(cfg)
+    base, off_eng = _serve_waves(cfg, params, on=False)
+    got, eng = _serve_waves(cfg, params, on=True)
+    assert got == base, f"{fam}/{kv}: tokens diverged with cache on"
+    st = eng.prefix_store.stats()
+    assert st["cross_request_hits"] > 0, (fam, kv, st)
+    assert st["reused_pages"] >= st["cross_request_hits"]
+    # the cache-on engine computed strictly fewer prompt tokens
+    assert eng.prefill_tokens < off_eng.prefill_tokens or fam == "hybrid"
+    # transient mode drains the store with the slots; persistent keeps
+    # the idle entries pinned
+    assert len(off_eng.prefix_store) == 0
+    assert off_eng.pool.stats().allocated_pages == 0
+
+
+def test_prefix_hit_from_host_tier_cold_parcel():
+    """Donor retires; its cache entries are evicted clean out of the
+    device pool (spilling to host DRAM); the follower's admission pulls
+    the pages back from the cold tier — tokens stay byte-identical."""
+    cfg = TINY["dense"]
+    params = _params(cfg)
+    base, _ = _serve_waves(cfg, params, on=False)
+
+    eng = ServingEngine(cfg, params, max_batch=2, max_seq=64, page_size=8,
+                        pool_pages=48, prefix_cache=True, host_tier_pages=16)
+    reqs = _wave_requests(cfg, seed=21)
+    eng.submit(reqs[0])
+    eng.run()
+    idle = len(eng.prefix_store)
+    assert idle > 0
+    evicted = eng.prefix_store.evict(idle)       # full pressure flush
+    assert evicted == idle and len(eng.prefix_store) == 0
+    assert eng.prefix_store.cold_spills == evicted
+    assert eng.pool.stats().allocated_pages == 0
+    for q in reqs[1:]:
+        eng.submit(q)
+    eng.run()
+    got = {r.uid: tuple(r.tokens) for r in eng.results}
+    assert got == base
+    st = eng.prefix_store.stats()
+    assert st["cold_restores"] > 0, st
+    assert st["cross_request_hits"] > 0, st
+
+
+def test_watermark_evicts_idle_cache_before_preempting():
+    """Organic reclaim: a second wave of DISTINCT prompts pressures the
+    pool past the idle cache; the shed path evicts LRU idle entries (and
+    only those) instead of preempting live slots, and tokens match the
+    cache-off oracle."""
+    cfg = TINY["dense"]
+    params = _params(cfg)
+    rng = np.random.default_rng(33)
+    reqs = [(uid, rng.integers(1, cfg.vocab_size - 1, 24), 4)
+            for uid in range(5)]
+
+    def serve(on):
+        eng = ServingEngine(cfg, params, max_batch=2, max_seq=64,
+                            page_size=8, pool_pages=16, prefix_cache=on,
+                            high_watermark=0.8)
+        for uid, prompt, mnew in reqs[:2]:
+            eng.submit(Request(uid=uid, prompt=np.asarray(prompt, np.int32),
+                               max_new_tokens=mnew))
+        eng.run()
+        for uid, prompt, mnew in reqs[2:]:
+            eng.submit(Request(uid=uid, prompt=np.asarray(prompt, np.int32),
+                               max_new_tokens=mnew))
+        eng.run()
+        return {r.uid: tuple(r.tokens) for r in eng.results}, eng
+
+    base, _ = serve(False)
+    got, eng = serve(True)
+    assert got == base
+    assert eng.prefix_store.stats()["evictions"] > 0
+    # whatever survived is idle + pinned, nothing leaked
+    st = eng.pool.stats()
+    assert st.allocated_pages == st.pinned_pages == len(eng.prefix_store)
+
+
+def test_fork_children_hold_store_refs():
+    """A COW fork takes its own references on the parent's registered
+    prefix pages, so eviction accounting still sees one ref per live
+    table, and the entries outlive both parent and child."""
+    cfg = TINY["dense"]
+    params = _params(cfg)
+    prompt = (np.arange(24, dtype=np.int32) * 5) % cfg.vocab_size
+    eng = ServingEngine(cfg, params, max_batch=2, max_seq=64, page_size=8,
+                        pool_pages=24, prefix_cache=True)
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=8))
+    for _ in range(50):
+        eng.step()
+        if any(s.generated and not s.prefilling
+               for s in eng.slots.values()):
+            break
+    eng.fork(0, new_uid=1)
+    slots = list(eng.slots.values())
+    assert len(slots) == 2
+    parent = next(s for s in slots if s.request.uid == 0)
+    child = next(s for s in slots if s.request.uid == 1)
+    assert child.store_refs == parent.store_refs and parent.store_refs
+    for h in parent.store_refs:
+        assert eng.prefix_store.entry(h).refs == 2
+    _engine_laws(eng)
+    eng.run()
+    assert not eng.slots
+    # both retired: entries idle, pinned, still resident
+    for h in eng.prefix_store._entries:
+        assert eng.prefix_store.entry(h).refs == 0
+    st = eng.pool.stats()
+    assert st.allocated_pages == st.pinned_pages == len(eng.prefix_store) > 0
+    # a late follower still hits the surviving prefix
+    eng.submit(Request(uid=2, prompt=prompt.copy(), max_new_tokens=4))
+    eng.run()
+    assert eng.prefix_store.stats()["cross_request_hits"] > 0
+
+
+# ------------------------------------------------------ sharded matrix
+
+def test_sharded_prefix_cache_parity_and_rotation_adoption():
+    run_with_devices("""
+        import numpy as np, jax
+        from conftest import TINY
+        from repro.launch.mesh import make_mem_mesh
+        from repro.models import registry
+        from repro.serve.engine import ServingEngine, Request
+
+        cfg0 = TINY["dense"]
+        params = registry.get_family(cfg0).init(jax.random.key(0), cfg0)
+        rng = np.random.default_rng(5)
+        system = rng.integers(1, 127, 24)
+
+        def reqs():
+            r2 = np.random.default_rng(6)
+            out = []
+            for uid in range(5):
+                tail = r2.integers(1, 127, 6)
+                out.append(Request(uid=uid, prompt=np.concatenate(
+                    [system, tail]).astype(np.int32), max_new_tokens=6))
+            return out
+
+        def serve(c, on, mesh=None):
+            eng = ServingEngine(c, params, max_batch=2, max_seq=64,
+                                page_size=8, pool_pages=64, mesh=mesh,
+                                prefix_cache=on)
+            q = reqs()
+            eng.submit(q[0])
+            eng.run()                       # donor retires alone
+            assert not eng.slots and not eng.pending
+            for r in q[1:]:
+                eng.submit(r)
+            eng.run()
+            return {r.uid: tuple(r.tokens) for r in eng.results}, eng
+
+        mesh = make_mem_mesh(8)
+        for kv in ("bf16", "int8"):
+            c = cfg0.replace(kv_dtype=kv)
+            base, _ = serve(c, False)            # 1 device, cache off
+            on8, e8 = serve(c, True, mesh)       # 8 shards, cache on
+            assert on8 == base, f"{kv}: sharded cache-on diverged"
+            st = e8.prefix_store.stats()
+            assert st["cross_request_hits"] > 0, (kv, st)
+            # rotation adoption: every cached page still sits on the
+            # bank the donor's rotation placed it on, and the jitted
+            # walk's rotation recovery stayed exact (tokens prove it)
+            pool = e8.pool
+            for h, e in e8.prefix_store._entries.items():
+                assert pool.shard_of(e.page) == (e.rotation + e.index) % 8
+            ss = pool.shard_stats()
+            assert sum(d["pinned_pages"] for d in ss) == pool.pinned_pages
+            assert pool.pinned_pages == len(e8.prefix_store) > 0
+            pps = pool.pages_per_shard
+            for d in ss:
+                assert d["peak_allocated_pages"] <= pps
+        # 8-shard cache OFF keeps byte parity too (matrix corner)
+        off8, eoff = serve(cfg0, False, mesh)
+        base, _ = serve(cfg0, False)
+        assert off8 == base
+        assert eoff.pool.stats().allocated_pages == 0
+        print("SHARDED-PREFIX-OK")
+    """)
