@@ -4,7 +4,10 @@ Times the fused single-pass Pallas kernels (decode + chunked prefill,
 interpret mode on CPU — this container is not the serving hardware, so
 wall-clock is a structural sanity signal, not TPU truth) against their
 XLA ref formulations, and checks bitwise-close parity on every
-geometry.  QUANT_GEOMS reruns a subset with int8/fp8 page banks +
+geometry.  VERIFY_GEOMS times the speculative-decode verify walk — one
+(k+1)-token ragged prefill call against the k+1 sequential decode
+dispatches it replaces (its `ref ms` column), with exact parity between
+the two.  QUANT_GEOMS reruns a subset with int8/fp8 page banks +
 per-page scale columns — the in-kernel dequant path against the
 dequantizing ref.  PASS is parity; the timings ride along for the perf
 trajectory.
@@ -32,6 +35,17 @@ GEOMS = [
     (4, 2, 16, 8, 4, 1),
     (8, 2, 64, 8, 4, 2),
     (8, 8, 128, 8, 2, 2),
+]
+# speculative verify: one (k+1)-token ragged prefill call (how the
+# engine scores a draft window) vs the k+1 sequential decode dispatches
+# it replaces — (k, hq, hkv, hd, page, max_pages, ppb).  Parity is
+# exact by construction (chunk row j attends kv_pos <= start+j, decode
+# at positions start+j attends the same set), so the row also pins the
+# verify-walk/decode equivalence the accept rule relies on.
+VERIFY_GEOMS = [
+    (2, 8, 2, 64, 8, 4, 2),
+    (4, 8, 2, 64, 8, 4, 2),
+    (4, 8, 8, 128, 8, 2, 2),
 ]
 # quantized reruns: in-kernel dequant vs the dequantizing ref, one
 # sub-tile and one MXU-width geometry per storage dtype
@@ -93,6 +107,29 @@ def run() -> dict:
         ok &= match
         rows.append(dict(kernel="prefill", geom=geom, match=match,
                          kernel_ms=_time(kern), ref_ms=_time(ref)))
+
+    for spec_k, hq, hkv, hd, page, mp, ppb in VERIFY_GEOMS:
+        r = spec_k + 1
+        k, v, bt = _setup(rng, hkv, hd, page, mp)
+        geom = f"k{spec_k}/hq{hq}/hkv{hkv}/hd{hd}/page{page}x{mp}"
+
+        qc = jnp.asarray(rng.standard_normal((B, r, hq, hd)), jnp.float32)
+        start = jnp.asarray(rng.integers(0, mp * page - r, B), jnp.int32)
+        clen = jnp.full((B,), r, jnp.int32)
+        kern = lambda: paged_prefill_attention(qc, k, v, bt, start, clen,
+                                               pages_per_block=ppb,
+                                               interpret=True)
+        seq = lambda: [paged_decode_attention(qc[:, j], k, v, bt, start + j,
+                                              pages_per_block=ppb,
+                                              interpret=True)
+                       for j in range(r)]
+        match = bool(np.allclose(np.asarray(kern()),
+                                 np.stack([np.asarray(o) for o in seq()],
+                                          axis=1),
+                                 rtol=1e-5, atol=1e-5))
+        ok &= match
+        rows.append(dict(kernel="verify", geom=geom, match=match,
+                         kernel_ms=_time(kern), ref_ms=_time(seq)))
 
     for dt, hq, hkv, hd, page, mp, ppb in QUANT_GEOMS:
         k, v, bt = _setup(rng, hkv, hd, page, mp)

@@ -32,21 +32,28 @@ identity with an all-HBM run).  `--prefix-trace` adds the SHARED SYSTEM
 PROMPT trace: sequential requests with a common 96-token prefix served
 through the persistent prefix store, gated on nonzero cross-request
 hits, fewer prompt tokens computed, steady-state TTFT below the cold
-run, and identical greedy tokens.  `--json PATH` additionally writes a
-machine-readable `BENCH_serve.json` (`"schema": 5` — tokens/s, peak KV
-bytes per tier, kv_dtype, shard topology + per-shard KV high-water,
-spill/prefetch counts, the sampling-mode sweep, prefix hit rate + TTFT,
-and the compiled-HLO attention traffic of the jitted steps before/after
-the kernel fusion).
+run, and identical greedy tokens.  `--speculate K [--draft SPEC]` adds
+the SPECULATIVE DECODE sweep: K-token draft windows verified in one
+batched call vs plain one-token decode, gated on byte-identical streams
+(greedy AND sampled — the determinism contract makes speculation a pure
+perf knob) at tokens/s ratio > 1, reporting accept rate and draft/verify
+token traffic.  `--json PATH` additionally writes a machine-readable
+`BENCH_serve.json` (`"schema": 6` — tokens/s, peak KV bytes per tier,
+kv_dtype, shard topology + per-shard KV high-water, spill/prefetch
+counts, the sampling-mode sweep, prefix hit rate + TTFT, the
+speculative-decode sweep, and the compiled-HLO attention traffic of the
+jitted steps before/after the kernel fusion).
 
     PYTHONPATH=src python benchmarks/serve_throughput.py \
         [--family dense,moe,hybrid,vlm] [--impl flash_pallas] [--ppb 2] \
         [--shards 8] [--sampling] [--kv-dtype int8] [--quant] \
-        [--host-tier] [--prefix-trace] [--json BENCH_serve.json]
+        [--host-tier] [--prefix-trace] [--speculate 4] \
+        [--json BENCH_serve.json]
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import sys
 import time
@@ -65,8 +72,11 @@ from repro.serve import ServingEngine, Request, SamplingParams, TokenEvent
 # bf16 at identical greedy tokens) and the host-tier spill smoke (HBM +
 # host arena bytes, spill/prefetch/restore traffic); 5 added the
 # --prefix-trace shared-system-prompt sweep (prefix hit rate, prompt
-# pages prefilled vs reused, steady-state TTFT cached vs cold)
-SCHEMA = 5
+# pages prefilled vs reused, steady-state TTFT cached vs cold); 6 added
+# the --speculate sweep (accept rate, draft/verify token counts,
+# speculative vs plain tokens/s, gated on byte-identical streams —
+# greedy AND sampled — at ratio > 1)
+SCHEMA = 6
 
 CFG = ModelConfig(
     name="bench-dense", family="dense", num_layers=2, d_model=64,
@@ -391,10 +401,105 @@ def _prefix_sweep(mesh=None) -> dict:
                     and warm["prefill_tokens"] < cold["prefill_tokens"]))
 
 
+def _high_agreement(params):
+    """Zero the residual output projections of every layer past the
+    first, making layers 1..L-1 exact identities on the residual
+    stream.  A `self:1` draft (layer 0 + the shared final norm/head)
+    then computes logits IDENTICAL to the target's, so the accept rate
+    is exactly 1.0 — the trace measures the speculation MACHINERY's
+    ceiling (how much one fused propose+verify dispatch saves over k+1
+    sequential decode dispatches) rather than a random-init draft's
+    agreement, which is ~chance and tells you nothing about the
+    machinery.  Real deployments sit between the two; the JSON reports
+    `accept_rate` so the trace's position on that axis is explicit."""
+    out = {**params, "layers": dict(params["layers"])}
+    for mod in ("attn", "mlp"):
+        wo = np.asarray(params["layers"][mod]["wo"]).copy()
+        wo[1:] = 0.0
+        out["layers"][mod] = {**params["layers"][mod], "wo": wo}
+    return out
+
+
+def _speculate_sweep(k: int, draft: str, mesh=None) -> dict:
+    """--speculate K: draft-propose / batched-verify decode vs plain
+    one-token decode on the SAME decode-heavy stream.
+
+    The determinism contract makes this a pure perf knob: acceptance is
+    an exact match against the target's own counter-keyed draw, so the
+    speculative stream must be BYTE-IDENTICAL to plain decode — greedy
+    and sampled — and the gate enforces exactly that, plus a tokens/s
+    ratio > 1 (each accepted window folds up to k+1 sequential decode
+    dispatches into one propose + one verify call).  Reported: accept
+    rate, draft/verify token traffic, and the speculative:plain ratio.
+
+    The target is CFG deepened to 8 layers with `_high_agreement`
+    params (accept rate 1.0, draft = 1/8 of the target): the regime
+    where speculation pays — a cheap draft that tracks its target —
+    exercised end-to-end through real paging, forks and retirement."""
+    mb, ms, n, phi, mnew = 4, 256, 8, 16, 64
+    cfg = dataclasses.replace(CFG, num_layers=8)
+    rng = np.random.default_rng(31337)
+    prompts = [rng.integers(0, cfg.vocab_size, int(rng.integers(4, phi)))
+               .astype(np.int32) for _ in range(n)]
+    params = _high_agreement(
+        registry.get_family(cfg).init(jax.random.key(0), cfg))
+
+    def serve(spec_k, sampled):
+        # ONE engine per mode, warmup batch first: every engine builds
+        # fresh jit closures, so a cold run times XLA compilation, not
+        # decode — the timed batch reuses the warm engine (requests are
+        # independent streams; warmup never changes the timed tokens)
+        eng = ServingEngine(cfg, params, max_batch=mb, max_seq=ms,
+                            page_size=16, mesh=mesh, speculate_k=spec_k,
+                            draft=draft if spec_k else None)
+
+        def batch(base_uid):
+            for uid, p in enumerate(prompts):
+                eng.submit(Request(uid=base_uid + uid, prompt=p.copy(),
+                                   sampling=SamplingParams(
+                                       temperature=0.7 if sampled and uid % 2
+                                       else 0.0, seed=uid,
+                                       max_new_tokens=mnew)))
+            t0 = time.perf_counter()
+            results = eng.run()                  # accumulates across batches
+            dt = time.perf_counter() - t0
+            return {r.uid - base_uid: tuple(r.tokens) for r in results
+                    if r.uid >= base_uid}, dt
+
+        batch(0)                                 # warmup: compiles
+        toks, dt = batch(1000)
+        return (toks, sum(len(t) for t in toks.values()) / dt,
+                eng.stats().get("speculative"))
+
+    plain, plain_tok_s, _ = serve(0, sampled=False)
+    spec, spec_tok_s, st = serve(k, sampled=False)
+    plain_s, _, _ = serve(0, sampled=True)
+    spec_s, _, _ = serve(k, sampled=True)
+    ratio = spec_tok_s / plain_tok_s
+    same = plain == spec
+    same_sampled = plain_s == spec_s
+    return dict(k=k, draft=draft, requests=n, max_new_tokens=mnew,
+                plain_tok_s=plain_tok_s, speculative_tok_s=spec_tok_s,
+                speedup=ratio,
+                accept_rate=st["accept_rate"],
+                windows=st["windows"], verify_calls=st["verify_calls"],
+                draft_tokens=st["draft_tokens"],
+                accepted_tokens=st["accepted_tokens"],
+                emitted_tokens=st["emitted_tokens"],
+                tokens_match=same, tokens_match_sampled=same_sampled,
+                # the ratio gate is single-device only: the fused
+                # propose+verify dispatch is a single-arena construct,
+                # so the mesh run is a byte-identity smoke for the
+                # shard_map verify path, not a perf claim
+                ok=same and same_sampled
+                and (mesh is not None or ratio > 1.0))
+
+
 def run(families=None, impl=None, ppb=1, attn_hlo=False,
         shards: int = 1, sampling: bool = False, kv_dtype: str | None = None,
         quant: bool = False, host_tier: bool = False,
-        prefix_trace: bool = False) -> dict:
+        prefix_trace: bool = False, speculate: int = 0,
+        draft: str = "self:1") -> dict:
     families = families or list(FAMILY_CFGS)
     mesh = None
     if shards > 1:
@@ -468,6 +573,9 @@ def run(families=None, impl=None, ppb=1, attn_hlo=False,
         params = registry.get_family(cfg).init(jax.random.key(0), cfg)
         result["sampling"] = _sampling_sweep(cfg, params, mesh=mesh)
         result["ok"] = ok = ok and result["sampling"]["ok"]
+    if speculate > 0:
+        result["speculative"] = _speculate_sweep(speculate, draft, mesh=mesh)
+        result["ok"] = ok = ok and result["speculative"]["ok"]
     if attn_hlo:
         result["attention_hlo"] = _attention_hlo_stats(FAMILY_CFGS["dense"])
         # the fused steps must ship ZERO bulk attention bytes
@@ -529,6 +637,16 @@ def pretty(result: dict):
               f"{t['host_tier_peak_mb']:.3f} MB; {t['spills']} spills / "
               f"{t['prefetches']} prefetches / {t['restores']} restores; "
               f"tokens {'==' if t['tokens_match'] else 'DIFFER'}")
+    sp = result.get("speculative")
+    if sp:
+        print(f"   speculative decode (k={sp['k']}, draft {sp['draft']}): "
+              f"plain {sp['plain_tok_s']:.1f} tok/s -> speculative "
+              f"{sp['speculative_tok_s']:.1f} tok/s ({sp['speedup']:.2f}x); "
+              f"accept rate {sp['accept_rate']:.2f} "
+              f"({sp['accepted_tokens']}/{sp['draft_tokens']} draft tokens, "
+              f"{sp['verify_calls']} verify calls); tokens "
+              f"{'==' if sp['tokens_match'] else 'DIFFER'} greedy, "
+              f"{'==' if sp['tokens_match_sampled'] else 'DIFFER'} sampled")
     s = result.get("sampling")
     if s:
         print(f"   in-step sampling [{s['mode']}]: greedy "
@@ -590,9 +708,18 @@ if __name__ == "__main__":
                          "nonzero cross-request hits, fewer prompt "
                          "tokens computed, steady-state TTFT below the "
                          "cold run, AND identical greedy tokens")
+    ap.add_argument("--speculate", type=int, default=0, metavar="K",
+                    help="add the speculative-decode sweep: K-token "
+                         "draft windows + one-call batched verify vs "
+                         "plain decode, gated on BYTE-IDENTICAL streams "
+                         "(greedy and sampled) at tokens/s ratio > 1")
+    ap.add_argument("--draft", default="self:1",
+                    help="draft spec for --speculate: 'self:N' "
+                         "(truncated-layer self-draft) or an ARCHES "
+                         "name, optionally '@reduced' (default self:1)")
     ap.add_argument("--json", nargs="?", const="BENCH_serve.json",
                     default=None, metavar="PATH",
-                    help="write machine-readable results (schema 5: "
+                    help="write machine-readable results (schema 6: "
                          "tokens/s, peak KV bytes per tier, kv_dtype, "
                          "shard topology, spill/prefetch counts, "
                          "sampling-mode sweep, attention HBM bytes "
@@ -610,7 +737,8 @@ if __name__ == "__main__":
                   attn_hlo=bool(args.json), shards=args.shards,
                   sampling=args.sampling, kv_dtype=args.kv_dtype,
                   quant=args.quant, host_tier=args.host_tier,
-                  prefix_trace=args.prefix_trace)
+                  prefix_trace=args.prefix_trace,
+                  speculate=args.speculate, draft=args.draft)
         pretty(res)
     finally:
         # write even when run() raises: the (partial) record is exactly

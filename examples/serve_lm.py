@@ -5,6 +5,15 @@ sharded serving.
     PYTHONPATH=src python examples/serve_lm.py [--devices N] [--stream]
         [--temperature T] [--top-k K] [--top-p P] [--seed S]
         [--kv-dtype int8] [--host-tier-pages N] [--prefix-cache]
+        [--speculate K] [--draft self:1]
+
+`--speculate K` decodes speculatively (serve/speculative.py): a draft
+(`--draft`, default `self:1` = the target's first layer sharing its
+embeddings and head) proposes K tokens per window and the target
+verifies the window in one batched paged call.  Accept/reject is an
+exact match against the target's own counter-keyed draw, so the token
+stream is byte-identical to plain decode — the example prints the
+accept rate and emitted-per-window alongside the usual stats.
 
 `--prefix-cache` turns on the PERSISTENT cross-request prefix store
 (serve/prefix_store.py): after the batch loop the same request stream
@@ -89,7 +98,8 @@ def demo_stream(cfg, params, sp, seed: int, mesh=None):
 def main(devices: int = 1, stream: bool = False, temperature: float = 0.0,
          top_k: int = 0, top_p: float = 1.0, seed: int = 0,
          kv_dtype: str | None = None, host_tier_pages: int | None = None,
-         prefix_cache: bool = False):
+         prefix_cache: bool = False, speculate: int = 0,
+         draft: str = "self:1"):
     import numpy as np
     import jax
 
@@ -121,7 +131,9 @@ def main(devices: int = 1, stream: bool = False, temperature: float = 0.0,
     engine = ServingEngine(cfg, params, max_batch=4, max_seq=128,
                            page_size=16, mesh=mesh,
                            host_tier_pages=host_tier_pages,
-                           prefix_cache=prefix_cache)
+                           prefix_cache=prefix_cache,
+                           speculate_k=speculate,
+                           draft=draft if speculate else None)
     rng = np.random.default_rng(seed)
     for uid in range(12):
         plen = int(rng.integers(4, 80))
@@ -151,6 +163,14 @@ def main(devices: int = 1, stream: bool = False, temperature: float = 0.0,
         print("near-memory banks: peak pages per shard "
               f"{[s['peak_allocated_pages'] for s in shards]} | "
               f"resident KV bytes per shard {engine.arena.shard_kv_bytes()}")
+    if speculate:
+        sp_st = engine.stats()["speculative"]
+        print(f"speculative: k={sp_st['k']} accept rate "
+              f"{sp_st['accept_rate']:.2f}, "
+              f"{sp_st['emitted_tokens'] / max(sp_st['windows'], 1):.2f} "
+              f"tokens/window over {sp_st['windows']} windows "
+              f"(draft {sp_st['draft']['spec']}) — tokens byte-identical "
+              "to plain decode")
     if engine.host_tier is not None:
         ht = engine.stats()["host_tier"]
         print(f"host tier: {ht['spills']} spills / {ht['restores']} "
@@ -235,6 +255,14 @@ if __name__ == "__main__":
                     help="persistent cross-request prefix cache: prompt "
                          "pages survive retirement and a rerun of the "
                          "same stream adopts them instead of prefilling")
+    ap.add_argument("--speculate", type=int, default=0, metavar="K",
+                    help="speculative decode: draft K tokens per window, "
+                         "verify in one batched call — tokens stay "
+                         "byte-identical to plain decode")
+    ap.add_argument("--draft", default="self:1",
+                    help="draft for --speculate: 'self:N' (first N "
+                         "target layers, shared embeddings) or a "
+                         "registry arch name")
     args = ap.parse_args()
     if args.devices > 1:
         # host-platform shim: must land before jax initializes, which is
@@ -245,4 +273,5 @@ if __name__ == "__main__":
     main(args.devices, stream=args.stream, temperature=args.temperature,
          top_k=args.top_k, top_p=args.top_p, seed=args.seed,
          kv_dtype=args.kv_dtype, host_tier_pages=args.host_tier_pages,
-         prefix_cache=args.prefix_cache)
+         prefix_cache=args.prefix_cache, speculate=args.speculate,
+         draft=args.draft)

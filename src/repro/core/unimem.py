@@ -408,6 +408,28 @@ class SequencePageTable:
         self.pages[-1] = dst
         return src, dst
 
+    def truncate(self, num_tokens: int) -> list[int]:
+        """Roll the sequence back to `num_tokens`, freeing tail pages the
+        shorter length no longer needs.  Returns the freed physical ids.
+
+        Used by speculative decode to drop the page tail holding REJECTED
+        draft positions: the verify step appends k+1 candidate tokens,
+        then the accept count a truncates back to num_tokens + a + 1.
+        Callers must only truncate across pages they exclusively own
+        (speculation COWs the shared boundary page before appending, and
+        the appended tail pages are fresh allocations), so freeing here
+        can never strand a prefix-sharing peer."""
+        if num_tokens > self.num_tokens:
+            raise ValueError(
+                f"truncate to {num_tokens} tokens > current {self.num_tokens}")
+        keep = self.pool.pages_for(num_tokens)
+        dropped = self.pages[keep:]
+        if dropped:
+            self.pool.free(dropped)
+            del self.pages[keep:]
+        self.num_tokens = num_tokens
+        return dropped
+
     def release(self) -> None:
         self.pool.free(self.pages)
         self.pages, self.num_tokens = [], 0

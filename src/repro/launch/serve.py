@@ -4,7 +4,7 @@
         --reduced --requests 16 --max-new 24 [--layout paged|contiguous] \
         [--shards N] [--temperature T --top-k K --top-p P --sample-seed S] \
         [--kv-dtype int8] [--host-tier-pages N --high-watermark F] \
-        [--prefix-cache --shared-prefix 64]
+        [--prefix-cache --shared-prefix 64] [--speculate 4 --draft self:1]
 
 Sampling flags build per-request `SamplingParams` (serve/sampling.py)
 executed INSIDE the jitted step — each request gets its own seed
@@ -17,6 +17,15 @@ latency/throughput/pool stats including the paged arena's page
 high-water mark (the memory the layout actually ties down).  Every
 decode family except pure-SSM defaults to the paged layout (dense, moe,
 hybrid, vlm); ssm falls back to contiguous automatically.
+
+`--speculate K` turns on speculative decode (serve/speculative.py): a
+cheap draft model proposes K tokens per window and the target scores
+the whole window in ONE batched paged-verify call; acceptance is an
+exact match against the target's own counter-keyed draw, so tokens are
+byte-identical to plain decode and the flag is purely a throughput
+knob.  `--draft` picks the proposer: `self:N` (default `self:1`)
+reuses the target's first N layers + shared embeddings/head; a
+registry name (e.g. `mamba2-130m`) runs a paired small model.
 
 `--shards N` serves from the near-memory SHARDED arena on an N-device
 "mem" mesh (pages resident per chip, queries broadcast, softmax
@@ -89,6 +98,15 @@ def main(argv=None):
                     help="prepend this many SHARED system-prompt tokens "
                          "to every request (makes --prefix-cache hits "
                          "visible in stats()['prefix_store'])")
+    ap.add_argument("--speculate", type=int, default=0, metavar="K",
+                    help="speculative decode: draft K tokens per window, "
+                         "verify them in one batched paged-prefill call "
+                         "(tokens stay byte-identical to plain decode; "
+                         "paged layout only)")
+    ap.add_argument("--draft", default="self:1",
+                    help="draft model for --speculate: 'self:N' (first N "
+                         "target layers, shared embeddings) or a registry "
+                         "arch name, e.g. 'mamba2-130m'")
     args = ap.parse_args(argv)
 
     spec = get_arch(args.arch)
@@ -124,7 +142,9 @@ def main(argv=None):
                            prefill_chunk=args.prefill_chunk, mesh=mesh,
                            high_watermark=args.high_watermark,
                            host_tier_pages=args.host_tier_pages,
-                           prefix_cache=args.prefix_cache)
+                           prefix_cache=args.prefix_cache,
+                           speculate_k=args.speculate,
+                           draft=args.draft if args.speculate else None)
     rng = np.random.default_rng(args.seed)
     if args.shared_prefix >= budget:
         raise SystemExit(f"--shared-prefix {args.shared_prefix} leaves no "

@@ -501,3 +501,11 @@ def paged_decode_step(params, cfg: ModelConfig, arena, block_table,
     token.  Same contract as `transformer.paged_decode_step`."""
     return T.paged_decode_step(params, cfg, arena, block_table,
                                positions, tokens, ffn_fn=_moe_ffn)
+
+
+def paged_verify(params, cfg: ModelConfig, chunk, arena, block_table,
+                 start, chunk_len):
+    """Speculative-verify walk with expert dispatch — contract of
+    `transformer.paged_verify` (all-position logits)."""
+    return T.paged_verify(params, cfg, chunk, arena, block_table,
+                          start, chunk_len, ffn_fn=_moe_ffn)

@@ -66,3 +66,90 @@ def has_paged(cfg: ModelConfig) -> bool:
 def supports_long_context(cfg: ModelConfig) -> bool:
     """Sub-quadratic families run long_500k; pure full-attention skip it."""
     return cfg.family in ("ssm", "hybrid")
+
+
+# --------------------------------------------- speculative decode drafts
+#
+# A draft/target pair for serve/speculative.py: the draft proposes k
+# tokens from its own (cheap, contiguous) cache, the target judges all
+# k in ONE ragged paged-prefill walk (`paged_verify`).  Only families
+# whose paged dataplane can produce all-position verify logits AND whose
+# prompts are pure token streams qualify as targets — hybrid's per-slot
+# conv/SSM state can't roll back a rejected tail, vlm prompts carry
+# patch embeddings a token-fed draft can't reproduce, ssm has no paged
+# path at all.
+
+# target arch name -> default draft arch (configs/ARCHES).  Any target
+# without an entry falls back to the truncated-layer self-draft
+# "self:1" (first layer + shared embed/ln_f/head of the target itself —
+# zero extra weights to load).
+DRAFT_PAIRS = {
+    "internlm2-1.8b": "mamba2-130m",
+    "deepseek-67b": "mamba2-130m",
+    "yi-9b": "mamba2-130m",
+}
+
+SELF_DRAFT_PREFIX = "self:"
+
+
+def has_verify(cfg: ModelConfig) -> bool:
+    """True when `cfg` can be a speculative-decode TARGET: paged verify
+    hook present and prompts are plain token streams."""
+    fam = get_family(cfg)
+    return (getattr(fam, "paged_verify", None) is not None
+            and cfg.frontend == "none")
+
+
+def default_draft(cfg: ModelConfig) -> str:
+    """The registry's draft pairing for a target config."""
+    return DRAFT_PAIRS.get(cfg.name, SELF_DRAFT_PREFIX + "1")
+
+
+def draft_config(cfg: ModelConfig, spec: str) -> ModelConfig:
+    """Resolve a draft spec against a target config.
+
+    "self:N"          -> the target truncated to its first N layers
+                         (params sliced by `self_draft_params`).
+    "<arch>"          -> that ARCHES config, vocab coerced to the
+                         target's (the draft only PROPOSES token ids —
+                         its logits judge nothing, but its samples must
+                         index the target's vocab).
+    "<arch>@reduced"  -> same, shrunk by `reduced_for_smoke` (CI-sized
+                         drafts for CI-sized targets).
+    """
+    if spec.startswith(SELF_DRAFT_PREFIX):
+        n = int(spec[len(SELF_DRAFT_PREFIX):])
+        if not 1 <= n < cfg.num_layers:
+            raise ValueError(
+                f"self-draft depth {n} must be in [1, {cfg.num_layers - 1}] "
+                f"for a {cfg.num_layers}-layer target")
+        return cfg.replace(name=f"{cfg.name}-self{n}", num_layers=n)
+    from repro.configs import get_arch
+    from repro.models.config import reduced_for_smoke
+    arch, _, flag = spec.partition("@")
+    d = get_arch(arch).model
+    if flag == "reduced":
+        d = reduced_for_smoke(d, max_seq=cfg.max_seq)
+    elif flag:
+        raise ValueError(f"unknown draft flag {flag!r} in {spec!r}")
+    if not has_decode(d.replace(vocab_size=cfg.vocab_size)):
+        raise ValueError(f"draft arch {arch!r} has no decode path")
+    return d.replace(vocab_size=cfg.vocab_size,
+                     max_seq=max(d.max_seq, cfg.max_seq))
+
+
+def is_self_draft(cfg: ModelConfig, dcfg: ModelConfig) -> bool:
+    return (dcfg.family == cfg.family
+            and dcfg.name == f"{cfg.name}-self{dcfg.num_layers}")
+
+
+def self_draft_params(params, dcfg: ModelConfig):
+    """Truncated-layer self-draft weights: slice the target's stacked
+    layer pytree to the first `dcfg.num_layers` entries; embed, final
+    norm and head are SHARED with the target (the arrays are the same
+    jax buffers — no copy, no extra device memory)."""
+    import jax
+    out = dict(params)
+    out["layers"] = jax.tree.map(lambda a: a[:dcfg.num_layers],
+                                 params["layers"])
+    return out

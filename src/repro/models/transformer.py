@@ -319,11 +319,14 @@ def _mlp_ffn(p, cfg: ModelConfig, hn, valid):
 
 
 def paged_prefill_embeds(params, cfg: ModelConfig, x, arena, block_table,
-                         start, chunk_len, ffn_fn=_mlp_ffn):
+                         start, chunk_len, ffn_fn=_mlp_ffn,
+                         all_logits=False):
     """Shared prefill body over already-embedded chunk inputs x: (b,c,d)
     (the transformer embeds tokens; the VLM fuses patch projections in;
     MoE swaps `ffn_fn` for expert dispatch).  See `paged_prefill` for
-    the contract."""
+    the contract.  With `all_logits` the head runs over EVERY chunk
+    position and (b, c, vocab) comes back — the speculative-verify mode,
+    where each position's next-token distribution judges one draft."""
     b, c, _ = x.shape
     positions = start[:, None] + jnp.arange(c)[None, :]
     valid = jnp.arange(c)[None, :] < chunk_len[:, None]        # (b, c)
@@ -352,10 +355,34 @@ def paged_prefill_embeds(params, cfg: ModelConfig, x, arena, block_table,
 
     x, pages_new = jax.lax.scan(body, x, (params["layers"], pages))
     arena = {**arena, **pages_new}
+    if all_logits:
+        h = L.rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
+        return arena, L.logits_from_hidden(head_weights(params, cfg), cfg, h)
     h = L.rmsnorm_apply(params["ln_f"], _last_valid(x, chunk_len),
                         cfg.norm_eps)
     logits = L.logits_from_hidden(head_weights(params, cfg), cfg, h)
     return arena, logits[:, 0]
+
+
+def paged_verify(params, cfg: ModelConfig, chunk, arena, block_table,
+                 start, chunk_len, ffn_fn=_mlp_ffn):
+    """Speculative-verify step: ONE ragged paged-prefill walk over the
+    k+1 candidate tokens [last_emitted, draft_0..draft_{k-1}] of every
+    speculating row, returning logits at EVERY chunk position.
+
+    chunk/arena/block_table/start/chunk_len exactly as `paged_prefill`
+    (inert rows: chunk_len 0, null-slot tables).  The candidates' K/V
+    are written into the row's pages at positions start..start+k, so an
+    accepted prefix's cache entries are already in place — the engine
+    truncates the page tail past the accept point instead of re-running
+    decode.  Returns (arena, logits (b, c, vocab)): logits[:, j] is the
+    target's next-token distribution after consuming candidate j, i.e.
+    the distribution that judges draft j (and, at j == k, the bonus
+    token's)."""
+    x = L.embed_tokens(params["embed"], cfg, chunk["tokens"])
+    return paged_prefill_embeds(params, cfg, x, arena, block_table,
+                                start, chunk_len, ffn_fn=ffn_fn,
+                                all_logits=True)
 
 
 def paged_prefill(params, cfg: ModelConfig, chunk, arena, block_table,

@@ -15,6 +15,10 @@ Architecture (one pooled memory, the paper's form):
     serve/prefix_store.py    refcounted cross-request prefix cache:
                              parent-linked hash chains, LRU eviction
                              under the watermark, host-DRAM cold spill
+    serve/speculative.py     speculative decode: draft models (truncated
+                             self-draft or a paired small model) propose
+                             k-token windows, one batched paged verify
+                             call accepts/rejects them exactly
     serve/engine.py          continuous batching: lazy allocation,
                              chunked prefill, prefix sharing, preemption,
                              the TokenEvent/FinishEvent stream
@@ -38,10 +42,12 @@ from repro.serve.kv_cache import (
     clear_slot,
 )
 from repro.serve.serve_step import (
-    make_serve_fns, make_paged_serve_fns, sample_logits, init_cache)
+    make_serve_fns, make_paged_serve_fns, make_paged_verify_fn,
+    sample_logits, init_cache)
 from repro.serve.sampling import (
     SamplingParams, SamplingState, sample_tokens, state_for_slots,
-    greedy_state)
+    greedy_state, expand_state, verify_tokens)
+from repro.serve.speculative import DraftModel
 from repro.serve.prefix_store import PrefixStore, PrefixEntry
 from repro.serve.engine import (
     ServingEngine, Request, Result, TokenEvent, FinishEvent)

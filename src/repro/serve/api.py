@@ -108,8 +108,11 @@ class LLMServer:
     """One engine, many concurrent token streams.
 
     Engine keyword arguments (`max_batch`, `max_seq`, `page_size`,
-    `mesh`, `prefill_decode_ratio`, ...) pass straight through — the
-    facade adds uid allocation, per-stream event routing, and the
+    `mesh`, `prefill_decode_ratio`, `speculate_k`/`draft` for
+    speculative decode — tokens stay byte-identical, streams just fill
+    faster; a request pins itself to plain decode with
+    `SamplingParams(speculative=False)`, ...) pass straight through —
+    the facade adds uid allocation, per-stream event routing, and the
     fork-as-stream surface.  `run()` keeps the batch-mode contract:
     drive everything submitted so far to completion and return the
     engine's `Result` list.  `max_steps` bounds the engine ticks over

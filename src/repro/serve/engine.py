@@ -38,6 +38,17 @@ emission_index)`), so tokens are a pure function of (prompt, params):
 identical across batch compositions, slot order, shard counts, and
 preempt/resume replays.
 
+With `speculate_k > 0` the engine decodes SPECULATIVELY
+(serve/speculative.py): a cheap draft model proposes a k-token window
+per slot, the window is appended onto the slot's own page chain (the
+shared boundary page COW-forked first, tail pages fresh), ONE batched
+paged-prefill verify call judges every window, and in-step
+accept/reject emits the matched prefix plus a bonus token — the
+rejected page tail truncates back off the table.  The determinism
+contract makes acceptance EXACT-MATCH against the target's own
+counter-keyed draw, so the emitted stream is byte-identical to plain
+decode; speculation only changes how many tokens one tick yields.
+
 The engine is a TOKEN STREAM: every emitted token is published as a
 `TokenEvent` and every retirement as a `FinishEvent` through ONE
 emission path; `events()` drains them, `stream()` ticks the engine and
@@ -102,7 +113,8 @@ from repro.serve.kv_cache import PagedKVArena, insert_slot, clear_slot
 from repro.serve.prefix_store import PrefixStore
 from repro.serve.sampling import (SamplingParams, state_for_slots,
                                   sample as sample_on_device)
-from repro.serve.serve_step import make_serve_fns, make_paged_serve_fns
+from repro.serve.serve_step import (make_serve_fns, make_paged_serve_fns,
+                                    make_paged_verify_fn)
 from repro.utils.logging import get_logger
 
 log = get_logger("engine")
@@ -194,6 +206,10 @@ class _Slot:
     # prefix-store hashes this slot holds a reference on (acquired at
     # admission / absorb / self-registration, released at retire/preempt)
     store_refs: set[int] = field(default_factory=set)
+    # speculative decode: context tokens the DRAFT cache row has
+    # consumed for this slot (-1 = row never synced for this tenant —
+    # the first sync resets it, clearing any previous occupant's state)
+    draft_pos: int = -1
 
     @property
     def prefilling(self) -> bool:
@@ -229,7 +245,8 @@ class ServingEngine:
                  prefill_decode_ratio: float | None = None,
                  tick_token_budget: int | None = None,
                  host_tier_pages: int | None = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 speculate_k: int = 0, draft: str | None = None):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -344,6 +361,39 @@ class ServingEngine:
             # the decode closure samples from the per-slot SamplingState
             # — the engine-wide default folds in via _resolve_sampling
             self.prefill_fn, self.decode_fn, _ = make_serve_fns(cfg)
+
+        # speculative decode: a draft model proposes `speculate_k`-token
+        # windows, ONE batched paged-prefill verify call judges them
+        # (serve/speculative.py).  `draft` picks the draft spec
+        # ("self:N" / "<arch>[@reduced]"; None = registry pairing).
+        self.speculate_k = int(speculate_k or 0)
+        self.draft = None
+        self.verify_fn = None
+        self.fused_fn = None
+        self.spec_stats = dict(windows=0, draft_tokens=0, verify_calls=0,
+                               accepted_tokens=0, emitted_tokens=0)
+        if self.speculate_k > 0:
+            if self.layout != "paged":
+                raise ValueError("speculative decode requires the paged "
+                                 "layout")
+            if not registry.has_verify(cfg):
+                raise ValueError(f"family {cfg.family!r} cannot be a "
+                                 f"speculative-decode target")
+            from repro.serve.speculative import DraftModel
+            self.draft = DraftModel(cfg, params, draft,
+                                    max_batch=max_batch, max_seq=max_seq)
+            if self.mesh is not None:
+                from repro.serve.sharded import make_sharded_verify_fn
+                self.verify_fn = make_sharded_verify_fn(
+                    cfg, self.mesh, self.pool.num_pages,
+                    arena_keys=tuple(self.arena.kv))
+            else:
+                # rewindable drafts run propose+verify+rewind as ONE
+                # jitted dispatch; state drafts keep the two-call path
+                # (their rollback replays from a host-held checkpoint)
+                self.fused_fn = self.draft.fused_fn(self.speculate_k)
+                if self.fused_fn is None:
+                    self.verify_fn = make_paged_verify_fn(cfg)
 
         self.pending: list[Request] = []
         self.slots: dict[int, _Slot] = {}        # slot index -> state
@@ -829,12 +879,13 @@ class ServingEngine:
             start[i] = pos
             clen[i] = n
             bt[i, :len(s.pages.pages)] = s.pages.pages
-        chunk = {"tokens": jnp.asarray(tokens)}
+        # np args throughout the hot-path calls: pjit's C++ fastpath
+        # converts them far cheaper than explicit device_puts
+        chunk = {"tokens": tokens}
         if patches is not None:
-            chunk["patches"] = jnp.asarray(patches)
+            chunk["patches"] = patches
         self.arena.kv, first = self.prefill_fn(
-            self.params, chunk, self.arena.kv, jnp.asarray(bt),
-            jnp.asarray(start), jnp.asarray(clen),
+            self.params, chunk, self.arena.kv, bt, start, clen,
             self._sampling_state(dict(pre)))
         self.prefill_shapes.add((b, c))
         self.prefill_tokens += int(clen.sum())
@@ -1034,7 +1085,14 @@ class ServingEngine:
         return active
 
     def _decode_paged(self):
-        active = self._decode_rows()
+        if self.draft is None:
+            self._decode_plain(self._decode_rows())
+            return
+        spec, plain = self._partition_decode()
+        self._decode_plain(plain)
+        self._speculate(spec)
+
+    def _decode_plain(self, active: dict[int, _Slot]):
         if not active:
             return
         # grow tables first (may preempt younger slots under pool pressure)
@@ -1055,10 +1113,173 @@ class ServingEngine:
             positions[i] = s.pages.num_tokens - 1   # slot appended above
             bt[i, :len(s.pages.pages)] = s.pages.pages
         self.arena.kv, nxt = self.decode_fn(
-            self.params, self.arena.kv, jnp.asarray(bt),
-            jnp.asarray(positions), jnp.asarray(tokens),
+            self.params, self.arena.kv, bt, positions, tokens,
             self._sampling_state(active))
         self._emit_decoded(active, nxt)
+
+    # ------------------------------------------------- speculative decode
+
+    def _partition_decode(self) -> tuple[dict[int, _Slot], dict[int, _Slot]]:
+        """Split this tick's decode rows between the speculative-window
+        path and plain one-token decode.  A row speculates when its
+        request opted in (`SamplingParams.speculative`), it is not
+        replaying pinned history (forced tokens would waste the window
+        — and contradict it: replay bypasses sampling entirely), and
+        its table has headroom for the k+1 candidate writes.  Under a
+        token-budget tick a speculative row charges k+1 tokens against
+        the decode share (its verify writes k+1 positions), oldest
+        first; the oldest row always runs, so decode always
+        progresses."""
+        k = self.speculate_k
+        active = {i: s for i, s in self.slots.items()
+                  if not s.prefilling and s.generated}
+        budget = self._decode_slot_budget()
+        spec: dict[int, _Slot] = {}
+        plain: dict[int, _Slot] = {}
+        for i, s in sorted(active.items(), key=lambda kv: kv[1].order):
+            wants = (s.request.sampling.speculative
+                     and s.request.replay is None
+                     and s.pages.num_tokens + k + 1 <= self.max_seq)
+            if budget is not None:
+                if budget <= 0 and (spec or plain):
+                    continue
+                budget -= (k + 1) if wants else 1
+            (spec if wants else plain)[i] = s
+        return spec, plain
+
+    def _speculate(self, spec: dict[int, _Slot]):
+        """One draft/verify window over the speculating rows:
+
+          1. SYNC the draft cache rows with their slots' context (rows
+             that decoded through the plain path, fresh tenants, and
+             fork children readmitted after preemption lag behind);
+          2. PROPOSE: a (k+1)-step draft scan emits a k-token window
+             per row, drawn with the slots' own counter-derived keys
+             (Gumbel-coupled to the target draw);
+          3. grow each slot's table for the k+1 candidate writes — COW
+             the possibly-shared partial boundary page FIRST, then
+             append (the appended tail pages are fresh allocations, so
+             the later truncate can never strand a prefix partner);
+          4. VERIFY: one batched paged-prefill walk writes all
+             candidates' KV and returns the exact tokens plain decode
+             would emit plus the matched-prefix length.  For rewindable
+             drafts on a single arena, steps 2+4 (and the draft rewind)
+             run as ONE fused dispatch (`DraftModel.fused_fn`) — the
+             proposed window never visits the host;
+          5. emit the accepted prefix + bonus token through the single
+             `_emit` path, TRUNCATE the rejected page tail, and land
+             the outcome in the draft cache (`rollback`)."""
+        # plain decode ran first this tick and may have preempted
+        # younger speculating slots under pool pressure
+        spec = {i: s for i, s in spec.items() if self.slots.get(i) is s}
+        if not spec:
+            return
+        k = self.speculate_k
+        draft = self.draft
+        entries = []
+        for i, s in spec.items():
+            # the draft's target context: every token except the newest
+            # (s.last_token is the propose scan's first input)
+            needed = s.request.virtual_len + len(s.generated) - 1
+            reset = not 0 <= s.draft_pos <= needed
+            pos = 0 if reset else s.draft_pos
+            if reset or pos < needed:
+                ctx = np.concatenate(
+                    [np.asarray(s.request.prompt, np.int32),
+                     np.asarray(s.generated[:-1], np.int32)])
+                entries.append((i, ctx[pos:needed], reset))
+            s.draft_pos = needed
+        draft.sync(entries)
+
+        last = np.zeros((self.max_batch,), np.int32)
+        for i, s in spec.items():
+            last[i] = s.last_token
+        st = self._sampling_state(spec)
+        # with a fused step (rewindable draft, single arena) the propose
+        # scan runs INSIDE the verify dispatch — the window never visits
+        # the host; otherwise draft first, verify second
+        proposed = (None if self.fused_fn is not None
+                    else draft.propose(last, st, k))
+        self.spec_stats["windows"] += len(spec)
+        self.spec_stats["draft_tokens"] += len(spec) * k
+
+        for i, s in list(spec.items()):
+            if self.slots.get(i) is not s:
+                continue                 # preempted growing an older slot
+            if s.pages.num_tokens % self.page_size:
+                # the window's first write lands in the current partial
+                # last page — COW it BEFORE appending: the appended
+                # pages are fresh, so append-then-cow (the 1-token
+                # `_grow_for_write` order) would check the wrong page.
+                # At a page boundary there is nothing to COW — every
+                # written page stays shared, every new page is private.
+                if not self._with_preemption(
+                        s, lambda s=s: self.arena.cow_for_write(s.pages)):
+                    continue             # slot yielded its pages
+            self._with_preemption(
+                s, lambda s=s: s.pages.append_tokens(k + 1))
+        live = {i: s for i, s in spec.items() if self.slots.get(i) is s}
+
+        # rows preempted mid-window (and rows that never speculated)
+        # grow their draft context by 0 tokens: rollback restores their
+        # pre-propose checkpoint state
+        n = np.zeros((self.max_batch,), np.int32)
+        target = np.zeros((self.max_batch, k + 1), np.int32)
+        if live:
+            b = self.max_batch
+            start = np.zeros((b,), np.int32)
+            bt = np.full((b, self.max_pages), self.arena.null_page,
+                         np.int32)
+            for i, s in live.items():
+                start[i] = s.pages.num_tokens - (k + 1)
+                bt[i, :len(s.pages.pages)] = s.pages.pages
+            if self.fused_fn is not None:
+                mask = np.zeros((b,), bool)
+                mask[list(live)] = True
+                (self.arena.kv, draft.cache, target,
+                 accept) = self.fused_fn(
+                    self.params, draft.params, draft.cache,
+                    last, st, self.arena.kv, bt, start, mask)
+            else:
+                tokens = np.zeros((b, k + 1), np.int32)
+                clen = np.zeros((b,), np.int32)
+                for i, s in live.items():
+                    tokens[i, 0] = s.last_token
+                    tokens[i, 1:] = proposed[i]
+                    clen[i] = k + 1
+                self.arena.kv, target, accept = self.verify_fn(
+                    self.params, {"tokens": tokens}, self.arena.kv,
+                    bt, start, clen, proposed,
+                    self._sampling_state(live))
+            target = np.asarray(target)
+            accept = np.asarray(accept)
+            self.spec_stats["verify_calls"] += 1
+            for i, s in live.items():
+                sp = s.request.sampling
+                emitted = 0
+                for j in range(int(accept[i]) + 1):
+                    tok = int(target[i, j])
+                    self._emit(s, tok)
+                    emitted += 1
+                    if tok in sp.stop \
+                            or len(s.generated) >= sp.max_new_tokens:
+                        break            # the slot retires this tick
+                # drop the rejected tail: positions start..start+emitted-1
+                # hold the KV of [last, t_0..t_{emitted-2}] — exactly the
+                # written-positions invariant (the newest emitted token's
+                # KV is pending); the freed pages were appended above,
+                # never shared, never registered
+                s.pages.truncate(int(start[i]) + emitted)
+                s.draft_pos += emitted
+                n[i] = emitted
+                self.spec_stats["accepted_tokens"] += int(accept[i])
+                self.spec_stats["emitted_tokens"] += emitted
+        if proposed is not None:
+            draft.rollback(target, n)
+        # the fused step already landed its rewind in-jit (pos grows by
+        # accept+1 on live rows): a row that emitted FEWER tokens hit a
+        # stop or its budget and retires this tick, so its stale draft
+        # row never serves again — no correction needed
 
     def _decode_contiguous(self):
         active = self._decode_rows()
@@ -1068,7 +1289,7 @@ class ServingEngine:
         for i, s in active.items():
             tokens[i] = s.last_token
         self.cache, nxt = self.decode_fn(
-            self.params, self.cache, jnp.asarray(tokens),
+            self.params, self.cache, tokens,
             self._sampling_state(active))
         self._emit_decoded(active, nxt)
 
@@ -1199,6 +1420,14 @@ class ServingEngine:
         self.slots[free[0]] = child
         # state that cannot share pages (hybrid conv/SSM rows) is copied
         self.arena.copy_slot_state(src_i, free[0])
+        # the child's page_hashes stay EMPTY on purpose: its pages are
+        # the parent's (plus COW'd speculative tails) — re-registering
+        # them from the child would double-publish pages the parent
+        # already owns in the store, and a retiring reject-heavy child
+        # must never re-register hashes for pages it never wrote
+        if self.draft is not None:
+            self.draft.copy_row(src_i, free[0])
+            child.draft_pos = src.draft_pos
 
     # ------------------------------------------------------------- stats
 
@@ -1229,6 +1458,13 @@ class ServingEngine:
         }
         if self.prefix_store is not None:       # prompt-page reuse traffic
             out["prefix_store"] = self.prefix_store.stats()
+        if self.draft is not None:              # speculative decode traffic
+            sp = dict(self.spec_stats)
+            sp["k"] = self.speculate_k
+            sp["accept_rate"] = (sp["accepted_tokens"] / sp["draft_tokens"]
+                                 if sp["draft_tokens"] else 0.0)
+            sp["draft"] = self.draft.stats()
+            out["speculative"] = sp
         if self.mesh is not None:               # near-memory sharded arena
             out["shards"] = self.pool.shard_stats()
             out["shard_kv_bytes"] = self.arena.shard_kv_bytes()

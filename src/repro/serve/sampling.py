@@ -55,6 +55,11 @@ class SamplingParams:
     max_new_tokens / stop: generation budget and stop-token set (the
                  retire conditions, carried here so one object fully
                  describes a generation).
+    speculative: opt this request into speculative decode when the
+                 engine runs with a draft model (True by default —
+                 speculation never changes the token stream, only how
+                 many emissions one tick produces).  False pins the
+                 request to plain one-token decode.
     """
     temperature: float = 0.0
     top_k: int = 0
@@ -62,6 +67,7 @@ class SamplingParams:
     seed: int = 0
     max_new_tokens: int = 32
     stop: tuple[int, ...] = ()
+    speculative: bool = True
 
     def validate(self) -> "SamplingParams":
         if self.temperature < 0.0:
@@ -106,8 +112,11 @@ def state_for_slots(batch: int, entries) -> SamplingState:
         p[row] = sp.top_p
         seed[row] = np.uint32(sp.seed & 0xFFFFFFFF)
         step[row] = emitted
-    return SamplingState(jnp.asarray(t), jnp.asarray(k), jnp.asarray(p),
-                         jnp.asarray(seed), jnp.asarray(step))
+    # host numpy leaves on purpose: jitted callees convert them through
+    # pjit's C++ fastpath, ~30x cheaper than an explicit per-array
+    # device_put from Python — the serving hot loop passes a fresh
+    # state every tick
+    return SamplingState(t, k, p, seed, step)
 
 
 def greedy_state(batch: int) -> SamplingState:
@@ -165,3 +174,56 @@ def sample_tokens(logits, state: SamplingState):
 # contiguous layout's batch=1 admission prefill) — still samples on
 # device, so the host never argmaxes
 sample = jax.jit(sample_tokens)
+
+
+# ------------------------------------------------ speculative verification
+#
+# The determinism contract above makes acceptance a COUPLED draw, not an
+# independent coin flip: because the token at emission index e is a pure
+# function of (target logits at e, fold_in(key(seed), e)), the verify
+# step can COMPUTE the exact token non-speculative decode would have
+# emitted at every window position — greedy rows via argmax, sampled
+# rows via the same threefry counter the plain path would have used (a
+# Gumbel-argmax draw, so a draft sampled with the same keys is
+# Gumbel-coupled and agrees whenever draft ≈ target).  Draft j is
+# accepted iff it EQUALS that target token; the residual distribution of
+# classical rejection sampling collapses to the point mass on it, which
+# is why the emitted stream is byte-identical to non-speculative decode
+# BY CONSTRUCTION — acceptance only decides how many of the
+# already-correct tokens one tick emits.
+
+
+def expand_state(state: SamplingState, r: int) -> SamplingState:
+    """Tile a (b,) SamplingState to (b*r,) window rows: row i*r+j keeps
+    slot i's knobs with emission counter step[i]+j, so `sample_tokens`
+    over a flattened (b*r, V) verify-logit block draws every window
+    position with exactly the key plain decode would have used."""
+    step = (state.step[:, None] + jnp.arange(r, dtype=jnp.int32)[None, :])
+    return SamplingState(
+        temperature=jnp.repeat(state.temperature, r),
+        top_k=jnp.repeat(state.top_k, r),
+        top_p=jnp.repeat(state.top_p, r),
+        seed=jnp.repeat(state.seed, r),
+        step=step.reshape(-1))
+
+
+def verify_tokens(logits, draft, state: SamplingState):
+    """Accept/reject a draft window against the target distribution.
+
+    logits: (b, k+1, V) — position j is the target's next-token
+    distribution after candidate j of the verify chunk
+    [last_emitted, draft_0..draft_{k-1}]; draft: (b, k) proposed ids;
+    state: (b,) SamplingState whose `step` is each slot's NEXT emission
+    index.  Returns (target (b, k+1) int32, accept (b,) int32): `target`
+    holds the exact tokens plain decode would emit at emission indices
+    step..step+k, `accept` the length of the matching draft prefix —
+    the engine emits target[:accept+1] (the +1 is the bonus token from
+    the last accepted position's logits, free because the verify walk
+    already computed them)."""
+    b, r, V = logits.shape
+    k = r - 1
+    flat = sample_tokens(logits.reshape(b * r, V), expand_state(state, r))
+    target = flat.reshape(b, r)
+    matches = (draft == target[:, :k]).astype(jnp.int32)
+    accept = jnp.sum(jnp.cumprod(matches, axis=1), axis=1).astype(jnp.int32)
+    return target, accept

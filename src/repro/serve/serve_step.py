@@ -27,7 +27,8 @@ import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
 from repro.models import registry
-from repro.serve.sampling import SamplingState, greedy_state, sample_tokens
+from repro.serve.sampling import (SamplingState, greedy_state, sample_tokens,
+                                  verify_tokens)
 
 
 def sample_logits(logits, key, temperature: float):
@@ -113,6 +114,39 @@ def make_paged_serve_fns(cfg: ModelConfig):
         return arena, sample_tokens(logits, sampling)
 
     return prefill_chunk, decode
+
+
+def make_paged_verify_fn(cfg: ModelConfig):
+    """Jitted speculative-verify step over the family's `paged_verify`
+    hook — ONE ragged paged-prefill walk judges a whole k-token draft
+    window per slot.
+
+    verify(params, chunk, arena, block_table, start (b,), chunk_len (b,),
+           draft (b, k), sampling) -> (arena, target (b, k+1), accept (b,))
+
+    `chunk` is {"tokens": (b, k+1)} — row i's candidates
+    [last_emitted, draft_0..draft_{k-1}] written at absolute positions
+    start[i]..start[i]+k (chunk_len k+1 active, 0 inert like prefill).
+    `target` holds the exact tokens plain decode would emit at emission
+    indices sampling.step..sampling.step+k (greedy argmax or the
+    counter-keyed threefry draw — serve/sampling.verify_tokens), and
+    `accept` the matched draft prefix length; both leave the step as
+    int32, logits never cross the host boundary."""
+    fam = registry.get_family(cfg)
+    if not registry.has_verify(cfg):
+        raise ValueError(f"family {cfg.family!r} has no speculative-verify "
+                         f"path")
+    cpu = jax.default_backend() == "cpu"
+
+    @partial(jax.jit, donate_argnums=() if cpu else (2,))
+    def verify(params, chunk, arena, block_table, start, chunk_len, draft,
+               sampling: SamplingState):
+        arena, logits = fam.paged_verify(params, cfg, chunk, arena,
+                                         block_table, start, chunk_len)
+        target, accept = verify_tokens(logits, draft, sampling)
+        return arena, target, accept
+
+    return verify
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_seq: int):

@@ -11,7 +11,8 @@ package entirely — every single-arena path is unchanged.
 """
 from repro.serve.sharded.arena import ShardedPagedKVArena
 from repro.serve.sharded.serve_step import (MEM_AXIS, make_sharded_serve_fns,
+                                            make_sharded_verify_fn,
                                             lowered_sharded_hlo)
 
 __all__ = ["ShardedPagedKVArena", "MEM_AXIS", "make_sharded_serve_fns",
-           "lowered_sharded_hlo"]
+           "make_sharded_verify_fn", "lowered_sharded_hlo"]

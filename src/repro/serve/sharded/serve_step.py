@@ -39,7 +39,8 @@ from repro.launch.mesh import MEM_AXIS
 from repro.models.config import ModelConfig
 from repro.models import registry
 from repro.serve.kv_cache import PAGED_KV_KEYS
-from repro.serve.sampling import SamplingState, greedy_state, sample_tokens
+from repro.serve.sampling import (SamplingState, greedy_state, sample_tokens,
+                                  verify_tokens)
 
 
 def make_sharded_serve_fns(cfg: ModelConfig, mesh: Mesh, num_pages: int,
@@ -93,6 +94,45 @@ def make_sharded_serve_fns(cfg: ModelConfig, mesh: Mesh, num_pages: int,
         return arena, sample_tokens(logits, sampling)
 
     return prefill_chunk, decode
+
+
+def make_sharded_verify_fn(cfg: ModelConfig, mesh: Mesh, num_pages: int,
+                           *, arena_keys=tuple(PAGED_KV_KEYS)):
+    """Sharded analogue of `serve_step.make_paged_verify_fn`: the verify
+    walk runs per shard in partials mode (summary-sized merge, like
+    prefill), the merged (b, k+1, vocab) logits come back replicated,
+    and accept/reject collapses them to int32 in-jit — identical on
+    every shard, so the accepted stream is byte-equal to one device."""
+    fam = registry.get_family(cfg)
+    if not registry.has_verify(cfg):
+        raise ValueError(f"family {cfg.family!r} has no speculative-verify "
+                         f"path")
+    n = mesh.shape[MEM_AXIS]
+    if num_pages % n:
+        raise ValueError(f"num_pages {num_pages} must divide over {n} shards")
+    scfg = cfg.replace(mem_axis=MEM_AXIS)
+    arena_specs = {k: (P(None, MEM_AXIS) if is_page_leaf(k) else P())
+                   for k in arena_keys}
+    rep = P()
+    cpu = jax.default_backend() == "cpu"
+
+    def verify_body(params, chunk, arena, bt, start, clen):
+        return fam.paged_verify(params, scfg, chunk, arena, bt, start, clen)
+
+    verify_sharded = shard_map(
+        verify_body, mesh=mesh,
+        in_specs=(rep, rep, arena_specs, rep, rep, rep),
+        out_specs=(arena_specs, rep), check_rep=False)
+
+    @partial(jax.jit, donate_argnums=() if cpu else (2,))
+    def verify(params, chunk, arena, block_table, start, chunk_len, draft,
+               sampling: SamplingState):
+        arena, logits = verify_sharded(params, chunk, arena, block_table,
+                                       start, chunk_len)
+        target, accept = verify_tokens(logits, draft, sampling)
+        return arena, target, accept
+
+    return verify
 
 
 def lowered_sharded_hlo(cfg: ModelConfig, mesh: Mesh, which: str = "decode",

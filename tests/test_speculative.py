@@ -1,0 +1,377 @@
+"""Speculative decode: draft-propose, one-call batched verify, exact
+accept/reject (serve/speculative.py + the engine's `speculate_k` path).
+
+The load-bearing property is BYTE-IDENTITY: the determinism contract
+makes acceptance an exact match against the target's own counter-keyed
+draw, so the emitted stream must equal non-speculative decode token for
+token — greedy AND sampled, any k, any draft quality, across
+preemption/resume and shard counts.  Speculation may only change how
+many tokens one tick emits.
+
+Also here: the `SequencePageTable.truncate` rollback laws (the verify
+step appends k+1 candidate positions, rejection truncates them back
+off), the draft registry resolution rules, and the satellite
+regression — a reject-heavy FORK CHILD retiring must never re-register
+tail page hashes nor corrupt prefix-store refcounts.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core.unimem import SequencePageTable, UniMemPool
+from repro.models import registry
+from repro.serve import ServingEngine, Request, SamplingParams, DraftModel
+from repro.serve.sampling import (expand_state, sample_tokens,
+                                  state_for_slots, verify_tokens)
+
+from conftest import TINY
+from test_sharded_serve import run_with_devices
+
+
+@pytest.fixture(scope="module")
+def dense_cfg():
+    return TINY["dense"].replace(max_seq=128)
+
+
+@pytest.fixture(scope="module")
+def dense_params(dense_cfg):
+    return registry.get_family(dense_cfg).init(jax.random.key(0), dense_cfg)
+
+
+def _requests(cfg, n=4, max_new=12, seed=0, **sp_kw):
+    """A mixed greedy/sampled request set (odd uids sample)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for u in range(n):
+        prompt = rng.integers(1, cfg.vocab_size - 1,
+                              size=int(rng.integers(4, 20))).astype(np.int32)
+        sp = SamplingParams(temperature=0.0 if u % 2 == 0 else 0.8,
+                            top_k=16 if u == 3 else 0, seed=u,
+                            max_new_tokens=max_new, **sp_kw)
+        out.append(Request(uid=u, prompt=prompt, sampling=sp))
+    return out
+
+
+def _run(cfg, params, reqs, **kw):
+    eng = ServingEngine(cfg, params, max_batch=4, max_seq=cfg.max_seq,
+                        page_size=8, **kw)
+    for r in reqs:
+        eng.submit(r)
+    return {r.uid: tuple(r.tokens) for r in eng.run()}, eng
+
+
+# ------------------------------------------------- page-table truncate laws
+
+def test_truncate_frees_tail_pages():
+    pool = UniMemPool(8, 4)
+    seq = SequencePageTable(pool)
+    seq.append_tokens(13)                       # 4 pages
+    dropped = seq.truncate(6)                   # back to 2 pages
+    assert len(dropped) == 2
+    assert seq.num_tokens == 6 and len(seq.pages) == 2
+    assert pool.free_pages == 6
+    assert seq.truncate(6) == []                # no-op at the same length
+    with pytest.raises(ValueError):
+        seq.truncate(7)                         # truncate never grows
+    seq.release()
+    assert pool.free_pages == 8
+
+
+def test_truncate_after_cow_never_strands_a_fork_peer():
+    """The speculative write order (COW boundary page, append fresh
+    tail, truncate back) leaves a prefix-sharing peer untouched."""
+    pool = UniMemPool(8, 4)
+    parent = SequencePageTable(pool)
+    parent.append_tokens(6)                     # 2 pages, last partial
+    child = parent.fork()
+    assert child.cow_last_page() is not None    # private boundary page
+    child.append_tokens(5)                      # speculative tail: +2 pages
+    child.truncate(7)                           # reject back to 7 tokens
+    assert child.num_tokens == 7 and len(child.pages) == 2
+    assert parent.pages[1] != child.pages[1]    # COW split held
+    child.release()
+    assert parent.num_tokens == 6               # peer fully intact
+    parent.release()
+    assert pool.free_pages == 8
+
+
+# ----------------------------------------------- verify_tokens is the oracle
+
+def test_verify_tokens_matches_per_position_plain_draws():
+    """target[:, j] must be EXACTLY what sample_tokens would emit from
+    logits[:, j] at emission counter step+j; accept is the matched
+    draft prefix length."""
+    b, k, V = 3, 4, 32
+    rng = np.random.default_rng(1)
+    logits = jnp.asarray(rng.standard_normal((b, k + 1, V)), jnp.float32)
+    state = state_for_slots(b, [
+        (0, SamplingParams(), 5),                            # greedy
+        (1, SamplingParams(temperature=0.7, seed=9), 2),     # sampled
+        (2, SamplingParams(temperature=1.1, top_k=8, seed=3), 0),
+    ])
+    want = np.zeros((b, k + 1), np.int64)
+    for j in range(k + 1):
+        st_j = state._replace(step=state.step + j)
+        want[:, j] = np.asarray(sample_tokens(logits[:, j], st_j))
+
+    draft = np.asarray(want[:, :k], np.int32).copy()
+    draft[0, 2] = (draft[0, 2] + 1) % V          # row 0 diverges at j=2
+    draft[2, 0] = (draft[2, 0] + 1) % V          # row 2 diverges at j=0
+    target, accept = verify_tokens(logits, jnp.asarray(draft), state)
+    np.testing.assert_array_equal(np.asarray(target), want)
+    np.testing.assert_array_equal(np.asarray(accept), [2, k, 0])
+
+
+def test_expand_state_advances_counters_per_window_position():
+    state = state_for_slots(2, [(0, SamplingParams(seed=4), 7),
+                                (1, SamplingParams(temperature=0.5,
+                                                   seed=5), 1)])
+    ex = expand_state(state, 3)
+    np.testing.assert_array_equal(np.asarray(ex.step), [7, 8, 9, 1, 2, 3])
+    np.testing.assert_array_equal(np.asarray(ex.seed), [4, 4, 4, 5, 5, 5])
+    np.testing.assert_array_equal(np.asarray(ex.temperature),
+                                  [0, 0, 0, 0.5, 0.5, 0.5])
+
+
+# --------------------------------------------------------- draft registry
+
+def test_registry_verify_eligibility_matrix():
+    assert registry.has_verify(TINY["dense"])
+    assert registry.has_verify(TINY["moe"])
+    for fam in ("ssm", "hybrid", "vlm", "encoder"):
+        assert not registry.has_verify(TINY[fam]), fam
+
+
+def test_registry_draft_pairs_and_self_fallback():
+    assert registry.default_draft(TINY["dense"]) == "self:1"
+    paired = TINY["dense"].replace(name="yi-9b")
+    assert registry.default_draft(paired) == "mamba2-130m"
+
+
+def test_self_draft_config_and_params_share_embeddings(dense_cfg,
+                                                       dense_params):
+    dcfg = registry.draft_config(dense_cfg, "self:1")
+    assert dcfg.num_layers == 1
+    assert dcfg.vocab_size == dense_cfg.vocab_size
+    dparams = registry.self_draft_params(dense_params, dcfg)
+    assert dparams["embed"] is dense_params["embed"]     # shared buffers
+    lay = jax.tree.leaves(dparams["layers"])[0]
+    assert lay.shape[0] == 1
+    with pytest.raises(ValueError):
+        registry.draft_config(dense_cfg, f"self:{dense_cfg.num_layers}")
+
+
+def test_paired_draft_config_coerces_vocab(dense_cfg):
+    dcfg = registry.draft_config(dense_cfg, "mamba2-130m@reduced")
+    assert dcfg.family == "ssm"
+    assert dcfg.vocab_size == dense_cfg.vocab_size
+    assert dcfg.max_seq >= dense_cfg.max_seq
+    with pytest.raises(ValueError):
+        registry.draft_config(dense_cfg, "mamba2-130m@bogus")
+
+
+def test_draft_model_rewindable_split(dense_cfg, dense_params):
+    self_d = DraftModel(dense_cfg, dense_params, "self:1",
+                        max_batch=2, max_seq=64)
+    assert self_d.rewindable                     # pure KV cache
+    paired = DraftModel(dense_cfg, dense_params, "mamba2-130m@reduced",
+                        max_batch=2, max_seq=64)
+    assert not paired.rewindable                 # recurrent state replays
+
+
+@pytest.mark.parametrize("spec", ["self:1", "mamba2-130m@reduced"])
+def test_draft_rollback_equals_fresh_context(dense_cfg, dense_params, spec):
+    """After propose + rollback(n), the draft's next window must equal a
+    FRESH draft fed the accepted context — rewind (KV) and masked
+    replay (recurrent state) are both exact."""
+    k, b = 3, 2
+    ctx = np.asarray([[3, 5, 7, 9], [11, 13, 17, 19]], np.int32)
+    st = state_for_slots(b, [(0, SamplingParams(), 0),
+                             (1, SamplingParams(temperature=0.9, seed=2), 0)])
+
+    d1 = DraftModel(dense_cfg, dense_params, spec, max_batch=b, max_seq=64)
+    d1.sync([(i, ctx[i, :-1], True) for i in range(b)])
+    w1 = d1.propose(ctx[:, -1], st, k)
+    accepted = np.asarray([2, 0], np.int32)      # row 0 keeps 2, row 1 none
+    target = np.concatenate([w1, np.zeros((b, 1), np.int32)], axis=1)
+    d1.rollback(target, accepted + 1)
+    st2 = st._replace(step=st.step + accepted + 1)
+    # row i's next input is its newest EMITTED token: target[i, accepted[i]]
+    nxt1 = np.asarray([target[0, accepted[0]], target[1, accepted[1]]],
+                      np.int32)
+    w1b = d1.propose(nxt1, st2, k)
+
+    d2 = DraftModel(dense_cfg, dense_params, spec, max_batch=b, max_seq=64)
+    full = [np.concatenate([ctx[i], w1[i, :accepted[i]],
+                            nxt1[i:i + 1]]) for i in range(b)]
+    d2.sync([(i, full[i][:-1], True) for i in range(b)])
+    w2 = d2.propose(nxt1, st2, k)
+    np.testing.assert_array_equal(w1b, w2)
+
+
+# --------------------------------------------- engine byte-identity matrix
+
+@pytest.mark.parametrize("k", [1, 2, 4])
+def test_speculative_streams_byte_identical(dense_cfg, dense_params, k):
+    reqs = _requests(dense_cfg)
+    base, _ = _run(dense_cfg, dense_params, _requests(dense_cfg))
+    got, eng = _run(dense_cfg, dense_params, reqs,
+                    speculate_k=k, draft="self:1")
+    assert got == base
+    st = eng.stats()["speculative"]
+    assert st["windows"] > 0 and st["verify_calls"] > 0
+    assert 0.0 <= st["accept_rate"] <= 1.0
+    assert st["k"] == k
+    assert eng.pool.stats().allocated_pages == 0
+
+
+def test_speculative_moe_target(dense_cfg):
+    cfg = TINY["moe"].replace(max_seq=128)
+    params = registry.get_family(cfg).init(jax.random.key(1), cfg)
+    base, _ = _run(cfg, params, _requests(cfg, n=3, max_new=8))
+    got, _ = _run(cfg, params, _requests(cfg, n=3, max_new=8),
+                  speculate_k=2, draft="self:1")
+    assert got == base
+
+
+def test_speculative_paired_mamba2_draft(dense_cfg, dense_params):
+    """The state-draft path end to end: recurrent draft cache, masked
+    replay rollback — stream still byte-identical."""
+    base, _ = _run(dense_cfg, dense_params, _requests(dense_cfg, n=3))
+    got, eng = _run(dense_cfg, dense_params, _requests(dense_cfg, n=3),
+                    speculate_k=2, draft="mamba2-130m@reduced")
+    assert got == base
+    assert not eng.draft.rewindable
+
+
+def test_speculative_opt_out_pins_plain_decode(dense_cfg, dense_params):
+    reqs = _requests(dense_cfg, speculative=False)
+    base, _ = _run(dense_cfg, dense_params, _requests(dense_cfg,
+                                                      speculative=False))
+    got, eng = _run(dense_cfg, dense_params, reqs,
+                    speculate_k=4, draft="self:1")
+    assert got == base
+    assert eng.stats()["speculative"]["windows"] == 0
+
+
+def test_speculative_survives_preempt_resume(dense_cfg, dense_params):
+    """A pool too small for the batch forces preemption mid-generation;
+    readmitted slots replay pinned history through the PLAIN path, then
+    rejoin speculation — the stream stays byte-identical."""
+    reqs = _requests(dense_cfg, n=4, max_new=16, seed=3)
+    base, _ = _run(dense_cfg, dense_params,
+                   _requests(dense_cfg, n=4, max_new=16, seed=3))
+    got, eng = _run(dense_cfg, dense_params, reqs, pool_pages=12,
+                    speculate_k=4, draft="self:1")
+    assert got == base
+    assert eng.pool.stats().allocated_pages == 0
+
+
+def test_speculation_respects_stop_tokens(dense_cfg, dense_params):
+    """A stop token inside an accepted window must end the stream at the
+    stop, exactly like plain decode (no tail emissions from the same
+    window)."""
+    def reqs():
+        out = _requests(dense_cfg, n=2, max_new=24, seed=5)
+        plain, _ = _run(dense_cfg, dense_params,
+                        _requests(dense_cfg, n=2, max_new=24, seed=5))
+        # stop each stream on a token it actually emits, mid-generation
+        stops = {u: t[len(t) // 2] for u, t in plain.items()}
+        from dataclasses import replace
+        for r in out:
+            r.sampling = replace(r.sampling, stop=(int(stops[r.uid]),))
+        return out
+
+    base, _ = _run(dense_cfg, dense_params, reqs())
+    got, _ = _run(dense_cfg, dense_params, reqs(),
+                  speculate_k=4, draft="self:1")
+    assert got == base
+    for t in got.values():
+        assert len(t) < 24                       # actually stopped early
+
+
+# ------------------------------------ satellite: fork-child retire hygiene
+
+def test_reject_heavy_fork_child_retires_clean(dense_cfg, dense_params):
+    """A fork child decodes speculatively over COW pages (reject-heavy:
+    its sampled regime disagrees with the greedy-coupled draft often),
+    then retires.  The child must never (re-)register page hashes — its
+    tail pages were COW copies and fresh speculative pages, not written
+    prefix pages — and store/pool refcounts must balance exactly."""
+    eng = ServingEngine(dense_cfg, dense_params, max_batch=4,
+                        max_seq=dense_cfg.max_seq, page_size=8,
+                        prefix_cache=True, speculate_k=4, draft="self:1")
+    prompt = (np.arange(24, dtype=np.int32) * 5 + 1) % dense_cfg.vocab_size
+    eng.submit(Request(uid=0, prompt=prompt,
+                       sampling=SamplingParams(max_new_tokens=30)))
+    while not any(s.generated for s in eng.slots.values()):
+        eng.step()
+    registered = eng.prefix_store.registered_pages
+    for new_uid, seed in ((1, 11), (2, 12)):     # reject-heavy children
+        eng.fork(0, new_uid, sampling=SamplingParams(
+            temperature=1.3, seed=seed, max_new_tokens=30))
+    eng.run()
+    store = eng.prefix_store
+    # nobody registered anything after the forks: the children's pages
+    # were inherited/COW'd, never fresh-written prefix pages
+    assert store.registered_pages == registered
+    # every entry idles at refs 0 (all tables retired) and its page is
+    # still allocated exactly once — held by the store's own reference
+    assert store.idle_pages == len(store)
+    for h in list(store._entries):
+        e = store.entry(h)
+        assert e.refs == 0
+        assert eng.pool.is_allocated(e.page)
+        assert store.hash_of(e.page) == h        # reverse map consistent
+    # pool accounting: only the store's pinned pages remain
+    stats = eng.pool.stats()
+    assert stats.allocated_pages == len(store) == stats.pinned_pages
+    store.drop_all()
+    assert eng.pool.stats().allocated_pages == 0
+
+
+# ------------------------------------------------------- 8-shard parity
+
+@pytest.mark.slow
+def test_speculative_tokens_identical_across_shard_counts():
+    """Determinism matrix: speculate {off, on} x shards {1, 8} — one
+    stream.  The sharded verify merges per-shard partials exactly like
+    prefill, and accept/reject runs identically on every shard."""
+    run_with_devices("""
+        import numpy as np, jax
+        from conftest import TINY
+        from repro.models import registry
+        from repro.serve import ServingEngine, Request, SamplingParams
+        from repro.launch.mesh import make_mem_mesh
+
+        cfg = TINY["dense"]
+        params = registry.get_family(cfg).init(jax.random.key(0), cfg)
+        rng = np.random.default_rng(21)
+        reqs = [dict(uid=i,
+                     prompt=rng.integers(0, cfg.vocab_size,
+                                         int(rng.integers(4, 24))
+                                         ).astype(np.int32),
+                     sampling=SamplingParams(
+                         temperature=0.0 if i % 2 else 0.7,
+                         top_k=8 if i == 3 else 0, seed=i,
+                         max_new_tokens=8))
+                for i in range(4)]
+
+        def run(mesh, **kw):
+            eng = ServingEngine(cfg, params, max_batch=2, max_seq=64,
+                                page_size=8, mesh=mesh, prefill_chunk=8,
+                                **kw)
+            for r in reqs:
+                eng.submit(Request(**r))
+            return {r.uid: tuple(r.tokens) for r in eng.run()}
+
+        plain = run(None)
+        for k in (1, 2):
+            assert run(None, speculate_k=k, draft="self:1") == plain, k
+            assert run(make_mem_mesh(8), speculate_k=k,
+                       draft="self:1") == plain, k
+        print("speculative parity across shard counts OK")
+    """)
