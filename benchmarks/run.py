@@ -21,11 +21,12 @@ from benchmarks import (
     ws_dataflow,
     serve_throughput,
     paged_kernel_bench,
+    traffic_gen,
 )
 
 MODULES = [table1_datapath, table23_diebench, table4_cost,
            table57_projection, resnet50_throughput, ws_dataflow,
-           serve_throughput, paged_kernel_bench]
+           serve_throughput, paged_kernel_bench, traffic_gen]
 
 
 def main() -> int:

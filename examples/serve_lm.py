@@ -5,7 +5,15 @@ sharded serving.
     PYTHONPATH=src python examples/serve_lm.py [--devices N] [--stream]
         [--temperature T] [--top-k K] [--top-p P] [--seed S]
         [--kv-dtype int8] [--host-tier-pages N] [--prefix-cache]
-        [--speculate K] [--draft self:1]
+        [--speculate K] [--draft self:1] [--connect host:port]
+
+`--connect host:port` skips model setup entirely and runs as a NETWORK
+CLIENT against a running front (`python -m repro.launch.serve --reduced
+--port 8400 --tenant-budget alpha:3,beta:1`): two tenants submit a
+burst storm of concurrent streams over localhost SSE, one stream is
+aborted mid-flight (the server reclaims its pages), and the demo prints
+per-tenant TTFT plus the server's own tenant token shares — weighted
+max-min fairness observed from the outside.
 
 `--speculate K` decodes speculatively (serve/speculative.py): a draft
 (`--draft`, default `self:1` = the target's first layer sharing its
@@ -93,6 +101,72 @@ def demo_stream(cfg, params, sp, seed: int, mesh=None):
     print(f"fork: {shared} pages shared at branch point")
     print(f"  greedy  : {a.tokens}")
     print(f"  sampled : {b.tokens}")
+
+
+def demo_connect(target: str, seed: int = 0):
+    """Network-client demo against a running front: two tenants, a
+    burst storm, one mid-flight abort, per-tenant fairness printed."""
+    import asyncio
+    import time
+
+    import numpy as np
+
+    from repro.serve.frontend import ServeClient
+    from repro.serve.sampling import SamplingParams
+
+    host, _, port = target.rpartition(":")
+    client = ServeClient(host or "127.0.0.1", int(port))
+    rng = np.random.default_rng(seed)
+
+    async def one(tenant, prompt, params, abort_after=None):
+        t0 = time.perf_counter()
+        st = await client.submit(prompt, params, tenant=tenant)
+        ttft, n = None, 0
+        async for event, data in st:
+            if event == "token" and data["sid"] == 0:
+                n += 1
+                if ttft is None:
+                    ttft = time.perf_counter() - t0
+                if abort_after is not None and n >= abort_after:
+                    await st.abort()
+                    return dict(tenant=tenant, ttft=ttft, tokens=n,
+                                aborted=True)
+            elif event == "error":
+                raise RuntimeError(f"{data['code']}: {data['message']}")
+        return dict(tenant=tenant, ttft=ttft, tokens=n, aborted=False)
+
+    async def storm():
+        jobs = []
+        for i in range(8):                    # burst: all submitted at once
+            tenant = "alpha" if i % 2 == 0 else "beta"
+            prompt = rng.integers(1, 100, int(rng.integers(6, 24))).tolist()
+            jobs.append(one(tenant, prompt,
+                            SamplingParams(max_new_tokens=10, seed=seed + i)))
+        jobs.append(one("beta", rng.integers(1, 100, 8).tolist(),
+                        SamplingParams(max_new_tokens=40), abort_after=3))
+        obs = await asyncio.gather(*jobs)
+        stats = await client.stats()
+        return obs, stats
+
+    print(f"== network client vs {client.host}:{client.port} ==")
+    obs, stats = asyncio.run(storm())
+    for tenant in ("alpha", "beta"):
+        ttfts = sorted(o["ttft"] for o in obs
+                       if o["tenant"] == tenant and o["ttft"] is not None)
+        done = sum(1 for o in obs if o["tenant"] == tenant
+                   and not o["aborted"])
+        print(f"  {tenant}: {done} completed, "
+              f"ttft p50 {ttfts[len(ttfts) // 2]:.3f}s "
+              f"(max {ttfts[-1]:.3f}s)")
+    aborted = [o for o in obs if o["aborted"]]
+    print(f"  aborted mid-flight: {len(aborted)} stream(s) — server "
+          f"cancellations: {stats['engine'].get('cancellations')}")
+    tenants = stats["engine"].get("tenants")
+    if tenants:
+        print("  server token shares: "
+              + ", ".join(f"{t} (w={v['weight']:.0f}): {v['tokens']}"
+                          for t, v in sorted(tenants.items())))
+    print(f"  engine pool: {stats['engine']['pool']}")
 
 
 def main(devices: int = 1, stream: bool = False, temperature: float = 0.0,
@@ -263,7 +337,14 @@ if __name__ == "__main__":
                     help="draft for --speculate: 'self:N' (first N "
                          "target layers, shared embeddings) or a "
                          "registry arch name")
+    ap.add_argument("--connect", default=None, metavar="HOST:PORT",
+                    help="run as a network client against a serving "
+                         "front (repro.launch.serve --port N) instead of "
+                         "building a local engine")
     args = ap.parse_args()
+    if args.connect:
+        demo_connect(args.connect, seed=args.seed)
+        raise SystemExit(0)
     if args.devices > 1:
         # host-platform shim: must land before jax initializes, which is
         # why main() defers its imports

@@ -4,7 +4,15 @@
         --reduced --requests 16 --max-new 24 [--layout paged|contiguous] \
         [--shards N] [--temperature T --top-k K --top-p P --sample-seed S] \
         [--kv-dtype int8] [--host-tier-pages N --high-watermark F] \
-        [--prefix-cache --shared-prefix 64] [--speculate 4 --draft self:1]
+        [--prefix-cache --shared-prefix 64] [--speculate 4 --draft self:1] \
+        [--port 8400 --host 0.0.0.0 --tenant-budget alpha:3,beta:1]
+
+`--port` switches the driver from the synthetic batch loop to the
+NETWORK FRONT (serve/frontend): the same engine serves HTTP + SSE
+clients until interrupted — submit with `examples/serve_lm.py
+--connect host:port` or any HTTP client speaking the wire schema
+(frontend/protocol.py).  `--tenant-budget name:weight,...` turns on
+per-tenant weighted max-min token-budget shares inside the tick.
 
 Sampling flags build per-request `SamplingParams` (serve/sampling.py)
 executed INSIDE the jitted step — each request gets its own seed
@@ -47,6 +55,24 @@ from repro.serve import ServingEngine, Request, SamplingParams
 from repro.utils.logging import get_logger
 
 log = get_logger("serve")
+
+
+def parse_tenant_budget(spec: str | None) -> dict[str, float] | None:
+    """'alpha:3,beta:1' -> {'alpha': 3.0, 'beta': 1.0}; '' / None -> None.
+    A bare name means weight 1.0."""
+    if not spec:
+        return None
+    out: dict[str, float] = {}
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        name, _, w = part.partition(":")
+        try:
+            out[name.strip()] = float(w) if w else 1.0
+        except ValueError:
+            raise SystemExit(f"--tenant-budget: bad weight in {part!r}")
+    return out
 
 
 def main(argv=None):
@@ -107,6 +133,15 @@ def main(argv=None):
                     help="draft model for --speculate: 'self:N' (first N "
                          "target layers, shared embeddings) or a registry "
                          "arch name, e.g. 'mamba2-130m'")
+    ap.add_argument("--port", type=int, default=None,
+                    help="serve the NETWORK FRONT on this port instead of "
+                         "the synthetic batch loop (0 = ephemeral; runs "
+                         "until interrupted)")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="bind address for --port")
+    ap.add_argument("--tenant-budget", default=None, metavar="T:W,...",
+                    help="per-tenant weighted max-min token-budget shares, "
+                         "e.g. 'alpha:3,beta:1' (unnamed tenants weigh 1)")
     args = ap.parse_args(argv)
 
     spec = get_arch(args.arch)
@@ -136,6 +171,37 @@ def main(argv=None):
                 f"--xla_force_host_platform_device_count={args.shards})")
         mesh = make_mem_mesh(args.shards)
     params = fam.init(jax.random.key(args.seed), cfg)
+
+    if args.port is not None:
+        # network-front mode: same engine, served over HTTP + SSE until
+        # interrupted (serve/frontend); clients connect with
+        # examples/serve_lm.py --connect host:port
+        import time
+
+        from repro.serve.frontend import FrontendServer
+        srv = FrontendServer(
+            cfg, params, host=args.host, port=args.port,
+            max_batch=args.max_batch, max_seq=args.max_seq,
+            page_size=args.page_size, layout=args.layout,
+            prefill_chunk=args.prefill_chunk, mesh=mesh,
+            high_watermark=args.high_watermark,
+            host_tier_pages=args.host_tier_pages,
+            prefix_cache=args.prefix_cache,
+            speculate_k=args.speculate,
+            draft=args.draft if args.speculate else None,
+            tenant_weights=parse_tenant_budget(args.tenant_budget))
+        srv.start()
+        log.info("serving %s over http://%s:%d (tenants: %s) — Ctrl-C "
+                 "to stop", args.arch, srv.host, srv.port,
+                 args.tenant_budget or "off")
+        try:
+            while True:
+                time.sleep(3600)
+        except KeyboardInterrupt:
+            log.info("stopping: %s", srv.llm.stats)
+            srv.stop()
+        return []
+
     engine = ServingEngine(cfg, params, max_batch=args.max_batch,
                            max_seq=args.max_seq, page_size=args.page_size,
                            layout=args.layout,

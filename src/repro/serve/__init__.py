@@ -24,7 +24,15 @@ Architecture (one pooled memory, the paper's form):
                              the TokenEvent/FinishEvent stream
     serve/api.py             public facade: LLMServer.generate ->
                              GenerationStream (+ fork under a new
-                             sampling regime over shared COW pages)
+                             sampling regime over shared COW pages,
+                             stream.cancel() mid-flight reclaim)
+    serve/frontend/          network front (DESIGN.md §10): stdlib
+                             HTTP + SSE streaming over the engine,
+                             per-tenant weighted max-min budget shares,
+                             client disconnect -> cancel -> page reclaim
+                             (import repro.serve.frontend explicitly;
+                             kept out of this namespace so batch users
+                             pay nothing for the socket layer)
 
 Every decode family except pure-SSM serves from the paged arena (KV
 bytes scale with tokens in flight): dense, moe (expert dispatch inside

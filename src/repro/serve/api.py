@@ -88,6 +88,21 @@ class GenerationStream:
                 "(engine max_steps exhausted?)")
         return self.result
 
+    def cancel(self) -> Result | None:
+        """Abort this generation mid-flight and reclaim everything it
+        holds — the slot, its pages, its prefix-store refs, any
+        host-tier parcel.  A caller that stops iterating (client abort)
+        MUST call this, or the slot keeps decoding to its token budget
+        on everyone else's time.  Consumes the stream's FinishEvent
+        (reason "cancelled") and returns its Result with the tokens
+        emitted so far; None if the stream had already finished."""
+        if self.finished:
+            return None
+        self._server.cancel(self.uid)
+        for ev in self:                     # drain buffered events + finish
+            pass
+        return self.result
+
     def fork(self, params: SamplingParams | None = None
              ) -> "GenerationStream":
         """Branch this in-flight generation under its own sampling
@@ -132,11 +147,13 @@ class LLMServer:
     # ------------------------------------------------------------ public
 
     def generate(self, prompt, params: SamplingParams | None = None, *,
-                 patch_embeds=None, uid: int | None = None
-                 ) -> GenerationStream:
+                 patch_embeds=None, uid: int | None = None,
+                 tenant: str = "default") -> GenerationStream:
         """Submit one prompt under its own `SamplingParams` (default:
         greedy) and return its token stream.  Nothing runs until a
-        stream is iterated (or `run()` is called)."""
+        stream is iterated (or `run()` is called).  `tenant` names the
+        budget-share bucket when the engine runs with `tenant_weights`
+        (inert otherwise)."""
         params = params or SamplingParams()
         uid = self._next_uid if uid is None else uid
         if uid in self._buffers:
@@ -146,8 +163,20 @@ class LLMServer:
         self._buffers[uid] = deque()
         self.engine.submit(Request(
             uid=uid, prompt=np.asarray(prompt, np.int32),
-            patch_embeds=patch_embeds, sampling=params))
+            patch_embeds=patch_embeds, sampling=params, tenant=tenant))
         return GenerationStream(self, uid, params)
+
+    def cancel(self, uid: int) -> bool:
+        """Cancel a stream by uid (see `GenerationStream.cancel`): the
+        engine retires the request, frees its pages and releases its
+        prefix-store refs; the stream's iterator then yields the
+        FinishEvent (reason "cancelled") and stops.  Returns False if
+        the uid is unknown or already finished."""
+        if not self.engine.cancel(uid):
+            return False
+        for ev in self.engine.events():      # route the FinishEvent (and
+            self._buffers.setdefault(ev.uid, deque()).append(ev)
+        return True                          # any bystanders' events)
 
     def run(self) -> list[Result]:
         """Drive every submitted request to completion (compat with the

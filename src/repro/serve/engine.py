@@ -126,6 +126,7 @@ class Request:
     prompt: np.ndarray                 # (prompt_len,) int32
     max_new_tokens: int = 32           # legacy mirror of sampling.max_new_tokens
     eos_token: int = -1                # -1 = never; folded into sampling.stop
+    tenant: str = "default"            # budget-share bucket (frontend/tenants)
     patch_embeds: np.ndarray | None = None   # vlm: (num_patches, frontend_dim)
     sampling: SamplingParams | None = None   # resolved by the engine at submit
     # tokens a preempted slot had already generated: on readmission the
@@ -166,7 +167,7 @@ class Result:
     prompt_len: int
     admitted_at: float = 0.0
     finished_at: float = 0.0
-    finish_reason: str = "length"      # "length" | "stop"
+    finish_reason: str = "length"      # "length" | "stop" | "cancelled"
 
     @property
     def latency_s(self) -> float:
@@ -188,7 +189,7 @@ class TokenEvent:
 class FinishEvent:
     """A request retired; carries the full `Result` and why it stopped."""
     uid: int
-    reason: str                        # "length" | "stop"
+    reason: str                        # "length" | "stop" | "cancelled"
     result: Result
 
 
@@ -246,7 +247,8 @@ class ServingEngine:
                  tick_token_budget: int | None = None,
                  host_tier_pages: int | None = None,
                  prefix_cache: bool = False,
-                 speculate_k: int = 0, draft: str | None = None):
+                 speculate_k: int = 0, draft: str | None = None,
+                 tenant_weights: dict[str, float] | None = None):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -267,6 +269,20 @@ class ServingEngine:
         # fraction of pool pages above which the engine proactively
         # preempts youngest slots (None = preempt only on hard OOM)
         self.high_watermark = high_watermark
+        # per-tenant weighted max-min budget shares (frontend/tenants.py):
+        # passing a tenant->weight dict (even {}; unnamed tenants weigh
+        # 1.0) turns the token-budget tick and watermark admission
+        # multi-tenant — prefill chunk caps, decode row caps and the
+        # admission order all follow the weighted shares, enforced
+        # INSIDE the existing tick.  Tenant scheduling needs a budget to
+        # divide, so it defaults the prefill/decode ratio on.
+        self.tenants = None
+        self.tenant_tokens: dict[str, int] = {}
+        if tenant_weights is not None:
+            from repro.serve.frontend.tenants import TenantScheduler
+            self.tenants = TenantScheduler(tenant_weights)
+            if prefill_decode_ratio is None:
+                prefill_decode_ratio = 0.5
         fam = registry.get_family(cfg)
         if fam.decode_step is None:
             raise ValueError(f"family {cfg.family!r} cannot serve (no decode)")
@@ -401,6 +417,8 @@ class ServingEngine:
         self.steps = 0
         self.tokens_out = 0
         self.prefill_tokens = 0          # prompt tokens actually computed
+        self.preemptions = 0             # slots kicked back to the queue
+        self.cancellations = 0           # requests cancelled mid-flight
         self._admitted = 0
         self._events: deque = deque()
         self._emitted: dict[int, int] = {}       # uid -> tokens published
@@ -458,6 +476,8 @@ class ServingEngine:
         s.generated.append(tok)
         s.last_token = tok
         self.tokens_out += 1
+        t = s.request.tenant
+        self.tenant_tokens[t] = self.tenant_tokens.get(t, 0) + 1
         idx = len(s.generated) - 1
         uid = s.request.uid
         if idx >= self._emitted.get(uid, 0):
@@ -701,6 +721,31 @@ class ServingEngine:
         else:
             self._admit_contiguous()
 
+    def _next_admission(self) -> int:
+        """Index into `pending` of the next admission candidate.  FIFO
+        without tenant scheduling; with it, the head request of the
+        tenant with the smallest weighted slot occupancy (max-min over
+        HELD slots — the admission-time analogue of the tick's budget
+        shares).  FIFO within a tenant, so a preempted request (queue
+        front) keeps its priority; FIFO across equal occupancies, so
+        single-tenant behavior is exactly the legacy order."""
+        if self.tenants is None or len(self.pending) <= 1:
+            return 0
+        held: dict[str, int] = {}
+        for s in self.slots.values():
+            t = s.request.tenant
+            held[t] = held.get(t, 0) + 1
+        best, best_key = 0, None
+        seen: set[str] = set()
+        for j, r in enumerate(self.pending):
+            if r.tenant in seen:
+                continue
+            seen.add(r.tenant)
+            key = held.get(r.tenant, 0) / self.tenants.weight_of(r.tenant)
+            if best_key is None or key < best_key:
+                best, best_key = j, key
+        return best
+
     def _admit_paged(self):
         """Watermark-based admission: a request enters as soon as the
         pool can hold its FIRST prefill chunk (the low-watermark
@@ -712,9 +757,10 @@ class ServingEngine:
         cost nothing extra."""
         free = self._free_slots()
         while free and self.pending:
-            req = self.pending[0]
+            pidx = self._next_admission()
+            req = self.pending[pidx]
             if self.host_tier is not None and req.uid in self.host_tier:
-                verdict = self._restore_from_tier(req, free)
+                verdict = self._restore_from_tier(req, free, pidx)
                 if verdict == "restored":
                     continue
                 if verdict == "wait":
@@ -742,7 +788,7 @@ class ServingEngine:
             if not self._fits_or_reclaim(rot + len(written) + len(adopted),
                                          need, protect=set(store_hashes)):
                 break                            # UniMem backpressure
-            self.pending.pop(0)
+            self.pending.pop(pidx)
             slot = free.pop(0)
             if written or adopted:
                 self.pool.share(written + adopted)
@@ -839,9 +885,25 @@ class ServingEngine:
                 for i, s in pre}
         budget = self._prefill_token_budget()
         if budget is not None:
+            caps = None
+            if self.tenants is not None:
+                # weighted max-min shares of the prefill budget over the
+                # tenants with prefilling slots; chunk lengths then cap
+                # oldest-first WITHIN each tenant's share
+                demands: dict[str, int] = {}
+                for i, s in pre:
+                    t = s.request.tenant
+                    demands[t] = demands.get(t, 0) + lens[i]
+                caps = self.tenants.allocate(budget, demands,
+                                             kind="prefill")
             for i, s in sorted(pre, key=lambda kv: kv[1].order):
-                lens[i] = min(lens[i], max(budget, 0))
-                budget -= lens[i]
+                if caps is None:
+                    lens[i] = min(lens[i], max(budget, 0))
+                    budget -= lens[i]
+                else:
+                    t = s.request.tenant
+                    lens[i] = min(lens[i], max(caps.get(t, 0), 0))
+                    caps[t] = caps.get(t, 0) - lens[i]
             pre = [(i, s) for i, s in pre if lens[i] > 0]
             if not pre:
                 return
@@ -941,6 +1003,7 @@ class ServingEngine:
         and reclaim its pages."""
         log.info("engine: preempting uid=%d (pool pressure)",
                  victim.request.uid)
+        self.preemptions += 1
         # pin what was already generated: readmission replays these as
         # forced context (never re-samples published history)
         if len(victim.generated) > len(victim.request.replay or ()):
@@ -996,7 +1059,8 @@ class ServingEngine:
         tier.put(HostParcel(uid=victim.request.uid, num_pages=npages,
                             data=data, meta=meta))
 
-    def _restore_from_tier(self, req, free: list[int]) -> str:
+    def _restore_from_tier(self, req, free: list[int],
+                           pidx: int = 0) -> str:
         """Readmission fast path: rebuild the slot from its spilled
         parcel — fresh pages on the SAME shard rotation, page contents
         written back (prefetched device copy when the async prefetch
@@ -1028,7 +1092,7 @@ class ServingEngine:
         pre = self._prefetched.pop(req.uid, None)
         payload = pre[1] if pre is not None and pre[0] is parcel \
             else parcel.data
-        self.pending.pop(0)
+        self.pending.pop(pidx)
         slot = free.pop(0)
         seq = SequencePageTable(self.pool, rotation=rot)
         seq.append_tokens(parcel.meta["tokens"])
@@ -1057,7 +1121,7 @@ class ServingEngine:
         tier = self.host_tier
         if tier is None or not self.pending:
             return
-        uid = self.pending[0].uid
+        uid = self.pending[self._next_admission()].uid
         if uid in self._prefetched:
             return
         parcel = tier.peek(uid)
@@ -1079,7 +1143,26 @@ class ServingEngine:
                   and s.generated}
         budget = (self._decode_slot_budget() if self.layout == "paged"
                   else None)
-        if budget is not None and len(active) > budget:
+        if budget is None:
+            return active
+        if self.tenants is not None:
+            # per-tenant row shares of the decode budget (max-min,
+            # weighted); rows keep oldest-first WITHIN their tenant.
+            # budget >= 1 guarantees some tenant holds a positive cap,
+            # so decode always progresses.
+            demands: dict[str, int] = {}
+            for s in active.values():
+                t = s.request.tenant
+                demands[t] = demands.get(t, 0) + 1
+            caps = self.tenants.allocate(budget, demands, kind="decode")
+            keep: dict[int, _Slot] = {}
+            for i, s in sorted(active.items(), key=lambda kv: kv[1].order):
+                t = s.request.tenant
+                if caps.get(t, 0) > 0:
+                    keep[i] = s
+                    caps[t] -= 1
+            return keep
+        if len(active) > budget:
             keep = sorted(active.items(), key=lambda kv: kv[1].order)[:budget]
             active = dict(keep)
         return active
@@ -1134,13 +1217,32 @@ class ServingEngine:
         active = {i: s for i, s in self.slots.items()
                   if not s.prefilling and s.generated}
         budget = self._decode_slot_budget()
+        rows = sorted(active.items(), key=lambda kv: kv[1].order)
+        wants_map = {i: (s.request.sampling.speculative
+                         and s.request.replay is None
+                         and s.pages.num_tokens + k + 1 <= self.max_seq)
+                     for i, s in rows}
+        caps = None
+        if budget is not None and self.tenants is not None:
+            # same per-tenant decode shares as the plain path, with a
+            # speculative row charging its whole k+1 window against its
+            # tenant (the verify writes k+1 positions)
+            demands: dict[str, int] = {}
+            for i, s in rows:
+                t = s.request.tenant
+                demands[t] = demands.get(t, 0) + ((k + 1) if wants_map[i]
+                                                  else 1)
+            caps = self.tenants.allocate(budget, demands, kind="decode")
         spec: dict[int, _Slot] = {}
         plain: dict[int, _Slot] = {}
-        for i, s in sorted(active.items(), key=lambda kv: kv[1].order):
-            wants = (s.request.sampling.speculative
-                     and s.request.replay is None
-                     and s.pages.num_tokens + k + 1 <= self.max_seq)
-            if budget is not None:
+        for i, s in rows:
+            wants = wants_map[i]
+            if caps is not None:
+                t = s.request.tenant
+                if caps.get(t, 0) <= 0:
+                    continue            # a granted tenant always exists
+                caps[t] -= (k + 1) if wants else 1
+            elif budget is not None:
                 if budget <= 0 and (spec or plain):
                     continue
                 budget -= (k + 1) if wants else 1
@@ -1293,6 +1395,29 @@ class ServingEngine:
             self._sampling_state(active))
         self._emit_decoded(active, nxt)
 
+    def _finish_slot(self, i: int, s: _Slot, reason: str) -> Result:
+        """THE single slot-retirement path — natural retires (`_retire`)
+        and mid-flight cancellation (`cancel`) both land here: emit the
+        FinishEvent, free the pages, release the prefix-store refs, and
+        clear the contiguous cache row (ssm fallback)."""
+        result = Result(
+            uid=s.request.uid, tokens=list(s.generated),
+            prompt_len=len(s.request.prompt),
+            admitted_at=s.admitted_at, finished_at=time.perf_counter(),
+            finish_reason=reason)
+        self.results.append(result)
+        self._events.append(FinishEvent(uid=s.request.uid, reason=reason,
+                                        result=result))
+        self._emitted.pop(s.request.uid, None)
+        if self.layout == "paged":
+            self._drop_store_refs(s)
+            self._release_pages(s.pages)
+        else:
+            s.pages.release()               # pages back to the one pool
+            self.cache = clear_slot(self.cache, i, self.cache_ax)
+        del self.slots[i]
+        return result
+
     def _retire(self):
         for i, s in list(self.slots.items()):
             if s.prefilling or not s.generated:
@@ -1301,23 +1426,57 @@ class ServingEngine:
             stopped = s.generated[-1] in sp.stop
             if not stopped and len(s.generated) < sp.max_new_tokens:
                 continue
-            reason = "stop" if stopped else "length"
+            self._finish_slot(i, s, "stop" if stopped else "length")
+
+    # ------------------------------------------------------------ cancel
+
+    def cancel(self, uid: int, reason: str = "cancelled") -> bool:
+        """Cancel a request mid-flight — the network front's client-
+        disconnect path, exposed to in-process callers too.  Whatever
+        state the request is in, every resource it holds comes back:
+
+          * queued (incl. preempted-back-to-queue): dequeued, its
+            host-tier parcel and prefetched device copy dropped;
+          * active slot (prefilling OR decoding): retired through the
+            SAME `_finish_slot` path as a natural finish — pages freed,
+            prefix-store refs released (persistent entries survive at
+            refcount 0 as designed), contiguous cache row cleared.
+
+        Publishes a FinishEvent with reason "cancelled" carrying the
+        tokens generated so far.  Returns False when the uid is unknown
+        or already finished (cancellation after finish is a no-op, not
+        an error — the disconnect race makes that ordinary)."""
+        for j, r in enumerate(self.pending):
+            if r.uid != uid:
+                continue
+            self.pending.pop(j)
+            if self.host_tier is not None:
+                self.host_tier.take(uid)         # drop the cold parcel
+            self._prefetched.pop(uid, None)
             result = Result(
-                uid=s.request.uid, tokens=list(s.generated),
-                prompt_len=len(s.request.prompt),
-                admitted_at=s.admitted_at, finished_at=time.perf_counter(),
-                finish_reason=reason)
+                uid=uid, tokens=list(r.replay or ()),
+                prompt_len=len(r.prompt),
+                admitted_at=time.perf_counter(),
+                finished_at=time.perf_counter(), finish_reason=reason)
             self.results.append(result)
-            self._events.append(FinishEvent(uid=s.request.uid, reason=reason,
+            self._events.append(FinishEvent(uid=uid, reason=reason,
                                             result=result))
-            self._emitted.pop(s.request.uid, None)
-            if self.layout == "paged":
-                self._drop_store_refs(s)
-                self._release_pages(s.pages)
-            else:
-                s.pages.release()               # pages back to the one pool
-                self.cache = clear_slot(self.cache, i, self.cache_ax)
-            del self.slots[i]
+            self._emitted.pop(uid, None)
+            self.cancellations += 1
+            log.info("engine: cancelled uid=%d (queued)", uid)
+            return True
+        for i, s in list(self.slots.items()):
+            if s.request.uid != uid:
+                continue
+            if self.host_tier is not None:
+                self.host_tier.take(uid)         # stale parcel, if any
+            self._prefetched.pop(uid, None)
+            self._finish_slot(i, s, reason)
+            self.cancellations += 1
+            log.info("engine: cancelled uid=%d (active, %d tokens in)",
+                     uid, len(s.generated))
+            return True
+        return False
 
     def _enforce_high_watermark(self):
         """Proactive backpressure: when allocation crosses the high
@@ -1450,12 +1609,21 @@ class ServingEngine:
             "prefill_tokens": self.prefill_tokens,
             "active_slots": len(self.slots),
             "pending": len(self.pending),
+            "admitted": self._admitted,
+            "preemptions": self.preemptions,
+            "cancellations": self.cancellations,
             "peak_kv_bytes": self.peak_kv_bytes(),
             "prefill_buckets": list(self.prefill_buckets),
             "prefill_shapes": sorted(self.prefill_shapes),
             "prefill_decode_ratio": self.prefill_decode_ratio,
             "pool": self.pool.stats().__dict__,
         }
+        if self.tenants is not None:            # per-tenant budget shares
+            out["tenants"] = {
+                t: {"weight": self.tenants.weight_of(t),
+                    "tokens": self.tenant_tokens.get(t, 0)}
+                for t in sorted(set(self.tenant_tokens)
+                                | set(self.tenants.weights))}
         if self.prefix_store is not None:       # prompt-page reuse traffic
             out["prefix_store"] = self.prefix_store.stats()
         if self.draft is not None:              # speculative decode traffic

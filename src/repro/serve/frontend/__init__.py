@@ -1,0 +1,29 @@
+"""Async network front over the serving engine (DESIGN.md §10).
+
+Lifts `LLMServer` onto TCP with stdlib asyncio only — hand-rolled
+HTTP/1.1 + server-sent events, no new dependencies:
+
+* `protocol` — the wire schema (submit body, SSE frames, HTTP framing).
+* `server`   — `FrontendServer`: engine tick loop on a dedicated
+  thread, per-connection streaming, disconnect -> mid-flight cancel
+  that frees pages and prefix refs, fanout forks over one socket.
+* `client`   — `ServeClient` (asyncio) and `collect()` (sync one-shot).
+* `tenants`  — `TenantScheduler`: weighted max-min token-budget shares,
+  enforced inside the engine tick (wired via
+  `ServingEngine(tenant_weights=...)`).
+
+Tokens over the wire are byte-identical to in-process serving: sampling
+is counter-derived (serve/sampling.py), so a (prompt, SamplingParams)
+pair replays the same stream regardless of transport.
+"""
+from repro.serve.frontend.client import RemoteStream, ServeClient, collect
+from repro.serve.frontend.protocol import (ProtocolError, SSEDecoder, Submit,
+                                           parse_submit, sse_encode)
+from repro.serve.frontend.server import FrontendServer
+from repro.serve.frontend.tenants import TenantScheduler
+
+__all__ = [
+    "FrontendServer", "ServeClient", "RemoteStream", "collect",
+    "TenantScheduler", "ProtocolError", "SSEDecoder", "Submit",
+    "parse_submit", "sse_encode",
+]

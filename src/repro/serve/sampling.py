@@ -85,6 +85,39 @@ class SamplingParams:
     def greedy(self) -> bool:
         return self.temperature == 0.0
 
+    # ------------------------------------------------------ wire codec
+    # (serve/frontend/protocol.py ships SamplingParams over the network;
+    # the codec lives here so the wire schema and the dataclass can
+    # never drift apart)
+
+    def to_wire(self) -> dict:
+        """JSON-safe dict with every field explicit — the network front
+        submits exactly what an in-process caller would construct, which
+        is what makes over-the-wire tokens byte-identical by the purity
+        contract (tokens are a function of (prompt, params))."""
+        return {"temperature": self.temperature, "top_k": self.top_k,
+                "top_p": self.top_p, "seed": self.seed,
+                "max_new_tokens": self.max_new_tokens,
+                "stop": list(self.stop), "speculative": self.speculative}
+
+    @classmethod
+    def from_wire(cls, d: dict) -> "SamplingParams":
+        """Strict inverse of `to_wire`: unknown keys are a protocol
+        error (a typo'd knob silently ignored would produce a DIFFERENT
+        stream than the client asked for), missing keys take the
+        dataclass defaults, and the result is validated."""
+        if not isinstance(d, dict):
+            raise ValueError(f"params must be an object, got {type(d).__name__}")
+        known = {"temperature", "top_k", "top_p", "seed",
+                 "max_new_tokens", "stop", "speculative"}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown sampling params: {sorted(unknown)}")
+        kw = dict(d)
+        if "stop" in kw:
+            kw["stop"] = tuple(int(t) for t in kw["stop"])
+        return cls(**kw).validate()
+
 
 class SamplingState(NamedTuple):
     """Per-slot struct-of-arrays lowering of `SamplingParams`, threaded

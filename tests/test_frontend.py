@@ -1,0 +1,310 @@
+"""Network serving front (serve/frontend): wire protocol round-trips,
+over-the-wire token identity, disconnect -> page reclaim, per-tenant
+weighted budget shares, and speculative + prefix-cache serving through
+the real socket path."""
+from __future__ import annotations
+
+import asyncio
+import time
+
+import numpy as np
+import pytest
+import jax
+
+from repro.models import registry
+from repro.serve import ServingEngine, Request
+from repro.serve.api import LLMServer
+from repro.serve.frontend import (FrontendServer, ProtocolError, SSEDecoder,
+                                  ServeClient, Submit, TenantScheduler,
+                                  collect, parse_submit, sse_encode)
+from repro.serve.sampling import SamplingParams
+
+from conftest import TINY
+
+CFG = TINY["dense"]
+
+
+@pytest.fixture(scope="module")
+def dense_params():
+    return registry.get_family(CFG).init(jax.random.key(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def front(dense_params):
+    srv = FrontendServer(CFG, dense_params, host="127.0.0.1", port=0,
+                         max_batch=4, max_seq=64, page_size=16,
+                         tenant_weights={"alpha": 3.0, "beta": 1.0})
+    srv.start()
+    yield srv
+    srv.stop()
+
+
+def _drain_quiet(srv, timeout=15.0):
+    """Wait until the engine is idle and every page is back (pinned
+    prefix pages excepted)."""
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        s = srv.llm.stats
+        pool = s.get("pool", {})
+        if (not srv.llm.engine.pending and not srv.llm.engine.slots
+                and pool.get("allocated_pages", -1)
+                == pool.get("pinned_pages", 0)):
+            return s
+        time.sleep(0.02)
+    raise AssertionError(f"engine never drained: {srv.llm.stats}")
+
+
+# ---------------------------------------------------------------- protocol
+
+def test_sampling_params_wire_roundtrip():
+    sp = SamplingParams(temperature=0.7, top_k=12, top_p=0.9, seed=42,
+                        max_new_tokens=9, stop=(7, 9), speculative=False)
+    assert SamplingParams.from_wire(sp.to_wire()) == sp
+    # defaults survive an empty dict
+    assert SamplingParams.from_wire({}) == SamplingParams()
+
+
+def test_sampling_params_wire_strict():
+    with pytest.raises(ValueError, match="unknown"):
+        SamplingParams.from_wire({"temprature": 0.7})      # typo'd knob
+    with pytest.raises(ValueError):
+        SamplingParams.from_wire({"top_p": 0.0})           # invalid value
+
+
+def test_submit_wire_roundtrip():
+    sub = Submit(prompt=np.arange(1, 9, dtype=np.int32), tenant="alpha",
+                 params=SamplingParams(seed=3, max_new_tokens=5),
+                 fanout=[SamplingParams(temperature=0.9, seed=4)])
+    back = parse_submit(sub.to_wire())
+    assert back.tenant == "alpha"
+    assert back.prompt.tolist() == sub.prompt.tolist()
+    assert back.params == sub.params
+    assert back.fanout == sub.fanout
+
+
+@pytest.mark.parametrize("body, code", [
+    ([1, 2], "bad_request"),                               # not an object
+    ({"prompt": []}, "bad_request"),                       # empty prompt
+    ({"prompt": [1, True]}, "bad_request"),                # bool is not a token
+    ({"prompt": [1], "nope": 1}, "bad_request"),           # unknown field
+    ({"prompt": [1], "params": {"frobnicate": 1}}, "bad_params"),
+    ({"prompt": [1], "fanout": [{}] * 9}, "bad_request"),  # fanout cap
+])
+def test_parse_submit_rejects(body, code):
+    with pytest.raises(ProtocolError) as ei:
+        parse_submit(body)
+    assert ei.value.code == code
+
+
+def test_sse_roundtrip_any_chunking():
+    frames = [("start", {"uid": 1, "sid": 0}),
+              ("token", {"sid": 0, "t": 17, "i": 0}),
+              ("finish", {"sid": 0, "reason": "length", "tokens": [17]})]
+    wire = b"".join(sse_encode(e, d) for e, d in frames)
+    for chunk in (1, 3, len(wire)):                        # byte-at-a-time too
+        dec = SSEDecoder()
+        got = []
+        for i in range(0, len(wire), chunk):
+            got.extend(dec.feed(wire[i:i + chunk]))
+        assert got == frames
+
+
+# ----------------------------------------------------------- tenant shares
+
+def test_tenant_allocate_weighted_maxmin():
+    ts = TenantScheduler({"a": 3.0, "b": 1.0})
+    # saturated: grants split 3:1
+    assert ts.allocate(16, {"a": 100, "b": 100}) == {"a": 12, "b": 4}
+    # max-min: a small demand is fully met, the surplus flows on
+    got = ts.allocate(16, {"a": 2, "b": 100})
+    assert got["a"] == 2 and got["b"] == 14
+    # unnamed tenants default to weight 1
+    got = ts.allocate(8, {"b": 100, "ghost": 100})
+    assert got["b"] + got["ghost"] == 8
+
+
+def test_tenant_allocate_starvation_free():
+    """Integer rounding must not starve a low-weight tenant: with credit
+    carry, weight 0.1 vs 10 still gets tokens over enough ticks."""
+    ts = TenantScheduler({"big": 10.0, "small": 0.1})
+    small_total = sum(ts.allocate(4, {"big": 100, "small": 100})["small"]
+                      for _ in range(200))
+    assert small_total > 0
+    # and the long-run split tracks the weights (0.1/10.1 of 800)
+    assert small_total == pytest.approx(800 * 0.1 / 10.1, rel=0.5)
+
+
+# ------------------------------------------------------------ over the wire
+
+def test_concurrent_clients_byte_identical(front, dense_params):
+    """N concurrent network clients, mixed greedy/sampled: every stream
+    must match an in-process LLMServer run with the same params."""
+    rng = np.random.default_rng(1)
+    jobs = []
+    for i in range(4):
+        prompt = rng.integers(1, CFG.vocab_size, 6 + 3 * i).tolist()
+        sp = SamplingParams(max_new_tokens=6 + i,
+                            temperature=0.0 if i % 2 == 0 else 0.8,
+                            top_k=16, seed=100 + i)
+        jobs.append((prompt, sp, "alpha" if i % 2 == 0 else "beta"))
+
+    async def go():
+        client = ServeClient("127.0.0.1", front.port)
+
+        async def one(prompt, sp, tenant):
+            stream = await client.submit(prompt, sp, tenant=tenant)
+            toks, reason = [], None
+            async for event, data in stream:
+                if event == "token":
+                    toks.append(data["t"])
+                elif event == "finish":
+                    reason = data["reason"]
+                    assert data["tokens"] == toks     # finish echoes stream
+            return toks, reason
+
+        return await asyncio.gather(*[one(*j) for j in jobs])
+
+    got = asyncio.run(go())
+    oracle = LLMServer(CFG, dense_params, max_batch=4, max_seq=64,
+                       page_size=16)
+    for (prompt, sp, _t), (toks, reason) in zip(jobs, got):
+        res = oracle.generate(prompt, sp).drain()
+        assert toks == list(res.tokens)
+        assert reason == res.finish_reason
+    _drain_quiet(front)
+
+
+def test_disconnect_frees_pages(front):
+    """Mid-stream socket drop (no cancel frame) must cancel the request
+    and hand every page back within the drain window."""
+    before = front.llm.stats.get("cancellations", 0)
+
+    async def go():
+        client = ServeClient("127.0.0.1", front.port)
+        stream = await client.submit(list(range(1, 9)),
+                                     SamplingParams(max_new_tokens=40),
+                                     tenant="beta")
+        n = 0
+        async for event, _data in stream:
+            if event == "token":
+                n += 1
+                if n >= 2:
+                    await stream.abort()
+                    break
+        return n
+
+    assert asyncio.run(go()) == 2
+    stats = _drain_quiet(front)
+    assert stats["cancellations"] == before + 1
+    assert stats["pool"]["allocated_pages"] == stats["pool"]["pinned_pages"]
+
+
+def test_explicit_cancel_endpoint(front):
+    async def go():
+        client = ServeClient("127.0.0.1", front.port)
+        stream = await client.submit(list(range(1, 7)),
+                                     SamplingParams(max_new_tokens=40))
+        uid, reason, asked = None, None, False
+        async for event, data in stream:
+            if event == "start":
+                uid = data["uid"]
+            elif event == "token" and data["i"] >= 1 and not asked:
+                asked = True
+                assert await client.cancel(uid)
+            elif event == "finish":
+                reason = data["reason"]
+        return uid, reason
+
+    uid, reason = asyncio.run(go())
+    assert uid is not None and reason == "cancelled"
+    assert asyncio.run(ServeClient("127.0.0.1", front.port).cancel(uid)) \
+        is False                                 # already finished
+    _drain_quiet(front)
+
+
+def test_rejected_submit_is_an_error_not_a_stream(front):
+    with pytest.raises(ProtocolError) as ei:
+        collect("127.0.0.1", front.port, [1, 2, 3],
+                SamplingParams(max_new_tokens=500))   # footprint > max_seq
+    assert ei.value.code == "rejected"
+
+
+def test_fanout_over_one_socket(front):
+    """fanout=[...] multiplexes parent (sid 0) + forked children over
+    one SSE connection; every sid finishes with its own token stream."""
+    out = collect("127.0.0.1", front.port, list(range(1, 9)),
+                  SamplingParams(max_new_tokens=5, seed=1),
+                  fanout=[SamplingParams(max_new_tokens=5, seed=2,
+                                         temperature=0.9),
+                          SamplingParams(max_new_tokens=5, seed=3,
+                                         temperature=0.9, top_p=0.8)])
+    assert set(out["streams"]) == {0, 1, 2}
+    for sid, st in out["streams"].items():
+        assert st["reason"] in ("length", "stop")
+        assert st["final_tokens"], f"sid {sid} emitted nothing"
+    _drain_quiet(front)
+
+
+# --------------------------------------------------- tenant budget, saturated
+
+def test_tenant_budget_shares_under_saturation(dense_params):
+    """Deterministic engine-level check of the wired scheduler: equal
+    demand from alpha (weight 3) and beta (weight 1) under a saturated
+    token budget — alpha's requests must retire in fewer engine steps
+    on average, and nobody starves."""
+    eng = ServingEngine(CFG, dense_params, max_batch=4, max_seq=64,
+                        page_size=16, tick_token_budget=16,
+                        tenant_weights={"alpha": 3.0, "beta": 1.0})
+    rng = np.random.default_rng(0)
+    for uid in range(8):
+        tenant = "alpha" if uid % 2 == 0 else "beta"
+        eng.submit(Request(
+            uid=uid, prompt=rng.integers(1, CFG.vocab_size, 16)
+            .astype(np.int32), tenant=tenant,
+            sampling=SamplingParams(max_new_tokens=12)))
+    finish_step: dict[int, int] = {}
+    while eng.pending or eng.slots:
+        eng.step()
+        for r in eng.results:
+            finish_step.setdefault(r.uid, eng.steps)
+    assert len(finish_step) == 8                 # starvation-free: all done
+    alpha = [finish_step[u] for u in range(8) if u % 2 == 0]
+    beta = [finish_step[u] for u in range(8) if u % 2 == 1]
+    assert np.mean(alpha) < np.mean(beta), (alpha, beta)
+    st = eng.stats()
+    assert st["tenants"]["alpha"]["tokens"] == st["tenants"]["beta"]["tokens"]
+
+
+# --------------------------------------- speculative + prefix over the wire
+
+def test_speculative_and_prefix_cache_over_wire(dense_params):
+    """The perf subsystems compose with the network front: a
+    speculative, prefix-cached server must stream byte-identical tokens
+    to a plain in-process engine, and the second identical prompt must
+    hit the prefix store."""
+    srv = FrontendServer(CFG, dense_params, host="127.0.0.1", port=0,
+                         max_batch=4, max_seq=64, page_size=16,
+                         speculate_k=2, prefix_cache=True)
+    srv.start()
+    try:
+        prompt = list(range(1, 20))
+        sp = SamplingParams(max_new_tokens=8, temperature=0.8, top_k=16,
+                            seed=5)
+        first = collect("127.0.0.1", srv.port, prompt, sp)
+        second = collect("127.0.0.1", srv.port, prompt, sp)
+        assert (first["streams"][0]["tokens"]
+                == second["streams"][0]["tokens"])
+        oracle = LLMServer(CFG, dense_params, max_batch=4, max_seq=64,
+                           page_size=16)         # no speculation, no cache
+        res = oracle.generate(prompt, sp).drain()
+        assert first["streams"][0]["tokens"] == list(res.tokens)
+        deadline = time.time() + 10
+        while time.time() < deadline:
+            st = srv.llm.stats
+            if st.get("prefix_store", {}).get("cross_request_hits", 0) > 0:
+                break
+            time.sleep(0.02)
+        assert st["prefix_store"]["cross_request_hits"] > 0
+        assert st["speculative"]["windows"] > 0
+    finally:
+        srv.stop()
